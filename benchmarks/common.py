@@ -1,0 +1,288 @@
+"""Shared benchmark harness.
+
+Uniform drivers over DHASH and the three baseline algorithms so every figure
+script measures identical workloads: batched op mixes ("worker threads" of
+the paper = SPMD batch width), with a continuous rebuild/resize running —
+the paper's §6.2 setup.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines as bl
+from repro.core import buckets, dhash
+
+I32 = jnp.int32
+UNIVERSE = 10_000_000          # key range U, paper §6.1
+
+
+def timeit(fn, *args, warmup=3, iters=10):
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+class Driver:
+    """Uniform step API: one batched (lookup, insert, delete) round + one
+    rebuild transition; host-side epoch management."""
+
+    name: str
+
+    def step(self, lk, ik, dk):
+        raise NotImplementedError
+
+    def drive_rebuild(self):
+        """Advance the continuous rebuild/resize at the host level."""
+
+    def full_rebuild(self) -> float:
+        """Time one complete rebuild, returns seconds."""
+        raise NotImplementedError
+
+
+class DHashDriver(Driver):
+    def __init__(self, nbuckets, n_items, *, backend="chain", seed=0,
+                 max_chain=None, chunk=1024):
+        self.backend = backend
+        self.name = f"DHash-{backend}"
+        alpha = n_items / nbuckets
+        mc = max_chain or int(alpha * 2 + 32)
+        if backend == "chain":
+            self.d = dhash.make("chain", capacity=int(n_items * 1.3),
+                                nbuckets=nbuckets, chunk=chunk, seed=seed,
+                                max_chain=mc)
+        else:
+            self.d = dhash.make(backend, capacity=int(n_items * 1.3),
+                                chunk=chunk, seed=seed)
+        self._seed = seed
+
+        def fused(d, lk, ik, dk):
+            found, _ = dhash.lookup(d, lk)
+            d, ok_i = dhash.insert(d, ik, ik)
+            d, ok_d = dhash.delete(d, dk)
+            d = dhash.rebuild_step(d)
+            return d, (found.sum(), ok_i.sum(), ok_d.sum())
+
+        self._step = jax.jit(fused)
+        self._done = jax.jit(dhash.rebuild_done)
+        self._chunk = jax.jit(dhash.rebuild_chunk)
+
+    def populate(self, keys):
+        ins = jax.jit(dhash.insert)
+        for i in range(0, len(keys), 4096):
+            self.d, _ = ins(self.d, jnp.asarray(keys[i:i + 4096], I32),
+                            jnp.asarray(keys[i:i + 4096], I32))
+
+    def step(self, lk, ik, dk):
+        self.d, out = self._step(self.d, lk, ik, dk)
+        return out
+
+    def drive_rebuild(self):
+        if bool(jax.device_get(self._done(self.d))):
+            self.d = dhash.rebuild_finish(self.d)
+            self._seed += 1
+            self.d = dhash.rebuild_start(self.d, seed=self._seed)
+        elif not bool(jax.device_get(self.d.rebuilding)):
+            self.d = dhash.rebuild_start(self.d, seed=self._seed)
+
+    def full_rebuild(self) -> float:
+        self.d = dhash.rebuild_start(self.d, seed=self._seed + 99)
+        t0 = time.perf_counter()
+        while not bool(jax.device_get(self._done(self.d))):
+            self.d = self._chunk(self.d)
+        jax.block_until_ready(jax.tree_util.tree_leaves(self.d.new)[0])
+        dt = time.perf_counter() - t0
+        self.d = dhash.rebuild_finish(self.d)
+        return dt
+
+
+class XuDriver(Driver):
+    name = "HT-Xu"
+
+    def __init__(self, nbuckets, n_items, *, seed=0, max_chain=None, chunk=1024):
+        mc = max_chain or int(n_items / nbuckets * 2 + 32)
+        self.x = bl.xu_make(nbuckets, int(n_items * 1.3), seed=seed,
+                            max_chain=mc, chunk=chunk)
+        self._seed = seed
+
+        def fused(x, lk, ik, dk):
+            found, _ = bl.xu_lookup(x, lk)
+            x, ok_i = bl.xu_insert(x, ik, ik)
+            x, ok_d = bl.xu_delete(x, dk)
+            x = jax.lax.cond(x.rebuilding, bl.xu_rebuild_chunk, lambda x: x, x)
+            return x, (found.sum(), ok_i.sum(), ok_d.sum())
+
+        self._step = jax.jit(fused)
+        self._done = jax.jit(bl.xu_rebuild_done)
+        self._chunk = jax.jit(bl.xu_rebuild_chunk)
+
+    def populate(self, keys):
+        ins = jax.jit(bl.xu_insert)
+        for i in range(0, len(keys), 4096):
+            self.x, _ = ins(self.x, jnp.asarray(keys[i:i + 4096], I32),
+                            jnp.asarray(keys[i:i + 4096], I32))
+
+    def step(self, lk, ik, dk):
+        self.x, out = self._step(self.x, lk, ik, dk)
+        return out
+
+    def drive_rebuild(self):
+        if bool(jax.device_get(bl.xu_rebuild_done(self.x))):
+            self.x = bl.xu_rebuild_finish(self.x)
+            self._seed += 1
+            self.x = bl.xu_rebuild_start(self.x, seed=self._seed)
+        elif not bool(jax.device_get(self.x.rebuilding)):
+            self.x = bl.xu_rebuild_start(self.x, seed=self._seed)
+
+    def full_rebuild(self) -> float:
+        self.x = bl.xu_rebuild_start(self.x, seed=self._seed + 99)
+        t0 = time.perf_counter()
+        while not bool(jax.device_get(self._done(self.x))):
+            self.x = self._chunk(self.x)
+        jax.block_until_ready(self.x.t0.akey)
+        dt = time.perf_counter() - t0
+        self.x = bl.xu_rebuild_finish(self.x)
+        return dt
+
+
+class RHTDriver(Driver):
+    name = "HT-RHT"
+
+    def __init__(self, nbuckets, n_items, *, seed=0, max_chain=None, bchunk=256):
+        mc = max_chain or int(n_items / nbuckets * 2 + 32)
+        self.r = bl.rht_make(nbuckets, int(n_items * 1.3), seed=seed,
+                             max_chain=mc, bchunk=bchunk)
+        self._seed = seed
+
+        def fused(r, lk, ik, dk):
+            found, _ = bl.rht_lookup(r, lk)
+            r, ok_i = bl.rht_insert(r, ik, ik)
+            r, ok_d = bl.rht_delete(r, dk)
+            r = jax.lax.cond(r.rebuilding, bl.rht_rebuild_chunk, lambda r: r, r)
+            return r, (found.sum(), ok_i.sum(), ok_d.sum())
+
+        self._step = jax.jit(fused)
+        self._done = jax.jit(bl.rht_rebuild_done)
+        self._chunk = jax.jit(bl.rht_rebuild_chunk)
+
+    def populate(self, keys):
+        ins = jax.jit(bl.rht_insert)
+        for i in range(0, len(keys), 4096):
+            self.r, _ = ins(self.r, jnp.asarray(keys[i:i + 4096], I32),
+                            jnp.asarray(keys[i:i + 4096], I32))
+
+    def step(self, lk, ik, dk):
+        self.r, out = self._step(self.r, lk, ik, dk)
+        return out
+
+    def drive_rebuild(self):
+        if bool(jax.device_get(bl.rht_rebuild_done(self.r))):
+            self.r = bl.rht_rebuild_finish(self.r)
+            self._seed += 1
+            self.r = bl.rht_rebuild_start(self.r, seed=self._seed)
+        elif not bool(jax.device_get(self.r.rebuilding)):
+            self.r = bl.rht_rebuild_start(self.r, seed=self._seed)
+
+    def full_rebuild(self) -> float:
+        self.r = bl.rht_rebuild_start(self.r, seed=self._seed + 99)
+        t0 = time.perf_counter()
+        n = 0
+        while not bool(jax.device_get(self._done(self.r))) and n < 100_000:
+            self.r = self._chunk(self.r)
+            n += 1
+        jax.block_until_ready(self.r.old.akey)
+        dt = time.perf_counter() - t0
+        self.r = bl.rht_rebuild_finish(self.r)
+        return dt
+
+
+class SplitDriver(Driver):
+    name = "HT-Split"
+
+    def __init__(self, nbuckets, n_items, *, seed=0, max_chain=None, **_):
+        mc = max_chain or int(n_items / nbuckets * 2 + 32)
+        self.s = bl.split_make(max(nbuckets * 4, 64), int(n_items * 1.3),
+                               init_buckets=nbuckets, seed=seed, max_chain=mc)
+        self._grow = True
+
+        def fused(s, lk, ik, dk):
+            found, _ = bl.split_lookup(s, lk)
+            s, ok_i = bl.split_insert(s, ik, ik)
+            s, ok_d = bl.split_delete(s, dk)
+            return s, (found.sum(), ok_i.sum(), ok_d.sum())
+
+        self._step = jax.jit(fused)
+        self._resize = jax.jit(bl.split_resize, static_argnums=1)
+
+    def populate(self, keys):
+        ins = jax.jit(bl.split_insert)
+        for i in range(0, len(keys), 4096):
+            self.s, _ = ins(self.s, jnp.asarray(keys[i:i + 4096], I32),
+                            jnp.asarray(keys[i:i + 4096], I32))
+
+    def step(self, lk, ik, dk):
+        self.s, out = self._step(self.s, lk, ik, dk)
+        return out
+
+    def drive_rebuild(self):
+        # continuous resize: grow to the alternative size and back (§6.2)
+        self.s = self._resize(self.s, self._grow)
+        self._grow = not self._grow
+
+    def full_rebuild(self) -> float:
+        t0 = time.perf_counter()
+        self.s = self._resize(self.s, self._grow)
+        jax.block_until_ready(self.s.t.akey)
+        self._grow = not self._grow
+        return time.perf_counter() - t0
+
+
+ALGOS = {"DHash": DHashDriver, "HT-Xu": XuDriver, "HT-RHT": RHTDriver,
+         "HT-Split": SplitDriver}
+
+
+@dataclass
+class Workload:
+    q: int                 # batch width ("worker threads")
+    mix: tuple[int, int, int]   # percent lookup/insert/delete
+
+    def batches(self, rng, present: np.ndarray):
+        nl = self.q * self.mix[0] // 100
+        ni = self.q * self.mix[1] // 100
+        nd = self.q * self.mix[2] // 100
+        lk = rng.choice(present, max(nl, 1))
+        ik = rng.integers(1, UNIVERSE, max(ni, 1)).astype(np.int32)
+        dk = rng.choice(present, max(nd, 1))
+        return (jnp.asarray(lk, I32), jnp.asarray(ik, I32), jnp.asarray(dk, I32))
+
+
+def run_throughput(driver: Driver, wl: Workload, present: np.ndarray,
+                   *, steps=8, warmup=3, rng=None, continuous_rebuild=True):
+    """ops/sec over `steps` measured steps."""
+    rng = rng or np.random.default_rng(0)
+    batches = [wl.batches(rng, present) for _ in range(steps + warmup)]
+    if continuous_rebuild:
+        driver.drive_rebuild()
+    for b in batches[:warmup]:
+        out = driver.step(*b)
+        if continuous_rebuild:
+            driver.drive_rebuild()
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for b in batches[warmup:]:
+        out = driver.step(*b)
+        if continuous_rebuild:
+            driver.drive_rebuild()
+    jax.block_until_ready(out)
+    dt = time.perf_counter() - t0
+    total_ops = sum(sum(x.size for x in b) for b in batches[warmup:])
+    return total_ops / dt

@@ -1,0 +1,92 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSONs.
+
+    PYTHONPATH=src:. python -m benchmarks.report > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RES = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k", "service"]
+ARCH_ORDER = ["zamba2-1.2b", "gemma3-27b", "deepseek-67b", "qwen3-8b",
+              "gemma2-2b", "qwen2-vl-2b", "rwkv6-3b", "arctic-480b",
+              "llama4-scout-17b-a16e", "hubert-xlarge", "dhash-paper"]
+
+
+def load(mesh):
+    out = {}
+    for f in glob.glob(os.path.join(RES, f"{mesh}_*.json")):
+        r = json.load(open(f))
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def fmt_bytes(b):
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if b < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def dryrun_table():
+    single, multi = load("single"), load("multi")
+    print("| arch | shape | 16x16 | 2x16x16 | per-chip bytes (args+temp) | "
+          "collectives/step (per chip) |")
+    print("|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = single.get((a, s))
+            m = multi.get((a, s))
+            if r is None:
+                continue
+            if r["status"] == "skip":
+                print(f"| {a} | {s} | skip | skip | — | {r['reason']} |")
+                continue
+            mem = r.get("memory", {})
+            per_chip = (mem.get("argument_size_in_bytes", 0)
+                        + mem.get("temp_size_in_bytes", 0)) / 256
+            cc = r["cost"]["coll_counts"]
+            cstr = ", ".join(f"{k}:{int(v)}" for k, v in cc.items() if v)
+            ok_m = "ok" if (m and m["status"] == "ok") else (m or {}).get("status", "?")
+            print(f"| {a} | {s} | ok ({r['compile_s']:.0f}s) | {ok_m} "
+                  f"({(m or {}).get('compile_s', 0):.0f}s) | "
+                  f"{fmt_bytes(per_chip)} | {cstr or '—'} |")
+
+
+def roofline_table():
+    single = load("single")
+    print("| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) "
+          "| bottleneck | MODEL_FLOPS | useful (6ND/HLO) | MFU@roofline | "
+          "what moves the dominant term |")
+    print("|---|---|---|---|---|---|---|---|---|---|" .replace("|---|---|---|---|---|---|---|---|---|---|", "|---|---|---|---|---|---|---|---|---|"))
+    notes = {
+        ("rwkv6-3b", "train_4k"): "chunk the wkv recurrence (stash S/chunk states) — §Perf cell 1",
+        ("gemma3-27b", "train_4k"): "fuse qkv + gate/up projections (fewer bwd dx ARs) — §Perf cell 2",
+        ("dhash-paper", "service"): "cap routing buffers at c*Q/S — §Perf cell 3",
+        ("arctic-480b", "train_4k"): "score-buffer traffic: flash-fused attention kernel on TPU",
+        ("deepseek-67b", "train_4k"): "same qkv/gate-up fusions as gemma3 apply",
+    }
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = single.get((a, s))
+            if r is None:
+                continue
+            if r["status"] == "skip":
+                print(f"| {a} | {s} | — | — | — | skip | — | — | — | {r['reason']} |")
+                continue
+            rl = r["roofline"]
+            note = notes.get((a, s), "reduce materialized activation buffers (fusion)")
+            mf = rl["model_flops"]
+            print(f"| {a} | {s} | {rl['t_compute']:.3f} | {rl['t_memory']:.3f} | "
+                  f"{rl['t_collective']:.3f} | {rl['bottleneck']} | "
+                  f"{mf:.2e} | {rl['useful_flop_frac']:.3f} | {rl['mfu']:.4f} | {note} |")
+
+
+if __name__ == "__main__":
+    print("### §Dry-run (compile proof, both meshes)\n")
+    dryrun_table()
+    print("\n### §Roofline (single-pod 16x16, per step)\n")
+    roofline_table()

@@ -1,0 +1,91 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark aggregator: one entry per paper artifact + framework benches.
+
+  fig2_throughput     paper Fig 2  (throughput vs batch width x load factor)
+  fig3_rebuild        paper Fig 3  (rebuild time vs N)
+  fig4_portability    paper Fig 4  (implementation-variant axis, see module)
+  s62_oversubscribe   paper §6.2   (scaling past saturation)
+  s1_attack           paper §1     (collision attack + live rebuild recovery)
+  moe_router          framework    (DHash hash-router rebalancing)
+  kvcache_rehash      framework    (decode latency through live rehash)
+
+CSV contract: name,us_per_call,derived
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _row(name: str, us: float, derived: str):
+    print(f"{name},{us:.2f},{derived}")
+    sys.stdout.flush()
+
+
+def fig2_throughput():
+    from benchmarks.bench_throughput import run
+    for alpha in (20, 200):
+        for mix in ((90, 5, 5), (80, 10, 10)):
+            rows = run(alpha, mix, qs=(1024, 4096), steps=5, quiet=True)
+            for name, a, m0, q, mops in rows:
+                _row(f"fig2/{name}/a{a}/m{m0}/q{q}", 1.0 / mops,
+                     f"{mops:.3f}Mops_s")
+
+
+def fig3_rebuild():
+    from benchmarks.bench_rebuild import run
+    for name, n, dt in run(ns=(2_000, 8_000, 32_000), quiet=True):
+        _row(f"fig3/{name}/n{n}", dt * 1e6, f"{dt*1e3:.1f}ms_full_rebuild")
+
+
+def fig4_portability():
+    from benchmarks.bench_portability import run
+    for name, q, mops in run(alpha=20, qs=(1024, 4096), quiet=True):
+        _row(f"fig4/{name}/q{q}", 1.0 / mops if mops else 0.0,
+             f"{mops:.3f}Mops_s")
+
+
+def s62_oversubscribe():
+    from benchmarks.bench_oversubscribe import run
+    for name, q, mops in run(qs=(512, 4096, 16384), quiet=True):
+        _row(f"s62/{name}/q{q}", 1.0 / mops, f"{mops:.3f}Mops_s")
+
+
+def s1_attack():
+    from benchmarks.bench_attack import run
+    r = run(quiet=True)
+    for k, v in r.items():
+        _row(f"attack/{k}", 1.0 / max(v, 1e-9), f"{v:.3f}Mlookups_s")
+
+
+def moe_router():
+    from benchmarks.bench_moe_router import run
+    r = run(quiet=True)
+    _row("moe_router/plain", r["t_plain"] * 1e6,
+         f"imbalance{r['imb_before']:.2f}")
+    _row("moe_router/dhash_overrides", r["t_table"] * 1e6,
+         f"imbalance{r['imb_after']:.2f}")
+
+
+def kvcache_rehash():
+    from benchmarks.bench_kvcache import run
+    r = run(quiet=True)
+    _row("kvcache/decode_baseline", r["baseline_p50"] * 1e3, "p50")
+    _row("kvcache/decode_during_rehash", r["during_p50"] * 1e3,
+         f"p50_over_{r['rehash_steps']}steps")
+
+
+TABLES = [fig2_throughput, fig3_rebuild, fig4_portability, s62_oversubscribe,
+          s1_attack, moe_router, kvcache_rehash]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for fn in TABLES:
+        t0 = time.time()
+        fn()
+        print(f"# {fn.__name__} done in {time.time()-t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""The paper's headline scenario as a narrative demo: a hash-collision
+attack on a serving-critical table, detected and defused by a live rebuild.
+
+    PYTHONPATH=src python examples/attack_defense.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dhash, hashing
+from repro.core.engine import DHashEngine
+
+
+def tput(eng, keys, iters=5):
+    f, _ = eng.lookup(keys)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        f, _ = eng.lookup(keys)
+    jax.block_until_ready(f)
+    return keys.size * iters / (time.perf_counter() - t0) / 1e6
+
+
+def main():
+    rng = np.random.default_rng(0)
+    eng = DHashEngine(dhash.make("chain", capacity=16384, nbuckets=256,
+                                 chunk=1024, seed=1, max_chain=4096))
+    normal = np.unique(rng.integers(1, 10_000_000, 6000).astype(np.int32))
+    for i in range(0, len(normal), 1024):
+        ks = normal[i:i + 1024]
+        eng.step(ks[:16], ks, ks * 2, np.zeros(1, np.int32),
+                 del_mask=np.zeros(1, bool))
+    q = jnp.asarray(rng.choice(normal, 4096), jnp.int32)
+    print(f"[healthy ] {tput(eng, q):8.2f} Mlookups/s "
+          f"({eng.count()} items over 256 buckets)")
+
+    # the adversary knows the seed: craft keys for bucket 0
+    cand = jnp.asarray(np.unique(rng.integers(10_000_000, 2**31 - 1, 1 << 18)
+                                 .astype(np.int32)))
+    b = np.asarray(hashing.bucket_of(eng.state.old.hfn, cand, 256))
+    atk = np.asarray(cand)[b == 0][:3000]
+    for i in range(0, len(atk), 1024):
+        ks = atk[i:i + 1024]
+        eng.step(ks[:16], ks, ks, np.zeros(1, np.int32),
+                 del_mask=np.zeros(1, bool))
+    qm = jnp.asarray(np.concatenate([rng.choice(normal, 2048),
+                                     rng.choice(atk, 2048)]), jnp.int32)
+    print(f"[attacked] {tput(eng, qm):8.2f} Mlookups/s "
+          f"({len(atk)} adversarial keys in one bucket)")
+
+    # defense: live rebuild with a fresh secret seed
+    eng.request_rebuild(seed=int(time.time()) | 1)
+    n = 0
+    while bool(jax.device_get(eng.state.rebuilding)):
+        eng.step(qm[:64], np.zeros(1, np.int32), np.zeros(1, np.int32),
+                 np.zeros(1, np.int32), ins_mask=np.zeros(1, bool),
+                 del_mask=np.zeros(1, bool))
+        n += 1
+        if bool(jax.device_get(dhash.rebuild_done(eng.state))):
+            eng.state = dhash.rebuild_finish(eng.state)
+            break
+    print(f"[rebuild ] completed across {n} serving steps — no step blocked")
+    print(f"[defended] {tput(eng, qm):8.2f} Mlookups/s (epoch {int(eng.state.epoch)})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Serving scenario: batched requests over the DHash-paged KV cache with
+prefix-cache admission and a live page-table rehash mid-serving.
+
+    PYTHONPATH=src python examples/serve_prefix_cache.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import dhash
+from repro.models import transformer
+from repro.serving import prefix_cache
+from repro.serving.engine import ServeConfig, ServingEngine
+
+
+def main():
+    cfg = ArchConfig("serve-demo", "dense", n_layers=4, d_model=256,
+                     n_heads=8, n_kv_heads=4, d_ff=512, vocab_size=8192,
+                     dtype="float32", attn_chunk=64, loss_chunk=64)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(params, cfg, ServeConfig(
+        max_seqs=8, page_size=16, n_pages=512, max_blocks=16,
+        max_new_tokens=12, rehash_load_factor=0.08))
+
+    rng = np.random.default_rng(0)
+    shared_prefix = list(rng.integers(1, 8000, size=24))     # common system prompt
+    t0 = time.time()
+    for i in range(12):
+        eng.submit(shared_prefix + list(rng.integers(1, 8000,
+                                                     size=rng.integers(2, 8))))
+    steps = eng.run()
+    dt = time.time() - t0
+    toks = sum(len(v) for v in eng.finished.values())
+    print(f"served {len(eng.finished)} requests / {toks} tokens in {dt:.1f}s "
+          f"({steps} steps), page-table rehashes: {eng.rehashes}")
+
+    # prefix fingerprints: the shared prompt yields identical block chains
+    toks2 = jnp.asarray(np.stack([shared_prefix + [1] * 8,
+                                  shared_prefix + [2] * 8]), jnp.int32)
+    fps = prefix_cache.prefix_fingerprints(toks2, page_size=16)
+    same = int((fps[0] == fps[1]).sum())
+    print(f"prefix cache: {same}/{fps.shape[1]} shared-block fingerprints "
+          f"match across requests (block-granular reuse)")
+
+    # show the table state
+    t = eng.kv.table
+    print(f"page-table epoch {int(t.epoch)}, live entries "
+          f"{int(jax.device_get(dhash.count_items(t)))}, "
+          f"free pages {int(eng.kv.free_top)}/{eng.kv.n_pages}")
+
+
+if __name__ == "__main__":
+    main()

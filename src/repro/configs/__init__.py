@@ -1,0 +1,35 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+import importlib
+
+_MODULES = {
+    "zamba2-1.2b": "zamba2_1p2b",
+    "gemma3-27b": "gemma3_27b",
+    "deepseek-67b": "deepseek_67b",
+    "qwen3-8b": "qwen3_8b",
+    "gemma2-2b": "gemma2_2b",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "rwkv6-3b": "rwkv6_3b",
+    "arctic-480b": "arctic_480b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b",
+    "hubert-xlarge": "hubert_xlarge",
+    "dhash-paper": "dhash_paper",
+}
+
+ARCH_IDS = tuple(k for k in _MODULES if k != "dhash-paper")
+ALL_IDS = tuple(_MODULES)
+
+
+def _mod(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; choose from {ALL_IDS}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+
+
+def get_config(arch_id: str):
+    return _mod(arch_id).CONFIG
+
+
+def get_smoke(arch_id: str):
+    return _mod(arch_id).smoke()

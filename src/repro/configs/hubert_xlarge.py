@@ -1,0 +1,18 @@
+"""hubert-xlarge [audio]: encoder-only, bidirectional, masked-prediction to
+a 504-unit codebook; CNN frame frontend STUBBED to precomputed frame
+embeddings per spec [arXiv:2106.07447; unverified].
+decode_32k/long_500k SKIPPED (encoder-only: no decode step)."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="hubert-xlarge", family="audio",
+    n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16, head_dim=80,
+    d_ff=5120, vocab_size=504,
+    causal=False, encoder_only=True, frontend="stub_embed",
+    tie_embeddings=False,
+)
+
+def smoke() -> ArchConfig:
+    return CONFIG.scaled(n_layers=4, d_model=64, n_heads=4, n_kv_heads=4,
+                         head_dim=16, d_ff=128, vocab_size=64,
+                         dtype="float32", attn_chunk=32, loss_chunk=32)

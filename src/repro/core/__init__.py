@@ -1,0 +1,7 @@
+"""DHash core: dynamic hash tables with live hash-function rebuild (the
+paper's contribution), modular bucket backends, baselines, and the
+shard_map-distributed table."""
+
+from repro.core import baselines, buckets, dhash, distributed, engine, hashing
+
+__all__ = ["baselines", "buckets", "dhash", "distributed", "engine", "hashing"]

@@ -1,0 +1,343 @@
+"""Functional analogues of the paper's comparison systems (§2, §6.1).
+
+The paper benchmarks DHash against three practical hash tables.  Each is
+reproduced here with its *cost structure* mapped faithfully into the SPMD
+model (a batch of Q ops = Q concurrent threads):
+
+* ``HTXu``   — Herbert Xu's dynamic table (Linux IGMP, 2010).  Two pointer
+  sets per node -> modelled as two chain structures; while a rebuild is in
+  progress every update maintains BOTH structures, and updates take
+  per-bucket locks.  Lock serialization is modelled exactly: each "round"
+  grants at most one pending op per bucket (cross-bucket ops proceed in
+  parallel, same-bucket ops serialize), so wall-time grows with the max
+  per-bucket collision count — precisely how lock contention behaves.
+  Rebuild itself is cheap (single traversal relinking the passive set);
+  memory footprint is 2x (the drawback the paper notes).
+
+* ``HTRHT``  — Linux rhashtable (Graf, 2014).  Single pointer set; rebuild
+  must walk to the TAIL of a bucket chain to distribute one node (O(len)
+  walk per node -> O(len^2) per bucket), per-bucket locks for updates,
+  lookups during rebuild probe old then new.
+
+* ``HTSplit`` — split-ordered lists (Shalev & Shavit, 2006).  Lock-free but
+  only *resizable*: bucket index is ``key & (2^i - 1)`` — the hash function
+  can never change, so adversarial key sets cannot be rebuilt away (the
+  paper's motivating weakness).  Resize republishes bucket pointers without
+  moving nodes (cheap, modelled as one vectorized rechain pass).
+
+All three share the arena/chain machinery from ``buckets.py`` so that the
+per-hop traversal cost is identical across contenders; only the algorithmic
+structure differs — which is what the paper measures.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import buckets, hashing
+from repro.core.struct_utils import pytree_dataclass, replace
+
+I32 = jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# lock serialization model (shared by HT-Xu and HT-RHT)
+# ---------------------------------------------------------------------------
+
+def lock_serialized(op: Callable, t, keys, vals, mask, nbuckets: int,
+                    bucket_fn: Callable):
+    """Apply a batched update under per-bucket mutexes.
+
+    Each while-loop round grants the lock of every contended bucket to the
+    lowest-index pending op and applies all granted ops in parallel; the rest
+    retry next round.  Rounds executed == max ops targeting one bucket, which
+    is the exact serialization a per-bucket mutex imposes.
+    """
+    q = keys.shape[0]
+    idx = jnp.arange(q, dtype=I32)
+
+    def cond(carry):
+        _, pending, _, _ = carry
+        return pending.any()
+
+    def body(carry):
+        t, pending, ok, rounds = carry
+        b = bucket_fn(t, keys)
+        claim = jnp.full((nbuckets,), q, I32).at[jnp.where(pending, b, nbuckets)].min(idx, mode="drop")
+        grant = pending & (claim[b] == idx)
+        t, got = op(t, keys, vals, grant)
+        return t, pending & ~grant, ok | got, rounds + 1
+
+    t, _, ok, rounds = jax.lax.while_loop(
+        cond, body, (t, mask, jnp.zeros((q,), bool), jnp.asarray(0, I32)))
+    return t, ok, rounds
+
+
+# ---------------------------------------------------------------------------
+# HT-Xu: two pointer sets per node
+# ---------------------------------------------------------------------------
+
+@pytree_dataclass(meta_fields=("chunk",))
+class HTXu:
+    chunk: int
+    t0: buckets.ChainTable
+    t1: buckets.ChainTable
+    active: jax.Array       # scalar i32: which structure serves lookups
+    rebuilding: jax.Array   # scalar bool
+    cursor: jax.Array       # scalar i32 (arena scan of active table)
+
+
+def xu_make(nbuckets: int, arena: int, *, chunk: int = 256, seed: int = 0,
+            max_chain: int = 64) -> HTXu:
+    rng = np.random.default_rng(seed)
+    t0 = buckets.chain_make(nbuckets, arena, hashing.fresh("mix32", rng), max_chain)
+    t1 = buckets.chain_make(nbuckets, arena, hashing.fresh("mix32", rng), max_chain)
+    return HTXu(chunk=chunk, t0=t0, t1=t1, active=jnp.asarray(0, I32),
+                rebuilding=jnp.asarray(False), cursor=jnp.asarray(0, I32))
+
+
+def _xu_pick(x: HTXu):
+    return jax.lax.cond(x.active == 0, lambda: (x.t0, x.t1), lambda: (x.t1, x.t0))
+
+
+def xu_lookup(x: HTXu, keys):
+    act, _ = _xu_pick(x)
+    f, v, _ = buckets.chain_lookup(act, keys)
+    return f, v
+
+
+def _xu_apply(x: HTXu, op, keys, vals, mask):
+    """Update under per-bucket locks; during rebuild, maintain BOTH sets.
+    The lock is taken ONCE per op (Xu's design: one bucket lock covers the
+    node's entry in both pointer sets); the passive-set maintenance is the
+    extra single pass, not extra lock rounds."""
+    act, pas = _xu_pick(x)
+    bfn = lambda t, k: hashing.bucket_of(t.hfn, k, t.nbuckets)
+    act, ok, _ = lock_serialized(op, act, keys, vals, mask, act.nbuckets, bfn)
+
+    def also_passive(pas):
+        pas2, _ = op(pas, keys, vals, mask)
+        return pas2
+
+    pas = jax.lax.cond(x.rebuilding, also_passive, lambda p: p, pas)
+    t0, t1 = jax.lax.cond(x.active == 0, lambda: (act, pas), lambda: (pas, act))
+    return replace(x, t0=t0, t1=t1), ok
+
+
+def xu_insert(x: HTXu, keys, vals, mask=None):
+    mask = jnp.ones(keys.shape, bool) if mask is None else mask
+    return _xu_apply(x, buckets.chain_insert, keys, vals, mask)
+
+
+def xu_delete(x: HTXu, keys, mask=None):
+    mask = jnp.ones(keys.shape, bool) if mask is None else mask
+    op = lambda t, k, v, m: buckets.chain_delete(t, k, m)
+    return _xu_apply(x, op, keys, vals=keys, mask=mask)
+
+
+def xu_rebuild_start(x: HTXu, *, seed: int) -> HTXu:
+    """Reset the passive structure with a fresh hash function."""
+    act, pas = _xu_pick(x)
+    fresh = buckets.chain_make(pas.nbuckets, pas.arena, hashing.fresh("mix32", seed),
+                               pas.max_chain)
+    t0, t1 = jax.lax.cond(x.active == 0, lambda: (act, fresh), lambda: (fresh, act))
+    return replace(x, t0=t0, t1=t1, rebuilding=jnp.asarray(True), cursor=jnp.asarray(0, I32))
+
+
+def xu_rebuild_chunk(x: HTXu) -> HTXu:
+    """Relink one arena chunk of the active set into the passive set.
+    Cheap: one pass, no hazard period (nodes stay reachable via the active
+    set the whole time — Xu's two-pointer-set advantage)."""
+    act, pas = _xu_pick(x)
+    pos = x.cursor + jnp.arange(x.chunk, dtype=I32)
+    valid = pos < act.arena
+    cpos = jnp.where(valid, pos, 0)
+    live = valid & (act.astate[cpos] == buckets.LIVE)
+    ks = jnp.where(live, act.akey[cpos], 0)
+    vs = jnp.where(live, act.aval[cpos], 0)
+    pas, _ = buckets.chain_insert(pas, ks, vs, live)
+    t0, t1 = jax.lax.cond(x.active == 0, lambda: (act, pas), lambda: (pas, act))
+    return replace(x, t0=t0, t1=t1, cursor=jnp.minimum(x.cursor + x.chunk, act.arena))
+
+
+def xu_rebuild_done(x: HTXu):
+    act, _ = _xu_pick(x)
+    return x.rebuilding & (x.cursor >= act.arena)
+
+
+def xu_rebuild_finish(x: HTXu) -> HTXu:
+    return replace(x, active=1 - x.active, rebuilding=jnp.asarray(False),
+                   cursor=jnp.asarray(0, I32))
+
+
+# ---------------------------------------------------------------------------
+# HT-RHT: Linux rhashtable
+# ---------------------------------------------------------------------------
+
+@pytree_dataclass(meta_fields=("bchunk",))
+class HTRHT:
+    bchunk: int             # buckets processed per rebuild chunk
+    old: buckets.ChainTable
+    new: buckets.ChainTable
+    rebuilding: jax.Array
+    bcursor: jax.Array      # bucket scan position (wraps)
+
+
+def rht_make(nbuckets: int, arena: int, *, bchunk: int = 256, seed: int = 0,
+             max_chain: int = 64) -> HTRHT:
+    rng = np.random.default_rng(seed)
+    old = buckets.chain_make(nbuckets, arena, hashing.fresh("mix32", rng), max_chain)
+    new = buckets.chain_make(nbuckets, arena, hashing.fresh("mix32", rng), max_chain)
+    return HTRHT(bchunk=bchunk, old=old, new=new,
+                 rebuilding=jnp.asarray(False), bcursor=jnp.asarray(0, I32))
+
+
+def rht_lookup(r: HTRHT, keys):
+    f_old, v_old, _ = buckets.chain_lookup(r.old, keys)
+
+    def slow(_):
+        f_new, v_new, _ = buckets.chain_lookup(r.new, keys)
+        return f_old | f_new, jnp.where(f_old, v_old, v_new)
+
+    return jax.lax.cond(r.rebuilding, slow, lambda _: (f_old, v_old), None)
+
+
+def rht_insert(r: HTRHT, keys, vals, mask=None):
+    mask = jnp.ones(keys.shape, bool) if mask is None else mask
+    bfn = lambda t, k: hashing.bucket_of(t.hfn, k, t.nbuckets)
+
+    def idle(r):
+        t, ok, _ = lock_serialized(buckets.chain_insert, r.old, keys, vals, mask,
+                                   r.old.nbuckets, bfn)
+        return replace(r, old=t), ok
+
+    def rebuilding(r):
+        t, ok, _ = lock_serialized(buckets.chain_insert, r.new, keys, vals, mask,
+                                   r.new.nbuckets, bfn)
+        return replace(r, new=t), ok
+
+    return jax.lax.cond(r.rebuilding, rebuilding, idle, r)
+
+
+def rht_delete(r: HTRHT, keys, mask=None):
+    mask = jnp.ones(keys.shape, bool) if mask is None else mask
+    bfn = lambda t, k: hashing.bucket_of(t.hfn, k, t.nbuckets)
+    op = lambda t, k, v, m: buckets.chain_delete(t, k, m)
+    t_old, ok_old, _ = lock_serialized(op, r.old, keys, keys, mask, r.old.nbuckets, bfn)
+
+    def slow(r):
+        t_new, ok_new, _ = lock_serialized(op, r.new, keys, keys, mask & ~ok_old,
+                                           r.new.nbuckets, bfn)
+        return replace(r, old=t_old, new=t_new), ok_old | ok_new
+
+    return jax.lax.cond(r.rebuilding, slow, lambda r: (replace(r, old=t_old), ok_old), r)
+
+
+def rht_rebuild_start(r: HTRHT, *, seed: int) -> HTRHT:
+    fresh = buckets.chain_make(r.new.nbuckets, r.new.arena, hashing.fresh("mix32", seed),
+                               r.new.max_chain)
+    return replace(r, new=fresh, rebuilding=jnp.asarray(True), bcursor=jnp.asarray(0, I32))
+
+
+def rht_rebuild_chunk(r: HTRHT) -> HTRHT:
+    """Distribute the TAIL node of each of the next ``bchunk`` buckets.
+
+    Graf's algorithm must re-traverse the chain to reach the tail for every
+    single node it moves — the O(len) walk modelled here (the paper's stated
+    drawback #1, and why DHash wins Fig 3)."""
+    old = r.old
+    nb = old.nbuckets
+    b = (r.bcursor + jnp.arange(r.bchunk, dtype=I32)) % nb
+    cur0 = old.heads[b]
+
+    def body(_, carry):
+        cur, prev = carry
+        valid = cur >= 0
+        c = jnp.where(valid, cur, 0)
+        nxt = old.anext[c]
+        stop = valid & (nxt < 0)           # cur is the tail
+        prev = jnp.where(valid & ~stop, cur, prev)
+        cur = jnp.where(valid & ~stop, nxt, cur)
+        return cur, prev
+
+    tail, prev = jax.lax.fori_loop(0, old.max_chain, body,
+                                   (cur0, jnp.full_like(cur0, -1)))
+    has = tail >= 0
+    tc = jnp.where(has, tail, 0)
+    was_live = has & (old.astate[tc] == buckets.LIVE)
+    ks = jnp.where(was_live, old.akey[tc], 0)
+    vs = jnp.where(was_live, old.aval[tc], 0)
+    # unlink the tail: prev.next = -1, or head = -1 if the tail was the head
+    anext = old.anext.at[jnp.where(has & (prev >= 0), prev, old.arena)].set(-1, mode="drop")
+    heads = old.heads.at[jnp.where(has & (prev < 0), b, nb)].set(-1, mode="drop")
+    astate = old.astate.at[jnp.where(has, tc, old.arena)].set(buckets.EMPTY, mode="drop")
+    old = replace(old, anext=anext, heads=heads, astate=astate)
+    new, _ = buckets.chain_insert(r.new, ks, vs, was_live)
+    return replace(r, old=old, new=new, bcursor=(r.bcursor + r.bchunk) % nb)
+
+
+def rht_rebuild_done(r: HTRHT):
+    return r.rebuilding & (buckets.chain_count_live(r.old) == 0)
+
+
+def rht_rebuild_finish(r: HTRHT) -> HTRHT:
+    return replace(r, old=r.new, new=r.old, rebuilding=jnp.asarray(False),
+                   bcursor=jnp.asarray(0, I32))
+
+
+# ---------------------------------------------------------------------------
+# HT-Split: split-ordered resizable table (lock-free, fixed hash)
+# ---------------------------------------------------------------------------
+
+@pytree_dataclass(meta_fields=("max_buckets",))
+class HTSplit:
+    max_buckets: int        # static head-array capacity (max 2^i)
+    t: buckets.ChainTable   # nbuckets == max_buckets; active count is dynamic
+    nactive: jax.Array      # scalar i32: current 2^i bucket count
+
+
+def split_make(max_buckets: int, arena: int, *, init_buckets: int = 64, seed: int = 0,
+               max_chain: int = 64) -> HTSplit:
+    t = buckets.chain_make(max_buckets, arena, hashing.fresh("mix32", seed), max_chain)
+    return HTSplit(max_buckets=max_buckets, t=t, nactive=jnp.asarray(init_buckets, I32))
+
+
+def _split_bucket(s: HTSplit, keys):
+    # THE structural constraint: bucket = key mod 2^i. No seed, no defense.
+    return (keys & (s.nactive - 1)).astype(I32)
+
+
+def split_lookup(s: HTSplit, keys):
+    f, v, _ = buckets.chain_lookup(s.t, keys, bucket=_split_bucket(s, keys))
+    return f, v
+
+
+def split_insert(s: HTSplit, keys, vals, mask=None):
+    mask = jnp.ones(keys.shape, bool) if mask is None else mask
+    t, ok = buckets.chain_insert(s.t, keys, vals, mask, bucket=_split_bucket(s, keys))
+    return replace(s, t=t), ok
+
+
+def split_delete(s: HTSplit, keys, mask=None):
+    mask = jnp.ones(keys.shape, bool) if mask is None else mask
+    t, ok = buckets.chain_delete(s.t, keys, mask, bucket=_split_bucket(s, keys))
+    return replace(s, t=t), ok
+
+
+def split_resize(s: HTSplit, grow: bool) -> HTSplit:
+    """Double/halve the bucket count.  Split-ordered lists republish bucket
+    pointers without moving nodes; the vectorized analogue is one rechain
+    pass over live nodes (no per-node distribution, no hazard period)."""
+    nact = jnp.where(grow, jnp.minimum(s.nactive * 2, s.max_buckets),
+                     jnp.maximum(s.nactive // 2, 1))
+    s2 = replace(s, nactive=nact)
+    t = s.t
+    live = t.astate == buckets.LIVE
+    keys = jnp.where(live, t.akey, 0)
+    fresh = buckets.chain_make(t.nbuckets, t.arena, t.hfn, t.max_chain)
+    t2, _ = buckets.chain_insert(fresh, keys, t.aval, live,
+                                 bucket=_split_bucket(s2, keys))
+    return replace(s2, t=t2)

@@ -1,0 +1,498 @@
+"""Modular bucket backends (the paper's pluggable "set algorithms", §3 goal 2).
+
+The paper chains nodes in lock-free linked lists; pointer chasing is hostile
+to TPUs, so each backend here is an *array-native* reformulation with the same
+observable set semantics:
+
+* ``linear``    — open-addressing, linear probing.  The TPU-native default:
+                  bounded vectorized probe sequences, no pointers at all.
+* ``twochoice`` — bucketed 2-choice hashing (cuckoo family without eviction):
+                  exactly two vector-width bucket reads per lookup.
+* ``chain``     — arena-based chained buckets: the faithful analogue of the
+                  paper's Michael-list buckets (insert-at-head, logical
+                  deletion via state tags, deferred physical reclamation).
+                  Traversal is lock-step across the query batch: one gather
+                  per hop, bounded by ``max_chain``.
+
+Slot/node states mirror the paper's two flag bits:
+  LIVE                ~ reachable node
+  TOMB                ~ LOGICALLY_REMOVED      (delete; reclaim deferred)
+  MIGRATED            ~ IS_BEING_DISTRIBUTED   (rebuild pulled it into hazard)
+
+All operations are *batched*: a batch of Q independent operations is the SPMD
+analogue of Q concurrent threads.  Intra-batch conflicts are resolved
+deterministically (lowest original index wins), which is one legal
+linearization of the paper's concurrent execution.
+
+Every backend exposes:
+  make(...) -> Table
+  lookup(t, keys)                -> (found[Q], vals[Q], loc[Q])
+  insert(t, keys, vals, mask)    -> (t', ok[Q])     # ok=False if present/full
+  delete(t, keys, mask)          -> (t', ok[Q])
+  extract_chunk(t, cursor, n)    -> (t', hkeys, hvals, hlive, new_cursor)
+  count_live(t) -> scalar
+  capacity_of(t) -> int (static)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.core.struct_utils import pytree_dataclass
+
+I32 = jnp.int32
+EMPTY, LIVE, TOMB, MIGRATED = I32(0), I32(1), I32(2), I32(3)
+
+BACKENDS = ("linear", "twochoice", "chain")
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def batch_winners(keys: jax.Array, mask: jax.Array) -> jax.Array:
+    """First masked occurrence of each distinct key wins (deterministic
+    linearization of intra-batch duplicate ops)."""
+    q = keys.shape[0]
+    idx = jnp.arange(q, dtype=I32)
+    order = jnp.lexsort((idx, (~mask).astype(I32), keys))
+    ks, ms = keys[order], mask[order]
+    first = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]])
+    win_sorted = ms & first
+    return jnp.zeros((q,), bool).at[order].set(win_sorted)
+
+
+def _argpick(hit: jax.Array, vals: jax.Array, axis: int = -1):
+    """Select value at the first True along axis (undefined if none)."""
+    i = jnp.argmax(hit, axis=axis)
+    return jnp.take_along_axis(vals, i[..., None], axis=axis)[..., 0], i
+
+
+# ---------------------------------------------------------------------------
+# linear: open addressing with linear probing
+# ---------------------------------------------------------------------------
+
+@pytree_dataclass(meta_fields=("capacity", "max_probes"))
+class LinearTable:
+    capacity: int
+    max_probes: int
+    hfn: hashing.HashFn
+    key: jax.Array    # [C] i32
+    val: jax.Array    # [C] i32
+    state: jax.Array  # [C] i32 (EMPTY/LIVE/TOMB/MIGRATED)
+
+
+def linear_make(capacity: int, hfn: hashing.HashFn, max_probes: int = 64) -> LinearTable:
+    z = jnp.zeros((capacity,), I32)
+    return LinearTable(capacity=capacity, max_probes=max_probes, hfn=hfn,
+                       key=z, val=z, state=z)
+
+
+def linear_lookup(t: LinearTable, keys: jax.Array):
+    found, val, loc, _ = linear_lookup_fwd(t, keys)
+    return found, val, loc
+
+
+def linear_lookup_fwd(t: LinearTable, keys: jax.Array):
+    """Lookup that ALSO reports a MIGRATED-slot key match ("tombstone
+    forwarding"): a slot whose entry was pulled into the rebuild's hazard
+    buffer still holds its key, so the probe that passes over it identifies
+    the hazard entry at zero extra cost — the beyond-paper replacement for
+    the O(Q x chunk) hazard broadcast compare (EXPERIMENTS.md §Perf).
+    Returns (found, val, loc, mig_loc) with mig_loc = -1 if none."""
+    c = t.capacity
+    h0 = hashing.bucket_of(t.hfn, keys, c)
+    q = keys.shape[0]
+
+    def cond(carry):
+        active, i = carry[0], carry[5]
+        return active.any() & (i < t.max_probes)
+
+    def body(carry):
+        active, found, val, loc, mig, i = carry
+        pos = (h0 + i) % c
+        st = t.state[pos]
+        kmatch = t.key[pos] == keys
+        hit = active & (st == LIVE) & kmatch
+        mig = jnp.where(active & (st == MIGRATED) & kmatch & (mig < 0),
+                        pos, mig)
+        stop = active & (st == EMPTY)
+        val = jnp.where(hit, t.val[pos], val)
+        loc = jnp.where(hit, pos, loc)
+        found = found | hit
+        active = active & ~hit & ~stop
+        return active, found, val, loc, mig, i + 1
+
+    init = (jnp.ones((q,), bool), jnp.zeros((q,), bool),
+            jnp.zeros((q,), I32), jnp.full((q,), -1, I32),
+            jnp.full((q,), -1, I32), jnp.asarray(0, I32))
+    _, found, val, loc, mig, _ = jax.lax.while_loop(cond, body, init)
+    return found, val, loc, mig
+
+
+def linear_insert(t: LinearTable, keys: jax.Array, vals: jax.Array, mask: jax.Array):
+    c, q = t.capacity, keys.shape[0]
+    winner = batch_winners(keys, mask)
+    present, _, _ = linear_lookup(t, keys)
+    pending0 = winner & ~present
+    h0 = hashing.bucket_of(t.hfn, keys, c)
+    idx = jnp.arange(q, dtype=I32)
+
+    def body(_, carry):
+        key, val, state, pending, off, done = carry
+        pos = (h0 + off) % c
+        free = pending & (state[pos] != LIVE)
+        wpos = jnp.where(free, pos, c)
+        claim = jnp.full((c,), q, I32).at[wpos].min(idx, mode="drop")
+        won = free & (claim[pos % c] == idx) & (wpos < c)
+        wp = jnp.where(won, pos, c)
+        key = key.at[wp].set(keys, mode="drop")
+        val = val.at[wp].set(vals, mode="drop")
+        state = state.at[wp].set(LIVE, mode="drop")
+        done = done | won
+        pending = pending & ~won
+        off = jnp.where(pending, off + 1, off)
+        return key, val, state, pending, off, done
+
+    init = (t.key, t.val, t.state, pending0, jnp.zeros((q,), I32), jnp.zeros((q,), bool))
+    key, val, state, _, _, done = jax.lax.fori_loop(0, t.max_probes, body, init)
+    t = LinearTable(capacity=c, max_probes=t.max_probes, hfn=t.hfn, key=key, val=val, state=state)
+    return t, done
+
+
+def linear_delete(t: LinearTable, keys: jax.Array, mask: jax.Array):
+    winner = batch_winners(keys, mask)
+    found, _, loc = linear_lookup(t, keys)
+    ok = winner & found
+    wloc = jnp.where(ok, loc, t.capacity)
+    state = t.state.at[wloc].set(TOMB, mode="drop")
+    return LinearTable(capacity=t.capacity, max_probes=t.max_probes, hfn=t.hfn,
+                       key=t.key, val=t.val, state=state), ok
+
+
+def linear_extract_chunk(t: LinearTable, cursor: jax.Array, n: int):
+    pos = cursor + jnp.arange(n, dtype=I32)
+    valid = pos < t.capacity
+    cpos = jnp.where(valid, pos, 0)
+    live = valid & (t.state[cpos] == LIVE)
+    hkeys = jnp.where(live, t.key[cpos], 0)
+    hvals = jnp.where(live, t.val[cpos], 0)
+    state = t.state.at[jnp.where(live, cpos, t.capacity)].set(MIGRATED, mode="drop")
+    new_cursor = jnp.minimum(cursor + n, t.capacity)
+    t = LinearTable(capacity=t.capacity, max_probes=t.max_probes, hfn=t.hfn,
+                    key=t.key, val=t.val, state=state)
+    return t, hkeys, hvals, live, new_cursor
+
+
+def linear_count_live(t: LinearTable):
+    return jnp.sum(t.state == LIVE)
+
+
+# ---------------------------------------------------------------------------
+# twochoice: bucketed 2-choice hashing (W-wide vector buckets)
+# ---------------------------------------------------------------------------
+
+@pytree_dataclass(meta_fields=("nbuckets", "width", "max_rounds"))
+class TwoChoiceTable:
+    nbuckets: int
+    width: int
+    max_rounds: int
+    hfn_a: hashing.HashFn
+    hfn_b: hashing.HashFn
+    key: jax.Array    # [B, W] i32
+    val: jax.Array    # [B, W] i32
+    state: jax.Array  # [B, W] i32
+
+
+def twochoice_make(nbuckets: int, hfn_a: hashing.HashFn, hfn_b: hashing.HashFn,
+                   width: int = 8, max_rounds: int = 8) -> TwoChoiceTable:
+    z = jnp.zeros((nbuckets, width), I32)
+    return TwoChoiceTable(nbuckets=nbuckets, width=width, max_rounds=max_rounds,
+                          hfn_a=hfn_a, hfn_b=hfn_b, key=z, val=z, state=z)
+
+
+def _tc_rows(t: TwoChoiceTable, keys: jax.Array):
+    ba = hashing.bucket_of(t.hfn_a, keys, t.nbuckets)
+    bb = hashing.bucket_of(t.hfn_b, keys, t.nbuckets)
+    return ba, bb
+
+
+def twochoice_lookup(t: TwoChoiceTable, keys: jax.Array):
+    ba, bb = _tc_rows(t, keys)
+    hit_a = (t.key[ba] == keys[:, None]) & (t.state[ba] == LIVE)   # [Q, W]
+    hit_b = (t.key[bb] == keys[:, None]) & (t.state[bb] == LIVE)
+    fa, fb = hit_a.any(-1), hit_b.any(-1)
+    va, sa = _argpick(hit_a, t.val[ba])
+    vb, sb = _argpick(hit_b, t.val[bb])
+    found = fa | fb
+    val = jnp.where(fa, va, vb)
+    loc = jnp.where(fa, ba * t.width + sa, jnp.where(fb, bb * t.width + sb, -1))
+    return found, val, loc
+
+
+def twochoice_insert(t: TwoChoiceTable, keys: jax.Array, vals: jax.Array, mask: jax.Array):
+    b, w, q = t.nbuckets, t.width, keys.shape[0]
+    winner = batch_winners(keys, mask)
+    present, _, _ = twochoice_lookup(t, keys)
+    pending0 = winner & ~present
+    ba, bb = _tc_rows(t, keys)
+    idx = jnp.arange(q, dtype=I32)
+    nslots = b * w
+
+    def body(r, carry):
+        key, val, state, pending, done = carry
+        bkt = jnp.where(r % 2 == 0, ba, bb)
+        row_free = state[bkt] != LIVE                       # [Q, W]
+        has_free = pending & row_free.any(-1)
+        slot = jnp.argmax(row_free, axis=-1)
+        flat = bkt * w + slot
+        wflat = jnp.where(has_free, flat, nslots)
+        claim = jnp.full((nslots,), q, I32).at[wflat].min(idx, mode="drop")
+        won = has_free & (claim[flat % nslots] == idx) & (wflat < nslots)
+        wp = jnp.where(won, flat, nslots)
+        key = key.reshape(-1).at[wp].set(keys, mode="drop").reshape(b, w)
+        val = val.reshape(-1).at[wp].set(vals, mode="drop").reshape(b, w)
+        state = state.reshape(-1).at[wp].set(LIVE, mode="drop").reshape(b, w)
+        done = done | won
+        pending = pending & ~won
+        return key, val, state, pending, done
+
+    init = (t.key, t.val, t.state, pending0, jnp.zeros((q,), bool))
+    key, val, state, _, done = jax.lax.fori_loop(0, t.max_rounds, body, init)
+    t = TwoChoiceTable(nbuckets=b, width=w, max_rounds=t.max_rounds,
+                       hfn_a=t.hfn_a, hfn_b=t.hfn_b, key=key, val=val, state=state)
+    return t, done
+
+
+def twochoice_delete(t: TwoChoiceTable, keys: jax.Array, mask: jax.Array):
+    winner = batch_winners(keys, mask)
+    found, _, loc = twochoice_lookup(t, keys)
+    ok = winner & found
+    wloc = jnp.where(ok, loc, t.nbuckets * t.width)
+    state = t.state.reshape(-1).at[wloc].set(TOMB, mode="drop").reshape(t.nbuckets, t.width)
+    return TwoChoiceTable(nbuckets=t.nbuckets, width=t.width, max_rounds=t.max_rounds,
+                          hfn_a=t.hfn_a, hfn_b=t.hfn_b, key=t.key, val=t.val, state=state), ok
+
+
+def twochoice_extract_chunk(t: TwoChoiceTable, cursor: jax.Array, n: int):
+    nslots = t.nbuckets * t.width
+    pos = cursor + jnp.arange(n, dtype=I32)
+    valid = pos < nslots
+    cpos = jnp.where(valid, pos, 0)
+    ks, vs, ss = t.key.reshape(-1), t.val.reshape(-1), t.state.reshape(-1)
+    live = valid & (ss[cpos] == LIVE)
+    hkeys = jnp.where(live, ks[cpos], 0)
+    hvals = jnp.where(live, vs[cpos], 0)
+    ss = ss.at[jnp.where(live, cpos, nslots)].set(MIGRATED, mode="drop")
+    new_cursor = jnp.minimum(cursor + n, nslots)
+    t = TwoChoiceTable(nbuckets=t.nbuckets, width=t.width, max_rounds=t.max_rounds,
+                       hfn_a=t.hfn_a, hfn_b=t.hfn_b, key=t.key, val=t.val,
+                       state=ss.reshape(t.nbuckets, t.width))
+    return t, hkeys, hvals, live, new_cursor
+
+
+def twochoice_count_live(t: TwoChoiceTable):
+    return jnp.sum(t.state == LIVE)
+
+
+# ---------------------------------------------------------------------------
+# chain: arena-based chained buckets (paper-faithful Michael-list analogue)
+# ---------------------------------------------------------------------------
+
+@pytree_dataclass(meta_fields=("nbuckets", "arena", "max_chain"))
+class ChainTable:
+    nbuckets: int
+    arena: int        # node capacity N
+    max_chain: int    # traversal bound (>= max expected chain incl. tombstones)
+    hfn: hashing.HashFn
+    akey: jax.Array   # [N] i32
+    aval: jax.Array   # [N] i32
+    anext: jax.Array  # [N] i32 (-1 terminates)
+    astate: jax.Array # [N] i32
+    heads: jax.Array  # [B] i32 (-1 empty)
+    free_stack: jax.Array  # [N] i32 - free node indices live at [0, free_top)
+    free_top: jax.Array    # scalar i32
+
+
+def chain_make(nbuckets: int, arena: int, hfn: hashing.HashFn, max_chain: int = 64) -> ChainTable:
+    n = arena
+    return ChainTable(
+        nbuckets=nbuckets, arena=n, max_chain=max_chain, hfn=hfn,
+        akey=jnp.zeros((n,), I32), aval=jnp.zeros((n,), I32),
+        anext=jnp.full((n,), -1, I32), astate=jnp.zeros((n,), I32),
+        heads=jnp.full((nbuckets,), -1, I32),
+        free_stack=jnp.arange(n, dtype=I32), free_top=jnp.asarray(n, I32))
+
+
+def chain_lookup(t: ChainTable, keys: jax.Array, bucket: jax.Array | None = None):
+    """Lock-step batched traversal with DYNAMIC termination: the step cost is
+    the longest still-active chain in the batch, not the static bound — so
+    collision attacks show up in wall time exactly as they do on the paper's
+    pointer-chasing implementations."""
+    q = keys.shape[0]
+    b = hashing.bucket_of(t.hfn, keys, t.nbuckets) if bucket is None else bucket
+    cur0 = t.heads[b]
+
+    def cond(carry):
+        cur, found, _, _, fuel = carry
+        return ((cur >= 0) & ~found).any() & (fuel > 0)
+
+    def body(carry):
+        cur, found, val, loc, fuel = carry
+        valid = cur >= 0
+        c = jnp.where(valid, cur, 0)
+        hit = valid & (t.astate[c] == LIVE) & (t.akey[c] == keys) & ~found
+        val = jnp.where(hit, t.aval[c], val)
+        loc = jnp.where(hit, cur, loc)
+        found = found | hit
+        step = valid & ~found
+        cur = jnp.where(step, t.anext[c], jnp.where(found, cur, -1))
+        return cur, found, val, loc, fuel - 1
+
+    init = (cur0, jnp.zeros((q,), bool), jnp.zeros((q,), I32),
+            jnp.full((q,), -1, I32), jnp.asarray(t.max_chain, I32))
+    _, found, val, loc, _ = jax.lax.while_loop(cond, body, init)
+    return found, val, loc
+
+
+def _chain_link(t: ChainTable, keys, node, can, bucket: jax.Array | None = None):
+    """Insert nodes ``node`` (where can) at the heads of their buckets,
+    preserving original-index order within each bucket group."""
+    q = keys.shape[0]
+    b = hashing.bucket_of(t.hfn, keys, t.nbuckets) if bucket is None else bucket
+    sortkey = jnp.where(can, b, t.nbuckets)
+    idx = jnp.arange(q, dtype=I32)
+    order = jnp.lexsort((idx, sortkey))
+    sb, snode, scan = sortkey[order], node[order], can[order]
+    nxt_same = jnp.concatenate([snode[1:], jnp.full((1,), -1, I32)])
+    same_bucket = jnp.concatenate([sb[1:] == sb[:-1], jnp.zeros((1,), bool)])
+    old_head = t.heads[jnp.where(scan, sb, 0)]
+    nxt = jnp.where(same_bucket, nxt_same, jnp.where(scan, old_head, -1))
+    anext = t.anext.at[jnp.where(scan, snode, t.arena)].set(nxt, mode="drop")
+    is_start = jnp.concatenate([jnp.ones((1,), bool), sb[1:] != sb[:-1]])
+    heads = t.heads.at[jnp.where(scan & is_start, sb, t.nbuckets)].set(snode, mode="drop")
+    return anext, heads
+
+
+def chain_insert(t: ChainTable, keys: jax.Array, vals: jax.Array, mask: jax.Array,
+                 bucket: jax.Array | None = None):
+    q, n = keys.shape[0], t.arena
+    winner = batch_winners(keys, mask)
+    present, _, _ = chain_lookup(t, keys, bucket)
+    want = winner & ~present
+    rank = jnp.cumsum(want.astype(I32)) - 1
+    can = want & (rank < t.free_top)
+    node = t.free_stack[jnp.where(can, t.free_top - 1 - rank, 0)]
+    wnode = jnp.where(can, node, n)
+    akey = t.akey.at[wnode].set(keys, mode="drop")
+    aval = t.aval.at[wnode].set(vals, mode="drop")
+    astate = t.astate.at[wnode].set(LIVE, mode="drop")
+    t1 = ChainTable(nbuckets=t.nbuckets, arena=n, max_chain=t.max_chain, hfn=t.hfn,
+                    akey=akey, aval=aval, anext=t.anext, astate=astate,
+                    heads=t.heads, free_stack=t.free_stack, free_top=t.free_top)
+    anext, heads = _chain_link(t1, keys, node, can, bucket)
+    free_used = jnp.sum(can.astype(I32))
+    t2 = ChainTable(nbuckets=t.nbuckets, arena=n, max_chain=t.max_chain, hfn=t.hfn,
+                    akey=akey, aval=aval, anext=anext, astate=astate,
+                    heads=heads, free_stack=t.free_stack, free_top=t.free_top - free_used)
+    return t2, can
+
+
+def chain_delete(t: ChainTable, keys: jax.Array, mask: jax.Array,
+                 bucket: jax.Array | None = None):
+    winner = batch_winners(keys, mask)
+    found, _, loc = chain_lookup(t, keys, bucket)
+    ok = winner & found
+    wloc = jnp.where(ok, loc, t.arena)
+    astate = t.astate.at[wloc].set(TOMB, mode="drop")
+    return ChainTable(nbuckets=t.nbuckets, arena=t.arena, max_chain=t.max_chain, hfn=t.hfn,
+                      akey=t.akey, aval=t.aval, anext=t.anext, astate=astate,
+                      heads=t.heads, free_stack=t.free_stack, free_top=t.free_top), ok
+
+
+def chain_extract_chunk(t: ChainTable, cursor: jax.Array, n: int):
+    pos = cursor + jnp.arange(n, dtype=I32)
+    valid = pos < t.arena
+    cpos = jnp.where(valid, pos, 0)
+    live = valid & (t.astate[cpos] == LIVE)
+    hkeys = jnp.where(live, t.akey[cpos], 0)
+    hvals = jnp.where(live, t.aval[cpos], 0)
+    astate = t.astate.at[jnp.where(live, cpos, t.arena)].set(MIGRATED, mode="drop")
+    new_cursor = jnp.minimum(cursor + n, t.arena)
+    t = ChainTable(nbuckets=t.nbuckets, arena=t.arena, max_chain=t.max_chain, hfn=t.hfn,
+                   akey=t.akey, aval=t.aval, anext=t.anext, astate=astate,
+                   heads=t.heads, free_stack=t.free_stack, free_top=t.free_top)
+    return t, hkeys, hvals, live, new_cursor
+
+
+def chain_compact(t: ChainTable) -> ChainTable:
+    """Physically reclaim tombstones: rebuild all chains from live nodes.
+
+    The paper defers physical unlinking to later traversals / call_rcu; the
+    batched analogue is a periodic vectorized compaction (also doubles as the
+    post-rebuild reclamation of the old arena)."""
+    live = t.astate == LIVE
+    fresh = chain_make(t.nbuckets, t.arena, t.hfn, t.max_chain)
+    t2, _ = chain_insert(fresh, jnp.where(live, t.akey, 0), t.aval, live)
+    return t2
+
+
+def chain_count_live(t: ChainTable):
+    return jnp.sum(t.astate == LIVE)
+
+
+# ---------------------------------------------------------------------------
+# dispatch facade
+# ---------------------------------------------------------------------------
+
+_OPS: dict[str, dict[str, Any]] = {
+    "linear": dict(lookup=linear_lookup, insert=linear_insert, delete=linear_delete,
+                   extract_chunk=linear_extract_chunk, count_live=linear_count_live),
+    "twochoice": dict(lookup=twochoice_lookup, insert=twochoice_insert, delete=twochoice_delete,
+                      extract_chunk=twochoice_extract_chunk, count_live=twochoice_count_live),
+    "chain": dict(lookup=chain_lookup, insert=chain_insert, delete=chain_delete,
+                  extract_chunk=chain_extract_chunk, count_live=chain_count_live),
+}
+
+
+def backend_of(table) -> str:
+    if isinstance(table, LinearTable):
+        return "linear"
+    if isinstance(table, TwoChoiceTable):
+        return "twochoice"
+    if isinstance(table, ChainTable):
+        return "chain"
+    raise TypeError(type(table))
+
+
+def lookup(t, keys):
+    return _OPS[backend_of(t)]["lookup"](t, keys)
+
+
+def insert(t, keys, vals, mask):
+    return _OPS[backend_of(t)]["insert"](t, keys, vals, mask)
+
+
+def delete(t, keys, mask):
+    return _OPS[backend_of(t)]["delete"](t, keys, mask)
+
+
+def extract_chunk(t, cursor, n):
+    return _OPS[backend_of(t)]["extract_chunk"](t, cursor, n)
+
+
+def count_live(t):
+    return _OPS[backend_of(t)]["count_live"](t)
+
+
+def capacity_of(t) -> int:
+    if isinstance(t, LinearTable):
+        return t.capacity
+    if isinstance(t, TwoChoiceTable):
+        return t.nbuckets * t.width
+    if isinstance(t, ChainTable):
+        return t.arena
+    raise TypeError(type(t))

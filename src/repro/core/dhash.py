@@ -1,0 +1,306 @@
+"""DHash: a dynamic hash table whose hash function can be rebuilt live.
+
+This is the paper's core contribution (§3-§4) mapped to the SPMD/XLA model:
+
+* The table state is a pytree carrying the *old* table, the *new* table
+  (pre-allocated with the replacement hash function), and a **hazard buffer**
+  — the batched analogue of the paper's ``rebuild_cur`` global pointer.  A
+  rebuild migrates a *chunk* of entries per transition instead of one node
+  (single-node granularity would waste the vector units; the hazard period is
+  a chunk-sized window).
+
+* ``rebuild_extract`` removes a chunk from the old table into the hazard
+  buffer (entries are then in *neither* table — the hazard period, Fig 1c);
+  ``rebuild_land`` inserts the hazard entries into the new table and clears
+  the buffer (Fig 1d).  The engine interleaves full-rate lookup/insert/delete
+  batches between these transitions, which is exactly the concurrency
+  structure of the paper; dataflow ordering plays the role of the paper's
+  smp_wmb/smp_rmb pairs.
+
+* Every operation performs the paper's **ordered check** (Lemma 4.1/4.2):
+      old table  →  hazard buffer  →  new table.
+  Lookup priority is old > hazard > new; delete tries old, then marks hazard
+  entries dead (the LOGICALLY_REMOVED bit on an in-flight node, Alg. 5 line
+  75 — a killed hazard entry is silently dropped at landing), then tries new.
+  Insert targets the new table iff a rebuild is in progress (Lemma 4.3/4.4);
+  duplicate keys discovered at landing are dropped in favour of the new
+  table's copy (Alg. 3 lines 34-36).
+
+* The epoch swap (Alg. 3 lines 41-46) is a host-level transition
+  (``rebuild_finish``) because old/new may differ in static shape; for
+  shape-preserving rebuilds there is a fully-jitted ``finish_same_shape``.
+  The paper's ``synchronize_rcu`` grace periods are step boundaries: a
+  transition consumes state_t and produces state_{t+1}, so no reader of
+  state_t can observe state_{t+1} — the grace period is free.
+
+Progress-guarantee analogue (DESIGN.md §2): a step's latency is bounded and
+independent of rebuild progress — rebuild costs O(chunk) per transition,
+never a stop-the-world O(N) pause.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import buckets, hashing
+from repro.core.struct_utils import pytree_dataclass, replace
+
+I32 = jnp.int32
+
+
+@pytree_dataclass(meta_fields=("backend", "chunk", "fwd_hazard"))
+class DHashState:
+    backend: str
+    chunk: int                  # hazard buffer capacity (entries per rebuild chunk)
+    fwd_hazard: bool            # linear backend: resolve hazard hits via
+                                # MIGRATED-slot forwarding (zero extra passes)
+    old: Any                    # active table (backend pytree)
+    new: Any                    # target table; meaningful only while rebuilding
+    hazard_key: jax.Array       # [chunk] i32
+    hazard_val: jax.Array       # [chunk] i32
+    hazard_live: jax.Array      # [chunk] bool
+    cursor: jax.Array           # scalar i32 - scan position in old table
+    rebuilding: jax.Array       # scalar bool
+    epoch: jax.Array            # scalar i32
+
+
+# ---------------------------------------------------------------------------
+# construction
+# ---------------------------------------------------------------------------
+
+def _make_table(backend: str, capacity: int, seed, *, load_factor: float = 0.75,
+                max_probes: int = 64, bucket_width: int = 8, max_chain: int = 64,
+                nbuckets: int | None = None):
+    """Build an empty backend table sized for ``capacity`` live entries."""
+    rng = np.random.default_rng(seed)
+    if backend == "linear":
+        slots = _next_pow2(int(capacity / load_factor) + 1)
+        return buckets.linear_make(slots, hashing.fresh("mix32", rng), max_probes=max_probes)
+    if backend == "twochoice":
+        nb = _next_pow2(int(capacity / (load_factor * bucket_width)) + 1)
+        return buckets.twochoice_make(nb, hashing.fresh("mix32", rng),
+                                      hashing.fresh("mix32", rng), width=bucket_width)
+    if backend == "chain":
+        nb = nbuckets if nbuckets is not None else _next_pow2(max(capacity // 16, 1))
+        return buckets.chain_make(nb, capacity, hashing.fresh("mix32", rng), max_chain=max_chain)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << (int(x) - 1).bit_length()
+
+
+def make(backend: str = "linear", capacity: int = 1024, *, chunk: int = 256,
+         seed: int = 0, fwd_hazard: bool = False, **kw) -> DHashState:
+    old = _make_table(backend, capacity, seed, **kw)
+    new = _make_table(backend, capacity, seed + 1, **kw)
+    z = jnp.zeros((chunk,), I32)
+    return DHashState(backend=backend, chunk=chunk, fwd_hazard=fwd_hazard,
+                      old=old, new=new,
+                      hazard_key=z, hazard_val=z, hazard_live=jnp.zeros((chunk,), bool),
+                      cursor=jnp.asarray(0, I32), rebuilding=jnp.asarray(False),
+                      epoch=jnp.asarray(0, I32))
+
+
+# ---------------------------------------------------------------------------
+# the ordered check: old -> hazard -> new (Lemma 4.1)
+# ---------------------------------------------------------------------------
+
+def _hazard_probe(d: DHashState, keys: jax.Array):
+    eq = (keys[:, None] == d.hazard_key[None, :]) & d.hazard_live[None, :]
+    found = eq.any(-1)
+    val, _ = buckets._argpick(eq, jnp.broadcast_to(d.hazard_val[None, :], eq.shape))
+    return found, jnp.where(found, val, 0)
+
+
+def lookup(d: DHashState, keys: jax.Array):
+    """Batched lookup honouring the rebuild protocol. Returns (found, vals)."""
+
+    def fast(dd: DHashState):
+        f, v, _ = buckets.lookup(dd.old, keys)
+        return f, v
+
+    def slow(dd: DHashState):
+        if dd.fwd_hazard and dd.backend == "linear":
+            # beyond-paper: the old-table probe already passes over the
+            # MIGRATED slots of the in-flight chunk, so the hazard check is
+            # a forwarding index, not a second pass (§Perf dhash-service)
+            f_old, v_old, _, mig = buckets.linear_lookup_fwd(dd.old, keys)
+            base = dd.cursor - dd.chunk
+            hz_idx = mig - base
+            inwin = (mig >= 0) & (hz_idx >= 0) & (hz_idx < dd.chunk)
+            safe = jnp.clip(hz_idx, 0, dd.chunk - 1)
+            f_hz = inwin & dd.hazard_live[safe] & (dd.hazard_key[safe] == keys)
+            v_hz = dd.hazard_val[safe]
+        else:
+            f_old, v_old, _ = buckets.lookup(dd.old, keys)   # (1) old table
+            f_hz, v_hz = _hazard_probe(dd, keys)             # (2) rebuild_cur
+        f_new, v_new, _ = buckets.lookup(dd.new, keys)       # (3) new table
+        found = f_old | f_hz | f_new
+        val = jnp.where(f_old, v_old, jnp.where(f_hz, v_hz, v_new))
+        return found, val
+
+    return jax.lax.cond(d.rebuilding, slow, fast, d)
+
+
+def insert(d: DHashState, keys: jax.Array, vals: jax.Array, mask: jax.Array | None = None):
+    """Batched insert (set semantics: ok=False if key already present in the
+    *target* table — Alg. 6). Returns (state', ok)."""
+    if mask is None:
+        mask = jnp.ones(keys.shape, bool)
+
+    def fast(dd: DHashState):
+        t, ok = buckets.insert(dd.old, keys, vals, mask)
+        return replace(dd, old=t), ok
+
+    def slow(dd: DHashState):
+        t, ok = buckets.insert(dd.new, keys, vals, mask)
+        return replace(dd, new=t), ok
+
+    return jax.lax.cond(d.rebuilding, slow, fast, d)
+
+
+def delete(d: DHashState, keys: jax.Array, mask: jax.Array | None = None):
+    """Batched delete honouring the ordered check (Alg. 5). Returns (state', ok)."""
+    if mask is None:
+        mask = jnp.ones(keys.shape, bool)
+
+    def fast(dd: DHashState):
+        t, ok = buckets.delete(dd.old, keys, mask)
+        return replace(dd, old=t), ok
+
+    def slow(dd: DHashState):
+        t_old, ok_old = buckets.delete(dd.old, keys, mask)             # (1) old
+        pending = mask & ~ok_old
+        # (2) hazard buffer: clear the live bit (LOGICALLY_REMOVED on the
+        # in-flight node) - landing will drop it.
+        eq = (keys[:, None] == dd.hazard_key[None, :]) & dd.hazard_live[None, :]
+        hit_hz = eq.any(-1) & pending
+        win_hz = buckets.batch_winners(keys, hit_hz) & hit_hz
+        kill = (eq & win_hz[:, None]).any(0)
+        hazard_live = dd.hazard_live & ~kill
+        pending2 = pending & ~hit_hz
+        t_new, ok_new = buckets.delete(dd.new, keys, pending2)         # (3) new
+        ok = ok_old | win_hz | ok_new
+        return replace(dd, old=t_old, new=t_new, hazard_live=hazard_live), ok
+
+    return jax.lax.cond(d.rebuilding, slow, fast, d)
+
+
+# ---------------------------------------------------------------------------
+# rebuild protocol
+# ---------------------------------------------------------------------------
+
+def rebuild_start(d: DHashState, new_table=None, *, seed: int | None = None) -> DHashState:
+    """Host-level: begin a rebuild into ``new_table`` (fresh hash function).
+
+    Caller contract (paper's rebuild_lock): no rebuild may be in progress.
+    """
+    if new_table is None:
+        cap = buckets.capacity_of(d.old)
+        if seed is None:
+            seed = int(np.random.default_rng().integers(1 << 31))
+        if d.backend == "linear":
+            new_table = buckets.linear_make(cap, hashing.fresh("mix32", seed), d.old.max_probes)
+        elif d.backend == "twochoice":
+            rng = np.random.default_rng(seed)
+            new_table = buckets.twochoice_make(d.old.nbuckets, hashing.fresh("mix32", rng),
+                                               hashing.fresh("mix32", rng), width=d.old.width)
+        else:
+            new_table = buckets.chain_make(d.old.nbuckets, d.old.arena,
+                                           hashing.fresh("mix32", seed), d.old.max_chain)
+    return replace(d, new=new_table, cursor=jnp.asarray(0, I32),
+                   rebuilding=jnp.asarray(True))
+
+
+def rebuild_extract(d: DHashState) -> DHashState:
+    """Pull the next chunk out of the old table into the hazard buffer.
+
+    No-op unless rebuilding with an empty hazard buffer."""
+
+    def go(dd: DHashState):
+        t, hk, hv, hl, cur = buckets.extract_chunk(dd.old, dd.cursor, dd.chunk)
+        return replace(dd, old=t, hazard_key=hk, hazard_val=hv, hazard_live=hl, cursor=cur)
+
+    can = d.rebuilding & ~d.hazard_live.any()
+    return jax.lax.cond(can, go, lambda dd: dd, d)
+
+
+def rebuild_land(d: DHashState) -> DHashState:
+    """Insert hazard entries into the new table; duplicates lose to the copy
+    already in the new table (Alg. 3 lines 34-36); entries killed while in
+    hazard (delete during the hazard period) are dropped."""
+
+    def go(dd: DHashState):
+        t, _ok = buckets.insert(dd.new, dd.hazard_key, dd.hazard_val, dd.hazard_live)
+        return replace(dd, new=t, hazard_live=jnp.zeros_like(dd.hazard_live))
+
+    return jax.lax.cond(d.rebuilding, go, lambda dd: dd, d)
+
+
+def rebuild_chunk(d: DHashState) -> DHashState:
+    """extract + land in one transition (hazard window not externally visible).
+    Engines that want the observable hazard period call the two halves."""
+    return rebuild_land(rebuild_extract(d))
+
+
+def rebuild_done(d: DHashState) -> jax.Array:
+    """Scalar bool: all chunks migrated and landed."""
+    return d.rebuilding & (d.cursor >= buckets.capacity_of(d.old)) & ~d.hazard_live.any()
+
+
+def rebuild_finish(d: DHashState) -> DHashState:
+    """Host-level epoch swap (Alg. 3 lines 41-46). old/new may differ in
+    static shape, so this is not jittable in general; O(1) pytree shuffle."""
+    assert bool(jax.device_get(rebuild_done(d))), "rebuild not complete"
+    return replace(d, old=d.new, new=d.old, cursor=jnp.asarray(0, I32),
+                   rebuilding=jnp.asarray(False), epoch=d.epoch + 1)
+
+
+def finish_same_shape(d: DHashState) -> DHashState:
+    """Fully-jitted epoch swap, valid when old/new share static shapes
+    (continuous-rebuild benchmarks; router rebalancing)."""
+    done = rebuild_done(d)
+    old_leaves, treedef = jax.tree_util.tree_flatten(d.old)
+    new_leaves = jax.tree_util.tree_leaves(d.new)
+    sw_old = [jnp.where(done, n, o) for o, n in zip(old_leaves, new_leaves)]
+    sw_new = [jnp.where(done, o, n) for o, n in zip(old_leaves, new_leaves)]
+    return replace(d,
+                   old=jax.tree_util.tree_unflatten(treedef, sw_old),
+                   new=jax.tree_util.tree_unflatten(treedef, sw_new),
+                   cursor=jnp.where(done, 0, d.cursor).astype(I32),
+                   rebuilding=d.rebuilding & ~done,
+                   epoch=d.epoch + done.astype(I32))
+
+
+def rebuild_step(d: DHashState) -> DHashState:
+    """One rebuild transition per call: land if hazard pending, else extract.
+    Interleave with op batches for concurrent-rebuild execution."""
+    return jax.lax.cond(d.hazard_live.any(), rebuild_land, rebuild_extract, d)
+
+
+# ---------------------------------------------------------------------------
+# convenience drivers
+# ---------------------------------------------------------------------------
+
+def rebuild_all(d: DHashState, *, finish: bool = True) -> DHashState:
+    """Run a complete rebuild to quiescence (host loop; used by tests/benches
+    that don't care about interleaving)."""
+    cap = buckets.capacity_of(d.old)
+    steps = -(-cap // d.chunk) + 1  # +1 in case a hazard chunk is already pending
+    chunk_fn = jax.jit(rebuild_chunk)
+    done_fn = jax.jit(rebuild_done)
+    for _ in range(steps):
+        if bool(jax.device_get(done_fn(d))):
+            break
+        d = chunk_fn(d)
+    return rebuild_finish(d) if finish else d
+
+
+def count_items(d: DHashState) -> jax.Array:
+    return (buckets.count_live(d.old) + buckets.count_live(d.new)
+            + d.hazard_live.sum(dtype=I32))

@@ -1,0 +1,162 @@
+"""Distributed DHash: the table sharded over a mesh axis.
+
+Ownership is by a *fixed* owner hash (never rebuilt): shard s owns key k iff
+``owner_hash(k) % S == s``.  Rebuilds swap each shard's *local* hash function;
+because every shard executes the same transition stream (SPMD), the epoch
+swap is collectively synchronized for free — the multi-host analogue of the
+paper's ``synchronize_rcu`` grace period.
+
+Query routing is one all_to_all pair (there and back), the same dispatch
+pattern as MoE token routing; the send buffer is [S, Q] so even a fully
+adversarial key set (every key owned by one shard — the paper's collision
+attack) routes without overflow, it just concentrates work.
+
+These functions are written to be called INSIDE ``jax.shard_map`` with the
+table sharded (one leaf-shard per device along ``axis``) and queries sharded
+along their batch dim.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import buckets, dhash, hashing
+
+I32 = jnp.int32
+
+
+def _route(keys: jax.Array, owner: jax.Array, nshards: int,
+           cap: int | None = None):
+    """Group keys by owner shard into a [S, cap] send buffer.
+
+    cap=None (baseline) uses cap=Q — overflow-proof even under a collision
+    attack concentrating every key on one owner, at S x the wire bytes.
+    The §Perf-optimized path uses cap = c*Q/S (see EXPERIMENTS.md): keys
+    beyond an owner's capacity are dropped from the batch (reported via
+    smask; a uniform owner hash overflows with negligible probability).
+    Returns (send[S,cap], smask[S,cap], order, so, rank, kept[Q sorted]).
+    """
+    q = keys.shape[0]
+    cap = q if cap is None else cap
+    order = jnp.argsort(owner)
+    sk, so = keys[order], owner[order]
+    first = jnp.searchsorted(so, so, side="left")
+    rank = jnp.arange(q, dtype=I32) - first.astype(I32)
+    kept = rank < cap
+    crank = jnp.where(kept, rank, 0)
+    cso = jnp.where(kept, so, nshards)
+    send = jnp.zeros((nshards, cap), keys.dtype).at[cso, crank].set(
+        sk, mode="drop")
+    smask = jnp.zeros((nshards, cap), bool).at[cso, crank].set(
+        kept, mode="drop")
+    return send, smask, order, so, rank, kept
+
+
+def _unroute(resp_local: jax.Array, order, so, rank, kept, q, fill=0):
+    """Invert _route for a [S, cap] response."""
+    gathered = jnp.where(
+        kept,
+        resp_local[jnp.where(kept, so, 0), jnp.where(kept, rank, 0)],
+        jnp.asarray(fill, resp_local.dtype))
+    inv = jnp.zeros((q,), I32).at[order].set(jnp.arange(q, dtype=I32))
+    return gathered[inv]
+
+
+def routed_lookup(d: dhash.DHashState, keys: jax.Array, axis: str,
+                  owner_hfn: hashing.HashFn, cap: int | None = None):
+    """DHash lookup across shards. Call inside shard_map."""
+    s = lax.axis_size(axis)
+    q = keys.shape[0]
+    owner = (hashing.hash_u32(owner_hfn, keys) % jnp.uint32(s)).astype(I32)
+    send, smask, order, so, rank, kept = _route(keys, owner, s, cap)
+    c = send.shape[1]
+    rk = lax.all_to_all(send, axis, split_axis=0, concat_axis=0)
+    rm = lax.all_to_all(smask, axis, split_axis=0, concat_axis=0)
+    found, vals = dhash.lookup(d, rk.reshape(-1))
+    found = found & rm.reshape(-1)
+    rf = lax.all_to_all(found.reshape(s, c), axis, split_axis=0, concat_axis=0)
+    rv = lax.all_to_all(vals.reshape(s, c), axis, split_axis=0, concat_axis=0)
+    return (_unroute(rf, order, so, rank, kept, q).astype(bool),
+            _unroute(rv, order, so, rank, kept, q))
+
+
+def routed_update(d: dhash.DHashState, keys: jax.Array, vals: jax.Array,
+                  mask: jax.Array, axis: str, owner_hfn: hashing.HashFn,
+                  op: Callable = dhash.insert, cap: int | None = None):
+    """DHash insert/delete across shards. Returns (d', ok). Call inside shard_map."""
+    s = lax.axis_size(axis)
+    q = keys.shape[0]
+    owner = (hashing.hash_u32(owner_hfn, keys) % jnp.uint32(s)).astype(I32)
+    send, smask, order, so, rank, kept = _route(keys, owner, s, cap)
+    c = send.shape[1]
+    cso = jnp.where(kept, so, s)
+    crank = jnp.where(kept, rank, 0)
+    sendv = jnp.zeros((s, c), vals.dtype).at[cso, crank].set(vals[order],
+                                                             mode="drop")
+    sm2 = jnp.zeros((s, c), bool).at[cso, crank].set(mask[order] & kept,
+                                                     mode="drop")
+    rk = lax.all_to_all(send, axis, split_axis=0, concat_axis=0)
+    rv = lax.all_to_all(sendv, axis, split_axis=0, concat_axis=0)
+    rm = lax.all_to_all(sm2, axis, split_axis=0, concat_axis=0)
+    if op is dhash.insert:
+        d, ok = op(d, rk.reshape(-1), rv.reshape(-1), rm.reshape(-1))
+    else:
+        d, ok = op(d, rk.reshape(-1), rm.reshape(-1))
+    rok = lax.all_to_all(ok.reshape(s, c), axis, split_axis=0, concat_axis=0)
+    return d, _unroute(rok, order, so, rank, kept, q).astype(bool)
+
+
+def routed_rebuild_step(d: dhash.DHashState, axis: str) -> dhash.DHashState:
+    """One rebuild transition on every shard (SPMD-synchronized epochs)."""
+    return dhash.rebuild_step(d)
+
+
+def make_stacked(nshards: int, backend: str = "linear", capacity: int = 1024,
+                 *, chunk: int = 256, seed: int = 0, **kw) -> dhash.DHashState:
+    """Build ``nshards`` independent shard tables stacked on a leading axis.
+
+    Shard the leading axis over the mesh axis, then inside shard_map peel it
+    with ``tree_map(lambda x: x[0], stacked)`` — see ``shardwise``.
+    """
+    tables = [dhash.make(backend, capacity, chunk=chunk, seed=seed + i, **kw)
+              for i in range(nshards)]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *tables)
+
+
+def peel(stacked):
+    """Inside shard_map: view this shard's table (leading axis is size 1)."""
+    return jax.tree_util.tree_map(lambda x: x[0], stacked)
+
+
+def unpeel(d):
+    """Inverse of peel for returning the updated shard."""
+    return jax.tree_util.tree_map(lambda x: x[None], d)
+
+
+def routed_service_step(d: dhash.DHashState, lookup_keys: jax.Array,
+                        ins_keys: jax.Array, ins_vals: jax.Array,
+                        del_keys: jax.Array, axis: str,
+                        owner_hfn: hashing.HashFn, cap_factor: float = 0.0):
+    """The paper's steady-state workload as one fused distributed step:
+    a lookup batch + insert batch + delete batch + one rebuild transition.
+    This is what the dry-run lowers for the dhash_paper 'architecture'.
+
+    cap_factor > 0 bounds the routing buffers at cap = cap_factor * Q / S
+    (§Perf lever: S x fewer wire bytes and S x smaller remote batches)."""
+    s = lax.axis_size(axis)
+    capof = (lambda q: max(int(cap_factor * q / s), 1)) if cap_factor > 0 \
+        else (lambda q: None)
+    found, vals = routed_lookup(d, lookup_keys, axis, owner_hfn,
+                                cap=capof(lookup_keys.shape[0]))
+    d, ok_i = routed_update(d, ins_keys, ins_vals,
+                            jnp.ones(ins_keys.shape, bool), axis, owner_hfn,
+                            op=dhash.insert, cap=capof(ins_keys.shape[0]))
+    d, ok_d = routed_update(d, del_keys, del_keys,
+                            jnp.ones(del_keys.shape, bool), axis, owner_hfn,
+                            op=dhash.delete, cap=capof(del_keys.shape[0]))
+    d = dhash.rebuild_step(d)
+    stats = jnp.stack([found.sum(dtype=I32), ok_i.sum(dtype=I32), ok_d.sum(dtype=I32)])
+    return d, (found, vals, stats)

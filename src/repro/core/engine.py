@@ -1,0 +1,96 @@
+"""Host-side engine: interleaves full-rate op batches with rebuild transitions.
+
+This is the SPMD rendering of the paper's concurrency: "worker threads"
+(batched lookup/insert/delete steps) run at full rate while a rebuild makes
+incremental progress — one extract or land transition per engine step, with
+the hazard window genuinely observable by the ops interleaved between the two
+halves.  The engine also owns the host-level epoch swap (rebuild_finish).
+
+Used by the benchmarks (continuous-rebuild mode reproduces the paper's Fig 2
+setup) and by the serving engine for live cache rehash.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dhash
+
+I32 = jnp.int32
+
+
+@dataclass
+class EngineStats:
+    steps: int = 0
+    ops: int = 0
+    hits: int = 0
+    rebuilds_completed: int = 0
+    rebuild_transitions: int = 0
+
+
+@dataclass
+class DHashEngine:
+    """Drives a DHashState: user op batches + background rebuild progress."""
+
+    state: dhash.DHashState
+    continuous_rebuild: bool = False   # paper Fig 2: rebuild forever
+    rebuild_seed: int = 1234
+    stats: EngineStats = field(default_factory=EngineStats)
+    _step_fn: Callable | None = None
+
+    def __post_init__(self):
+        # one fused jitted transition: ops + one rebuild transition
+        def fused(d, lk, ik, iv, dk, imask, dmask):
+            found, vals = dhash.lookup(d, lk)
+            d, ok_i = dhash.insert(d, ik, iv, imask)
+            d, ok_d = dhash.delete(d, dk, dmask)
+            d = dhash.rebuild_step(d)
+            return d, (found, vals, ok_i, ok_d)
+
+        self._step_fn = jax.jit(fused)
+
+    def step(self, lookup_keys, ins_keys, ins_vals, del_keys,
+             ins_mask=None, del_mask=None):
+        lk = jnp.asarray(lookup_keys, I32)
+        ik = jnp.asarray(ins_keys, I32)
+        iv = jnp.asarray(ins_vals, I32)
+        dk = jnp.asarray(del_keys, I32)
+        im = jnp.ones(ik.shape, bool) if ins_mask is None else jnp.asarray(ins_mask)
+        dm = jnp.ones(dk.shape, bool) if del_mask is None else jnp.asarray(del_mask)
+        self.state, out = self._step_fn(self.state, lk, ik, iv, dk, im, dm)
+        self.stats.steps += 1
+        self.stats.ops += lk.size + ik.size + dk.size
+        self._maybe_epoch()
+        return out
+
+    def request_rebuild(self, *, seed: int | None = None, new_table=None):
+        """Begin a live rebuild (fails like the paper's trylock if one is
+        already in progress)."""
+        if bool(jax.device_get(self.state.rebuilding)):
+            return False  # -EBUSY
+        self.state = dhash.rebuild_start(
+            self.state, new_table,
+            seed=self.rebuild_seed if seed is None else seed)
+        self.rebuild_seed += 1
+        return True
+
+    def _maybe_epoch(self):
+        # Poll completion; swap at the host level (the paper's lines 41-46).
+        if bool(jax.device_get(dhash.rebuild_done(self.state))):
+            self.state = dhash.rebuild_finish(self.state)
+            self.stats.rebuilds_completed += 1
+            if self.continuous_rebuild:
+                self.request_rebuild()
+        elif self.continuous_rebuild and not bool(jax.device_get(self.state.rebuilding)):
+            self.request_rebuild()
+
+    def lookup(self, keys):
+        f, v = jax.jit(dhash.lookup)(self.state, jnp.asarray(keys, I32))
+        return f, v
+
+    def count(self) -> int:
+        return int(jax.device_get(dhash.count_items(self.state)))

@@ -1,0 +1,91 @@
+"""Seeded hash-function families.
+
+The whole point of DHash is that the *hash function is data*: a rebuild swaps
+it live.  A ``HashFn`` is therefore a pytree (kind is static, seeds are
+arrays), and ``fresh(kind, rng)`` draws a brand-new function from the family.
+
+Three families, mirroring the paper's discussion of defending against
+collision attacks (§1):
+
+* ``multiply_shift`` — Dietzfelbinger's 2-universal scheme; cheapest.
+* ``mix32``          — murmur3 finalizer with seed folding; good avalanche.
+* ``tabulation``     — 3-independent tabulation hashing; strongest guarantees,
+                       one 4x256 u32 table of entropy.
+
+All arithmetic is uint32 (wrap-around is intentional); keys are int32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.struct_utils import pytree_dataclass
+
+HASH_KINDS = ("multiply_shift", "mix32", "tabulation")
+
+_U32 = jnp.uint32
+
+
+@pytree_dataclass(meta_fields=("kind",))
+class HashFn:
+    kind: str
+    seeds: jax.Array  # multiply_shift: [2] u32 (a|1, b); mix32: [2] u32; tabulation: [4,256] u32
+
+
+def fresh(kind: str, rng: np.random.Generator | int) -> HashFn:
+    """Draw a new hash function from family ``kind``."""
+    if isinstance(rng, (int, np.integer)):
+        rng = np.random.default_rng(int(rng))
+    if kind == "multiply_shift":
+        a = np.uint32(rng.integers(0, 2**32, dtype=np.uint32) | np.uint32(1))
+        b = np.uint32(rng.integers(0, 2**32, dtype=np.uint32))
+        seeds = jnp.asarray(np.stack([a, b]), dtype=_U32)
+    elif kind == "mix32":
+        seeds = jnp.asarray(rng.integers(0, 2**32, size=(2,), dtype=np.uint32), dtype=_U32)
+    elif kind == "tabulation":
+        seeds = jnp.asarray(rng.integers(0, 2**32, size=(4, 256), dtype=np.uint32), dtype=_U32)
+    else:  # pragma: no cover - guarded by HASH_KINDS
+        raise ValueError(f"unknown hash kind {kind!r}; choose from {HASH_KINDS}")
+    return HashFn(kind=kind, seeds=seeds)
+
+
+def _mix32(x: jax.Array, s0: jax.Array, s1: jax.Array) -> jax.Array:
+    x = x ^ s0
+    x = x ^ (x >> 16)
+    x = x * _U32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * _U32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x ^ s1
+
+
+def hash_u32(fn: HashFn, keys: jax.Array) -> jax.Array:
+    """Full-width u32 hash of int32 keys."""
+    k = keys.astype(jnp.int32).view(jnp.uint32) if keys.dtype != _U32 else keys
+    s = fn.seeds
+    if fn.kind == "multiply_shift":
+        return k * s[0] + s[1]
+    if fn.kind == "mix32":
+        return _mix32(k, s[0], s[1])
+    # tabulation
+    b0 = (k & _U32(0xFF)).astype(jnp.int32)
+    b1 = ((k >> 8) & _U32(0xFF)).astype(jnp.int32)
+    b2 = ((k >> 16) & _U32(0xFF)).astype(jnp.int32)
+    b3 = ((k >> 24) & _U32(0xFF)).astype(jnp.int32)
+    return s[0][b0] ^ s[1][b1] ^ s[2][b2] ^ s[3][b3]
+
+
+def bucket_of(fn: HashFn, keys: jax.Array, nbuckets: int) -> jax.Array:
+    """Bucket index in [0, nbuckets) as int32. Power-of-two sizes use a mask."""
+    h = hash_u32(fn, keys)
+    if nbuckets & (nbuckets - 1) == 0:
+        return (h & _U32(nbuckets - 1)).astype(jnp.int32)
+    return (h % _U32(nbuckets)).astype(jnp.int32)
+
+
+def hash_combine(h: jax.Array, x: jax.Array) -> jax.Array:
+    """Order-dependent u32 combine (for content hashing, e.g. prefix-cache block ids)."""
+    h = h.astype(_U32)
+    x = x.astype(jnp.int32).view(jnp.uint32)
+    return _mix32(x ^ (h * _U32(0x9E3779B1) + _U32(0x85EBCA77)), _U32(0x27D4EB2F), h)

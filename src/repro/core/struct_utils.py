@@ -1,0 +1,36 @@
+"""Pytree dataclass helpers.
+
+Every state object in this codebase is a frozen dataclass registered as a JAX
+pytree, with *array* fields as data and *configuration* fields as static
+aux-data (so jit caches key on them and Python control flow may branch on
+them).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TypeVar
+
+import jax
+
+_T = TypeVar("_T")
+
+
+def pytree_dataclass(cls: type[_T] | None = None, *, meta_fields: tuple[str, ...] = ()) -> type[_T]:
+    """Decorator: frozen dataclass registered as a pytree.
+
+    ``meta_fields`` become static aux-data; everything else is a leaf/subtree.
+    """
+
+    def wrap(c: type[_T]) -> type[_T]:
+        c = dataclasses.dataclass(frozen=True)(c)
+        data_fields = tuple(f.name for f in dataclasses.fields(c) if f.name not in meta_fields)
+        jax.tree_util.register_dataclass(c, data_fields=data_fields, meta_fields=meta_fields)
+        return c
+
+    if cls is None:
+        return wrap  # type: ignore[return-value]
+    return wrap(cls)
+
+
+def replace(obj: _T, **kw) -> _T:
+    return dataclasses.replace(obj, **kw)  # type: ignore[type-var]

@@ -1,0 +1,108 @@
+"""Deterministic, stateless, elastic synthetic LM data pipeline.
+
+Every batch is a pure function of (seed, step, shard_index) via counter-mode
+hashing — the strongest possible fault-tolerance/elasticity posture: resuming
+from a checkpointed step reproduces the exact token stream on any number of
+hosts, with no iterator state to persist.  Structure: documents with
+power-law-ish lengths separated by EOS, zipf-distributed token ids (so the
+hash-router and dedup workloads see realistic frequency skew — the paper's
+"burst" regime is reproduced by skewing the zipf exponent).
+
+The DHash tie-in: ``dedup_batch`` drops repeated documents using a DHash
+fingerprint table — a data-pipeline client of the paper's structure.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dhash, hashing
+
+I32 = jnp.int32
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    mean_doc_len: int = 512
+    zipf_a: float = 1.2          # token frequency skew
+    eos_id: int = 0
+
+
+def _u01(fn: hashing.HashFn, x: jax.Array) -> jax.Array:
+    return hashing.hash_u32(fn, x).astype(jnp.float32) / np.float32(2 ** 32)
+
+
+def synth_batch(cfg: DataConfig, step: int | jax.Array, *, shard: int = 0,
+                nshards: int = 1, mrope: bool = False) -> dict:
+    """Batch for (step, shard). Local batch = global_batch // nshards."""
+    b = cfg.global_batch // nshards
+    s = cfg.seq_len
+    fn = hashing.HashFn(kind="mix32",
+                        seeds=jnp.asarray([cfg.seed * 2654435761 % 2**32 or 1,
+                                           0x9E3779B9], jnp.uint32))
+    base = (jnp.asarray(step, I32) * cfg.global_batch + shard * b) * s
+    idx = base + jnp.arange(b, dtype=I32)[:, None] * s + jnp.arange(s, dtype=I32)[None, :]
+    # zipf-ish token ids: u^( -1/(a-1) ) rank transform, clipped to vocab
+    u = jnp.clip(_u01(fn, idx), 1e-6, 1.0)
+    rank = jnp.power(u, -1.0 / (cfg.zipf_a - 1.0))
+    tokens = jnp.clip(rank.astype(I32), 0, cfg.vocab_size - 1)
+    # document structure: EOS roughly every mean_doc_len tokens
+    is_eos = _u01(fn, idx + 0x5BD1E995) < (1.0 / cfg.mean_doc_len)
+    tokens = jnp.where(is_eos, cfg.eos_id, tokens)
+    labels = jnp.concatenate([tokens[:, 1:], jnp.full((b, 1), cfg.eos_id, I32)], 1)
+    batch = {"tokens": tokens, "labels": labels,
+             "loss_mask": jnp.ones((b, s), bool)}
+    if mrope:
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=I32), (b, s))
+        batch["positions"] = jnp.stack([pos, pos, pos])     # t/h/w streams
+    return batch
+
+
+def synth_embeds(cfg: DataConfig, step: int, d_model: int, *, shard: int = 0,
+                 nshards: int = 1, dtype=jnp.bfloat16) -> jax.Array:
+    """Stub modality frontend: precomputed frame/patch embeddings (spec'd
+    deterministic), for the [audio]/[vlm] architectures."""
+    b = cfg.global_batch // nshards
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step * 1000 + shard)
+    return (jax.random.normal(key, (b, cfg.seq_len, d_model), jnp.float32)
+            .astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# DHash client: streaming dedup
+# ---------------------------------------------------------------------------
+
+def doc_fingerprints(tokens: jax.Array, *, block: int = 128) -> jax.Array:
+    """Rolling content hash per block of tokens: [B, S//block] i32 (avoids
+    u32 sentinel collisions by clearing the sign bit)."""
+    b, s = tokens.shape
+    n = s // block
+    blocks = tokens[:, : n * block].reshape(b * n, block)
+    h = jnp.full((b * n,), jnp.uint32(0x811C9DC5))
+    for i in range(block):
+        h = hashing.hash_combine(h, blocks[:, i])
+    return (h & jnp.uint32(0x7FFFFFFF)).astype(I32).reshape(b, n)
+
+
+def dedup_batch(table: dhash.DHashState, tokens: jax.Array, *, block: int = 128):
+    """Mask out token blocks whose fingerprint was already seen; insert the
+    fresh ones. Returns (table', keep_mask [B, S])."""
+    fps = doc_fingerprints(tokens, block=block)            # [B, n]
+    flat = fps.reshape(-1)
+    seen, _ = dhash.lookup(table, flat)
+    table, _ = dhash.insert(table, flat, jnp.zeros_like(flat), ~seen)
+    keep = ~seen.reshape(fps.shape)                        # [B, n]
+    b, s = tokens.shape
+    n = s // block
+    keep_tok = jnp.repeat(keep, block, axis=1)
+    if n * block < s:
+        keep_tok = jnp.concatenate(
+            [keep_tok, jnp.ones((b, s - n * block), bool)], axis=1)
+    return table, keep_tok

@@ -1,0 +1,94 @@
+"""Jit'd wrappers around the Pallas kernels: padding, sorting, fallback.
+
+``probe_lookup`` is a drop-in accelerated equivalent of
+``ref.probe_lookup_ref`` (and of ``buckets.linear_lookup``'s inner loop):
+exact results for every query — tiles whose probe window escapes the
+VMEM-resident slab are recomputed by the jnp fallback (rare: requires > 8192
+contiguously occupied slots of hash skew).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.probe import QT, SLAB, probe_lookup_tiles
+
+I32 = jnp.int32
+
+
+def _pad_to(x: jax.Array, n: int, fill=0):
+    return jnp.pad(x, (0, n - x.shape[0]), constant_values=fill)
+
+
+@partial(jax.jit, static_argnames=("max_probes", "interpret"))
+def probe_lookup(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
+                 h0: jax.Array, qkey: jax.Array, *, max_probes: int = 64,
+                 interpret: bool = True):
+    """Batched linear-probe lookup. Returns (found[Q], val[Q]).
+
+    Args:
+      tkey/tval/tstate: table arrays [C].
+      h0: start slot per query (hash(key) % C), [Q].
+      qkey: query keys [Q].
+    """
+    c = tkey.shape[0]
+    q = qkey.shape[0]
+
+    # 1. pad the table with a wrapped copy so probes never wrap, then to a
+    #    SLAB multiple (padding slots are EMPTY => probes terminate there).
+    cpad = -(-(c + max_probes) // SLAB) * SLAB + SLAB  # +SLAB: block s+1 always valid
+    tk = _pad_to(jnp.concatenate([tkey, tkey[:max_probes]]), cpad)
+    tv = _pad_to(jnp.concatenate([tval, tval[:max_probes]]), cpad)
+    ts = _pad_to(jnp.concatenate([tstate, tstate[:max_probes]]), cpad)
+
+    # 2. sort queries by start slot so tiles hit contiguous slabs
+    order = jnp.argsort(h0)
+    h0s, qks = h0[order], qkey[order]
+    qpad = -(-q // QT) * QT
+    # pad queries with h0=0 sentinels (complete, harmless)
+    h0s = _pad_to(h0s, qpad)
+    qks = _pad_to(qks, qpad)
+
+    # 3. per-tile slab block: floor(min h0 of tile / SLAB)
+    tiles = qpad // QT
+    slab_base = (h0s.reshape(tiles, QT)[:, 0] // SLAB).astype(I32)
+    slab_base = jnp.minimum(slab_base, cpad // SLAB - 2)
+
+    found_s, val_s, complete_s = probe_lookup_tiles(
+        tk, tv, ts, h0s, qks, slab_base, max_probes=max_probes,
+        interpret=interpret)
+
+    # 4. fallback: recompute incomplete queries with the jnp oracle
+    #    (masked: cost is one extra pass only in the skew regime)
+    need = ~complete_s
+    fb_found, fb_val = ref.probe_lookup_ref(
+        tkey, tval, tstate, jnp.where(need, h0s % c, 0),
+        qks, max_probes)
+    found_s = jnp.where(need, fb_found, found_s)
+    val_s = jnp.where(need, fb_val, val_s)
+
+    # 5. unsort (order permutes [0, q); tail positions are padding)
+    found = jnp.zeros((q,), jnp.bool_).at[order].set(found_s[:q])
+    val = jnp.zeros((q,), I32).at[order].set(val_s[:q])
+    return found, val
+
+
+@partial(jax.jit, static_argnames=("max_probes", "interpret"))
+def ordered_lookup(old_tables, new_tables, hazard_key, hazard_val, hazard_live,
+                   h0_old, h0_new, qkey, *, max_probes: int = 64,
+                   interpret: bool = True):
+    """Fused rebuild-epoch lookup: old table -> hazard buffer -> new table
+    (the paper's Lemma 4.1 order), each table pass via the Pallas kernel."""
+    f_old, v_old = probe_lookup(*old_tables, h0_old, qkey,
+                                max_probes=max_probes, interpret=interpret)
+    eq = (qkey[:, None] == hazard_key[None, :]) & hazard_live[None, :]
+    f_hz = eq.any(-1)
+    v_hz = jnp.take(hazard_val, jnp.argmax(eq, axis=-1))
+    f_new, v_new = probe_lookup(*new_tables, h0_new, qkey,
+                                max_probes=max_probes, interpret=interpret)
+    found = f_old | f_hz | f_new
+    val = jnp.where(f_old, v_old, jnp.where(f_hz, v_hz, v_new))
+    return found, val

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels (the ground truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+I32 = jnp.int32
+EMPTY, LIVE, TOMB, MIGRATED = 0, 1, 2, 3
+
+
+def probe_lookup_ref(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
+                     h0: jax.Array, qkey: jax.Array, max_probes: int):
+    """Linear-probe lookup oracle.
+
+    Probes slots h0, h0+1, ... (mod C): stop on LIVE match (found) or EMPTY
+    (absent); skip TOMB/MIGRATED.  Returns (found[Q] bool, val[Q] i32).
+    """
+    c = tkey.shape[0]
+    q = qkey.shape[0]
+
+    def body(i, carry):
+        active, found, val = carry
+        pos = (h0 + i) % c
+        st = tstate[pos]
+        hit = active & (st == LIVE) & (tkey[pos] == qkey)
+        stop = active & (st == EMPTY)
+        val = jnp.where(hit, tval[pos], val)
+        found = found | hit
+        active = active & ~hit & ~stop
+        return active, found, val
+
+    init = (jnp.ones((q,), bool), jnp.zeros((q,), bool), jnp.zeros((q,), I32))
+    _, found, val = jax.lax.fori_loop(0, max_probes, body, init)
+    return found, val
+
+
+def ordered_lookup_ref(old_t, new_t, hazard_key, hazard_val, hazard_live,
+                       h0_old, h0_new, qkey, max_probes: int):
+    """The paper's ordered three-way check: old -> hazard -> new."""
+    f_old, v_old = probe_lookup_ref(*old_t, h0_old, qkey, max_probes)
+    eq = (qkey[:, None] == hazard_key[None, :]) & hazard_live[None, :]
+    f_hz = eq.any(-1)
+    v_hz = jnp.take(hazard_val, jnp.argmax(eq, axis=-1))
+    f_new, v_new = probe_lookup_ref(*new_t, h0_new, qkey, max_probes)
+    found = f_old | f_hz | f_new
+    val = jnp.where(f_old, v_old, jnp.where(f_hz, v_hz, v_new))
+    return found, val

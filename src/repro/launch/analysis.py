@@ -1,0 +1,133 @@
+"""Compiled-artifact analysis: collective bytes from HLO text + the
+three-term roofline (TPU v5e constants).
+
+cost_analysis() has no collective accounting, so we parse the post-SPMD
+optimized HLO and sum the result-shape bytes of every collective op
+(all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute).
+Result-shape bytes is the standard first-order proxy for wire bytes
+(exact for all-reduce ring cost within 2x, exact for all-gather output).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+
+# ---- TPU v5e hardware constants (per chip) --------------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (spec-provided figure)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum result bytes + counts per collective kind."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        for op in _COLL_OPS:
+            # "  %x = bf16[...] all-gather(...)" / fusion lines excluded
+            m = re.search(rf"=\s*((?:\([^)]*\))|(?:\S+))\s+{op}(-start|-done)?\(", line)
+            if m:
+                if m.group(2) == "-done":   # counted at -start
+                    continue
+                out[op]["count"] += 1
+                out[op]["bytes"] += _shape_bytes(m.group(1))
+                break
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+@dataclass
+class Roofline:
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    model_flops: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Roofline step time = max term (perfect overlap assumption)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def mfu(self) -> float:
+        """MODEL_FLOPS utilization at the roofline step time."""
+        if self.model_flops and self.step_time > 0:
+            return self.model_flops / (self.chips * PEAK_FLOPS * self.step_time)
+        return 0.0
+
+    @property
+    def useful_flop_frac(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d |= {"t_compute": self.t_compute, "t_memory": self.t_memory,
+              "t_collective": self.t_collective, "bottleneck": self.bottleneck,
+              "step_time": self.step_time, "mfu": self.mfu,
+              "useful_flop_frac": self.useful_flop_frac}
+        return d
+
+
+def cost_of(compiled) -> tuple[float, float]:
+    """(flops, bytes) from compiled.cost_analysis(), tolerant of backends."""
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0))
+    except Exception:
+        return 0.0, 0.0
+
+
+def memory_of(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        keys = ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes")
+        return {k: int(getattr(ma, k)) for k in keys if hasattr(ma, k)}
+    except Exception:
+        return {}

@@ -1,0 +1,158 @@
+"""The assigned input-shape matrix and per-cell ShapeDtypeStruct builders.
+
+Every (arch x shape) cell resolves here to either a (step_fn, abstract
+inputs, shardings) triple or an explicit skip with the DESIGN.md reason.
+Nothing in this module allocates device memory — inputs are
+jax.ShapeDtypeStruct stand-ins.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import sharding as shard_lib
+from repro.optim.optimizer import OptConfig
+
+I32 = jnp.int32
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# archs allowed to run long_500k (sub-quadratic sequence mixing)
+_LONG_OK = {"zamba2-1.2b", "rwkv6-3b"}
+
+
+def applicability(cfg: ArchConfig, shape: str) -> str | None:
+    """None if runnable, else the skip reason (recorded in EXPERIMENTS.md)."""
+    sp = SHAPES[shape]
+    if cfg.encoder_only and sp.kind == "decode":
+        return "encoder-only arch: no decode step"
+    if shape == "long_500k" and cfg.arch_id not in _LONG_OK:
+        return "full-attention arch: long_500k needs sub-quadratic mixing (DESIGN.md)"
+    return None
+
+
+def _dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _sized(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _ns(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+def batch_struct(cfg: ArchConfig, sp: ShapeSpec, mesh: Mesh):
+    """(abstract batch, batch shardings) for a train/prefill step."""
+    dp = _dp_axes(mesh)
+    dpspec = dp if len(dp) > 1 else dp[0]
+    sizes = _sized(mesh)
+    ndp = 1
+    for a in dp:
+        ndp *= sizes[a]
+    b, s = sp.global_batch, sp.seq_len
+    shard_b = b % ndp == 0
+    bspec = dpspec if shard_b else None
+    # batch=1 long-context: shard the sequence axis instead (SP)
+    sspec = None if shard_b else "data"
+    batch = {"tokens": jax.ShapeDtypeStruct((b, s), I32),
+             "labels": jax.ShapeDtypeStruct((b, s), I32)}
+    shards = {"tokens": _ns(mesh, bspec, sspec),
+              "labels": _ns(mesh, bspec, sspec)}
+    if cfg.frontend == "stub_embed":
+        batch["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                               jnp.dtype(cfg.dtype))
+        shards["embeds"] = _ns(mesh, bspec, sspec, None)
+    if cfg.mrope_sections is not None:
+        batch["positions"] = jax.ShapeDtypeStruct((3, b, s), I32)
+        shards["positions"] = _ns(mesh, None, bspec, sspec)
+    return batch, shards
+
+
+def state_struct(cfg: ArchConfig, mesh: Mesh, opt_cfg: OptConfig):
+    """Abstract train state + shardings (params/opt via the rule table)."""
+    from repro.train import train_step as ts
+    state = jax.eval_shape(partial(ts.init_state, cfg, opt_cfg),
+                           jax.random.PRNGKey(0))
+    pshard = shard_lib.param_shardings(state["params"], mesh, fsdp=cfg.fsdp)
+    oshard = {
+        "m": jax.tree_util.tree_map(
+            lambda s: s, shard_lib.param_shardings(state["opt"]["m"], mesh,
+                                                   fsdp=cfg.fsdp)),
+        "v": shard_lib.param_shardings(state["opt"]["v"], mesh, fsdp=cfg.fsdp),
+        "step": _ns(mesh),
+    }
+    shards = {"params": pshard, "opt": oshard}
+    if "router_table" in state:
+        shards["router_table"] = jax.tree_util.tree_map(
+            lambda _: _ns(mesh), state["router_table"])
+    return state, shards
+
+
+def cache_struct(cfg: ArchConfig, sp: ShapeSpec, mesh: Mesh):
+    """Abstract decode cache + shardings. Dense stacked cache; the KV seq
+    axis shards over 'data' when the batch axis cannot (long_500k)."""
+    from repro.models import transformer
+    dp = _dp_axes(mesh)
+    dpspec = dp if len(dp) > 1 else dp[0]
+    sizes = _sized(mesh)
+    ndp = 1
+    for a in dp:
+        ndp *= sizes[a]
+    b = sp.global_batch
+    shard_b = b % ndp == 0
+    bspec = dpspec if shard_b else None
+    sspec = None if shard_b else "data"
+    nm = sizes.get("model", 1)
+    kvspec = "model" if cfg.n_kv_heads % nm == 0 else None
+    cache = jax.eval_shape(partial(transformer.init_cache, cfg, b, sp.seq_len))
+    shards = {}
+    for k, leaf in cache.items():
+        if k in ("k", "v"):
+            shards[k] = _ns(mesh, None, bspec, sspec, kvspec, None)
+        elif k == "len":
+            shards[k] = _ns(mesh, bspec)
+        elif k in ("ssm_h", "ssm_conv", "wkv", "tm_prev", "cm_prev"):
+            shards[k] = _ns(mesh, None, bspec, *([None] * (leaf.ndim - 2)))
+        else:
+            shards[k] = _ns(mesh, *([None] * leaf.ndim))
+    return cache, shards
+
+
+def decode_inputs(cfg: ArchConfig, sp: ShapeSpec, mesh: Mesh):
+    dp = _dp_axes(mesh)
+    dpspec = dp if len(dp) > 1 else dp[0]
+    sizes = _sized(mesh)
+    ndp = 1
+    for a in dp:
+        ndp *= sizes[a]
+    b = sp.global_batch
+    bspec = dpspec if b % ndp == 0 else None
+    if cfg.frontend == "stub_embed":
+        tok = jax.ShapeDtypeStruct((b, 1, cfg.d_model), jnp.dtype(cfg.dtype))
+        tsh = _ns(mesh, bspec, None, None)
+    else:
+        tok = jax.ShapeDtypeStruct((b, 1), I32)
+        tsh = _ns(mesh, bspec, None)
+    return tok, tsh

@@ -1,0 +1,109 @@
+"""Blockwise GQA attention: one implementation covering every arch variant.
+
+Variants are driven by (possibly per-layer traced) scalars so heterogeneous
+stacks (gemma2/3 local:global alternation) lower as ONE scanned layer body:
+
+* ``window``  — 0 = global; >0 = sliding-window (traced per-layer scalar)
+* ``softcap`` — gemma2 attn-logit tanh cap (0 = off)
+* ``causal``  — static (False for hubert's bidirectional encoder)
+* GQA         — n_kv_heads <= n_heads, query heads grouped over kv heads
+
+Memory safety: queries are processed in chunks of ``chunk`` via lax.scan, so
+peak score memory is [B, Hkv, G, chunk, S_k] instead of S_q x S_k — required
+for the 32k-prefill shapes (a dense 32k x 32k score tensor would be ~4 GiB
+per head).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F32 = jnp.float32
+NEG_INF = -2.0e38
+
+
+def _mask(qp, kp, *, causal: bool, window) -> jax.Array:
+    """qp: [..., C], kp: [..., Sk] -> bool [..., C, Sk]. window traced ok."""
+    d = qp[..., :, None] - kp[..., None, :]
+    m = jnp.ones(d.shape, bool)
+    if causal:
+        m &= d >= 0
+    m &= (window <= 0) | (d < window)      # sliding window (both sides capped
+    if not causal:                          # for bidirectional local attn)
+        m &= (window <= 0) | (d > -window)
+    return m
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              q_pos: jax.Array, k_pos: jax.Array, causal: bool = True,
+              window=0, softcap: float = 0.0, chunk: int = 1024) -> jax.Array:
+    """q: [B,Sq,Hq,hd], k/v: [B,Sk,Hkv,hd], q_pos: [B,Sq], k_pos: [B,Sk]."""
+    b, sq, hq, hd = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(b, sq, hkv, g, hd)
+
+    def one_chunk(qc, qpc):
+        # qc: [B,C,Hkv,G,hd] -> scores [B,Hkv,G,C,Sk]
+        s = jnp.einsum("bchgd,bshd->bhgcs", qc, k).astype(F32) * scale
+        if softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap
+        m = _mask(qpc, k_pos, causal=causal, window=window)  # [B,C,Sk]
+        s = jnp.where(m[:, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        # fully-masked rows (can happen with windows) -> zero out
+        p = jnp.where(m[:, None, None].any(-1, keepdims=True), p, 0.0)
+        return jnp.einsum("bhgcs,bshd->bchgd", p.astype(v.dtype), v)
+
+    if sq <= chunk:
+        out = one_chunk(qg, q_pos)
+    else:
+        assert sq % chunk == 0, (sq, chunk)
+        n = sq // chunk
+        qcs = qg.reshape(b, n, chunk, hkv, g, hd).swapaxes(0, 1)
+        qps = q_pos.reshape(b, n, chunk).swapaxes(0, 1)
+        _, outs = jax.lax.scan(lambda c, inp: (c, one_chunk(*inp)), None, (qcs, qps))
+        out = outs.swapaxes(0, 1).reshape(b, sq, hkv, g, hd)
+    return out.reshape(b, sq, hq, hd)
+
+
+# ---------------------------------------------------------------------------
+# block-level wrappers (projection weights live in transformer.py's stacks)
+# ---------------------------------------------------------------------------
+
+def project_qkv(x, wq, wk, wv, *, qk_norm_scale=None):
+    """x: [B,S,D]; wq: [D,Hq,hd]; wk/wv: [D,Hkv,hd]."""
+    q = jnp.einsum("bsd,dhk->bshk", x, wq)
+    k = jnp.einsum("bsd,dhk->bshk", x, wk)
+    v = jnp.einsum("bsd,dhk->bshk", x, wv)
+    if qk_norm_scale is not None:  # qwen3: per-head RMS on q and k
+        qs, ks = qk_norm_scale
+        from repro.models.layers import rms_norm
+        q = rms_norm(q, qs)
+        k = rms_norm(k, ks)
+    return q, k, v
+
+
+def decode_attention(q1, k_cache, v_cache, cache_len, *, window=0,
+                     softcap: float = 0.0) -> jax.Array:
+    """One-token decode: q1 [B,1,Hq,hd] vs cache [B,Smax,Hkv,hd].
+
+    Entries at position >= cache_len are masked; sliding windows mask
+    positions older than cache_len - window."""
+    b, smax, hkv, hd = k_cache.shape
+    hq = q1.shape[2]
+    g = hq // hkv
+    scale = 1.0 / np.sqrt(hd)
+    qg = q1.reshape(b, 1, hkv, g, hd)
+    s = jnp.einsum("bchgd,bshd->bhgcs", qg, k_cache).astype(F32) * scale
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    pos = jnp.arange(smax, dtype=jnp.int32)[None, :]          # [1, Smax]
+    valid = pos < cache_len[:, None]
+    valid &= (window <= 0) | (pos >= cache_len[:, None] - window)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bhgcs,bshd->bchgd", p, v_cache)
+    return out.reshape(b, 1, hq, hd)

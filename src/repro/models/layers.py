@@ -1,0 +1,122 @@
+"""Shared neural layers: norms, rotary embeddings (incl. M-RoPE), MLPs,
+embeddings, and memory-safe chunked cross-entropy."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F32 = jnp.float32
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(F32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(F32))
+    return y.astype(dt)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(F32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta) -> jax.Array:
+    """x: [..., S, H, hd]; positions: [..., S] (ints). theta may be a traced
+    scalar (per-layer theta arrays for gemma3 local/global)."""
+    hd = x.shape[-1]
+    exp = jnp.arange(0, hd, 2, dtype=F32) / hd
+    freqs = 1.0 / (theta ** exp)                       # [hd/2]
+    ang = positions[..., None].astype(F32) * freqs      # [..., S, hd/2]
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]  # [..., S, 1, hd/2]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: tuple[int, int, int]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: positions [3, ..., S] (t/h/w streams);
+    ``sections`` split the rotary dim (pairs) among the three streams."""
+    hd = x.shape[-1]
+    exp = jnp.arange(0, hd, 2, dtype=F32) / hd
+    freqs = 1.0 / (theta ** exp)                       # [hd/2]
+    ang = positions[..., None].astype(F32) * freqs      # [3, ..., S, hd/2]
+    # select stream per frequency-pair according to sections
+    sec = np.zeros((hd // 2,), np.int32)
+    s0, s1, _ = sections
+    sec[s0:s0 + s1] = 1
+    sec[s0 + s1:] = 2
+    idx = jnp.asarray(sec)
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang, 0, -1), idx[(None,) * (ang.ndim - 2) + (..., None)], axis=-1
+    )[..., 0]                                           # [..., S, hd/2]
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings and loss
+# ---------------------------------------------------------------------------
+
+def embed(tokens: jax.Array, table: jax.Array, *, scale: bool) -> jax.Array:
+    x = jnp.take(table, tokens, axis=0)
+    if scale:
+        x = x * jnp.asarray(np.sqrt(table.shape[1]), x.dtype)
+    return x
+
+
+def chunked_cross_entropy(x: jax.Array, unembed: jax.Array, targets: jax.Array,
+                          *, chunk: int, logit_softcap: float = 0.0,
+                          mask: jax.Array | None = None) -> jax.Array:
+    """Next-token CE without materializing [B, S, V] logits: scan over
+    sequence chunks; logits per chunk are vocab-shardable.
+
+    x: [B, S, D]; unembed: [D, V]; targets: [B, S] int32.
+    """
+    b, s, d = x.shape
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    xc = x.reshape(b, n, chunk, d).swapaxes(0, 1)        # [n, B, c, D]
+    tc = targets.reshape(b, n, chunk).swapaxes(0, 1)     # [n, B, c]
+    mc = (jnp.ones((b, s), bool) if mask is None else mask)
+    mc = mc.reshape(b, n, chunk).swapaxes(0, 1)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        xx, tt, mm = inp
+        from repro.models.sharding import constrain
+        logits = jnp.einsum("bcd,dv->bcv", xx, unembed).astype(F32)
+        logits = constrain(logits, "dp", None, "tp")
+        if logit_softcap > 0:
+            logits = jnp.tanh(logits / logit_softcap) * logit_softcap
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # mask-select instead of take_along_axis: a vocab-sharded gather
+        # would force GSPMD to all-gather full-vocab cotangents in bwd
+        # (measured: f32[B,c,V] AGs in the rwkv6 §Perf cell); the iota
+        # compare + partial sum shards cleanly.
+        vio = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        gold = jnp.where(vio == tt[..., None], logits, 0.0).sum(-1)
+        nll = jnp.where(mm, lse - gold, 0.0)
+        return (tot + nll.sum(), cnt + mm.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), F32), jnp.zeros((), jnp.int32)),
+                                 (xc, tc, mc))
+    return tot / jnp.maximum(cnt, 1).astype(F32)

@@ -1,0 +1,43 @@
+"""Loss and logits heads on top of the transformer assembly."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer
+from repro.models.layers import chunked_cross_entropy
+
+F32 = jnp.float32
+
+
+def loss_fn(params: dict, cfg: ArchConfig, batch: dict, router_table=None):
+    """Next-token (or masked-prediction for encoder-only) CE loss.
+
+    batch: tokens/embeds [+positions], labels [B,S] (already shifted),
+    optional loss_mask [B,S].
+    Returns (loss, metrics).
+    """
+    hidden, aux = transformer.forward_train(params, cfg, batch, router_table)
+    w = transformer.unembed_matrix(params, cfg)
+    loss = chunked_cross_entropy(
+        hidden, w, batch["labels"],
+        chunk=min(cfg.loss_chunk, hidden.shape[1]),
+        logit_softcap=cfg.logit_softcap,
+        mask=batch.get("loss_mask"))
+    total = loss + 0.01 * aux["moe_aux"]
+    metrics = {"ce": loss, "moe_aux": aux["moe_aux"],
+               "expert_load": aux["expert_load"]}
+    return total, metrics
+
+
+def decode_logits(params: dict, cfg: ArchConfig, tokens1, cache: dict,
+                  router_table=None):
+    """One decode step -> (logits [B,V], cache')."""
+    hidden, cache = transformer.forward_decode(params, cfg, tokens1, cache,
+                                               router_table)
+    w = transformer.unembed_matrix(params, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", hidden, w).astype(F32)
+    if cfg.logit_softcap > 0:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits[:, 0], cache

@@ -1,0 +1,130 @@
+"""Mixture-of-Experts: top-k learned routing and DHash-backed hash routing.
+
+The DHash integration (DESIGN.md §3.1): hash routing assigns token->expert by
+seeded hashes (Roller et al. hash layers).  Token-frequency drift makes
+experts hot — the paper's hash-collision scenario — so the router consults a
+DHash *override table* first: ``lookup(token_id)`` returning a packed expert
+assignment.  Rebalancing inserts overrides / rebuilds the table with a new
+seed **live**, while training or serving steps keep routing at full rate;
+the rebuild never blocks a step (the paper's non-blocking property).
+
+Dispatch is capacity-based gather/scatter (sparse compute: FLOPs scale with
+top_k, not n_experts), EP-shardable on the expert axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dhash, hashing
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def topk_route(x: jax.Array, w_router: jax.Array, k: int):
+    """x: [T,D] -> (expert_id [T,k], gate [T,k], aux_loss scalar)."""
+    logits = jnp.einsum("td,de->te", x, w_router).astype(F32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert_id = jax.lax.top_k(probs, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    e = w_router.shape[1]
+    # Switch-style load-balance loss
+    frac_tokens = jnp.mean(jax.nn.one_hot(expert_id[:, 0], e, dtype=F32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return expert_id, gate.astype(x.dtype), aux
+
+
+def hash_route(token_ids: jax.Array, table: dhash.DHashState | None,
+               seeds: jax.Array, n_experts: int, k: int):
+    """DHash-backed hash routing. token_ids: [T] int32.
+
+    Default: expert_j = mix32(token, seed_j) % E.  The override table maps
+    token -> packed assignment (15 bits per slot, k <= 2).  aux = 0.
+    """
+    outs = []
+    for j in range(k):
+        fn = hashing.HashFn(kind="mix32", seeds=seeds[j])
+        outs.append((hashing.hash_u32(fn, token_ids) % np.uint32(n_experts)).astype(I32))
+    expert_id = jnp.stack(outs, axis=-1)                  # [T,k]
+    if table is not None:
+        found, packed = dhash.lookup(table, token_ids)
+        ov = jnp.stack([packed & 0x7FFF, (packed >> 15) & 0x7FFF], axis=-1)[:, :k]
+        expert_id = jnp.where(found[:, None], ov.astype(I32), expert_id)
+    gate = jnp.full(expert_id.shape, 1.0 / k, F32)
+    return expert_id, gate, jnp.zeros((), F32)
+
+
+def pack_assignment(e1: jax.Array, e2: jax.Array | None = None) -> jax.Array:
+    """Pack up to two expert ids into the DHash value payload."""
+    v = e1.astype(I32)
+    if e2 is not None:
+        v = v | (e2.astype(I32) << 15)
+    return v
+
+
+def moe_ffn(x: jax.Array, expert_id: jax.Array, gate: jax.Array,
+            wg: jax.Array, wu: jax.Array, wd: jax.Array,
+            *, capacity_factor: float = 1.25):
+    """Capacity-based sparse expert FFN, batch-sharding-preserving.
+
+    x: [B,S,D]; expert_id/gate: [B,S,K]; wg/wu: [E,D,F]; wd: [E,F,D].
+
+    Dispatch positions are computed PER BATCH ROW (cumsum along the token
+    axis only): a global cumsum over a flattened [B*S*K] axis would create a
+    cross-shard sequential dependency and force GSPMD to replicate the whole
+    block (observed: arctic attention lost its batch sharding).  Row-local
+    capacity keeps the batch axis sharded end-to-end; the [B,E,cap,*]
+    dispatch tensors reshard batch->expert exactly where EP's all-to-all
+    belongs.  Tokens over per-row capacity drop (standard).
+    """
+    b, s, d = x.shape
+    k = expert_id.shape[-1]
+    e = wg.shape[0]
+    cap = int(np.ceil(s * k / e * capacity_factor))
+    t = s * k
+    ecap = e * cap
+    flat_e = expert_id.reshape(b, t)                      # [B,T]
+    tok = jnp.broadcast_to(jnp.arange(s, dtype=I32)[:, None], (s, k)).reshape(t)
+
+    # sort assignments by expert per row; rank within expert group
+    order = jnp.argsort(flat_e, axis=1, stable=True)      # [B,T]
+    se = jnp.take_along_axis(flat_e, order, axis=1)
+    ar = jnp.broadcast_to(jnp.arange(t, dtype=I32), (b, t))
+    run_start = jnp.concatenate(
+        [jnp.ones((b, 1), bool), se[:, 1:] != se[:, :-1]], axis=1)
+    start_idx = jax.lax.cummax(jnp.where(run_start, ar, 0), axis=1)
+    rank = ar - start_idx                                 # [B,T]
+    keep = rank < cap
+    slot = jnp.where(keep, se * cap + rank, ecap)         # [B,T] in sorted order
+
+    # small int scatters only: slot -> token (for dispatch gather) and
+    # assignment -> slot (for combine gather)
+    bidx = jnp.arange(b, dtype=I32)[:, None]
+    slot_tok = jnp.full((b, ecap + 1), t, I32).at[bidx, slot].set(
+        order, mode="drop")                               # [B,Ecap+1]
+    asg_slot = jnp.full((b, t), ecap, I32).at[bidx, order].set(
+        slot, mode="drop")                                # [B,T]
+
+    # heavy movement is gathers (batch sharding preserved)
+    from repro.models.sharding import constrain
+    src = jnp.take_along_axis(
+        jnp.concatenate([x[:, tok], jnp.zeros((b, 1, d), x.dtype)], axis=1),
+        slot_tok[:, :ecap, None], axis=1)                 # [B,Ecap,D]
+    disp = constrain(src.reshape(b, e, cap, d), "dp", "tp", None, None)
+    h = jnp.einsum("becd,edf->becf", disp, wg)
+    u = jnp.einsum("becd,edf->becf", disp, wu)
+    h = jax.nn.silu(h.astype(F32)).astype(x.dtype) * u
+    y_e = jnp.einsum("becf,efd->becd", h, wd)             # [B,E,cap,D]
+    y_e = constrain(y_e, "dp", "tp", None, None)
+    y_flat = jnp.concatenate(
+        [y_e.reshape(b, ecap, d), jnp.zeros((b, 1, d), x.dtype)], axis=1)
+    contrib = jnp.take_along_axis(y_flat, asg_slot[..., None], axis=1)  # [B,T,D]
+    w = gate.reshape(b, t, 1).astype(x.dtype)
+    contrib = contrib * w
+    out = contrib.reshape(b, s, k, d).sum(axis=2)
+    load = jnp.zeros((e + 1,), I32).at[jnp.where(keep, se, e)].add(
+        1, mode="drop")[:e]
+    return out, load

@@ -1,0 +1,155 @@
+"""Declarative sharding rules: parameter-name patterns -> mesh axes.
+
+Rules are (negative_dim, mesh_axis) preferences applied with divisibility
+checks, so the same table serves stacked ([L, ...]) and unstacked leaves and
+degrades gracefully (e.g. 8 kv heads on a 16-way model axis -> replicate
+instead of invalid sharding).  ``fsdp=True`` adds a "data"-axis shard on a
+second dimension of the big matrices (GSPMD then emits the FSDP all-gathers).
+"""
+from __future__ import annotations
+
+import re
+from contextlib import contextmanager
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# activation-sharding context
+#
+# FSDP-style weight sharding gives GSPMD a choice: all-gather the weights
+# (correct) or reshard the activations (catastrophic - observed: arctic
+# replicated its whole attention).  Explicit activation constraints at layer
+# boundaries remove the bad option.  The context is installed by the step
+# builders (dryrun/train/serve) around tracing; without it `constrain` is a
+# no-op so smoke tests and single-device runs are untouched.
+# ---------------------------------------------------------------------------
+
+_CTX: dict[str, Any] = {"mesh": None, "dp": None, "tp": None}
+
+
+@contextmanager
+def activation_ctx(mesh: Mesh, *, tp: str = "model"):
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    old = dict(_CTX)
+    _CTX.update(mesh=mesh, dp=dp, tp=tp if tp in mesh.axis_names else None)
+    try:
+        yield
+    finally:
+        _CTX.update(old)
+
+
+def constrain(x: jax.Array, *pattern: str | None) -> jax.Array:
+    """pattern entries: "dp" | "tp" | None per axis.  Axes whose size does
+    not divide the mesh axis degrade to None (e.g. 8 kv heads on 16-way TP).
+    """
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec = []
+    for dim, p in zip(x.shape, pattern):
+        if p == "dp" and _CTX["dp"]:
+            n = 1
+            for a in _CTX["dp"]:
+                n *= sizes[a]
+            if dim % n == 0:
+                spec.append(_CTX["dp"] if len(_CTX["dp"]) > 1 else _CTX["dp"][0])
+            else:
+                spec.append(None)
+        elif p == "tp" and _CTX["tp"]:
+            spec.append(_CTX["tp"] if dim % sizes[_CTX["tp"]] == 0 else None)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+# name-pattern -> list of (neg_dim, axis_kind) preferences; axis_kind in
+# {"model", "fsdp"} ("fsdp" entries only apply when cfg.fsdp)
+_RULES: list[tuple[str, list[tuple[int, str]]]] = [
+    (r"embed$",            [(-2, "model"), (-1, "fsdp")]),
+    (r"unembed$",          [(-1, "model"), (-2, "fsdp")]),
+    (r"\bwq$|\bwk$|\bwv$|\bwqkv$", [(-2, "model"), (-3, "fsdp")]),
+    (r"\bwgu$",            [(-1, "model"), (-2, "fsdp")]),
+    (r"\bwo$",             [(-3, "model"), (-1, "fsdp")]),
+    (r"we_g$|we_u$",       [(-3, "model"), (-1, "fsdp")]),
+    (r"we_d$",             [(-3, "model"), (-2, "fsdp")]),
+    (r"\bwg$|\bwu$|c_k$",  [(-1, "model"), (-2, "fsdp")]),
+    (r"\bwd$|c_v$",        [(-2, "model"), (-1, "fsdp")]),
+    (r"router$",           [(-1, "model")]),
+    (r"in_proj$",          [(-1, "model"), (-2, "fsdp")]),
+    (r"out_proj$",         [(-2, "model"), (-1, "fsdp")]),
+    (r"w_r$|w_k$|w_v$|w_g$|w_o$|c_r$|w_rkvg$", [(-1, "model"), (-2, "fsdp")]),
+    (r"conv_w$",           [(-1, "model")]),
+]
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def leaf_spec(path, shape: tuple[int, ...], *, model_axis: str = "model",
+              dp_axes: tuple[str, ...] = ("data",), fsdp: bool = False,
+              axis_sizes: dict[str, int] | None = None) -> P:
+    """PartitionSpec for one parameter leaf."""
+    name = _path_str(path)
+    ndim = len(shape)
+    spec: list[Any] = [None] * ndim
+    sizes = axis_sizes or {}
+
+    def ax_size(kind):
+        if kind == "model":
+            return sizes.get(model_axis, 1), model_axis
+        total = 1
+        for a in dp_axes:
+            total *= sizes.get(a, 1)
+        return total, (dp_axes if len(dp_axes) > 1 else dp_axes[0])
+
+    for pat, prefs in _RULES:
+        if re.search(pat, name):
+            for neg_dim, kind in prefs:
+                if kind == "fsdp" and not fsdp:
+                    continue
+                dim = ndim + neg_dim
+                if dim < 0 or spec[dim] is not None:
+                    continue
+                n, axis = ax_size(kind)
+                if n > 1 and shape[dim] % n == 0 and shape[dim] >= n:
+                    spec[dim] = axis
+            break
+    return P(*spec)
+
+
+def param_shardings(params_shape: Any, mesh: Mesh, *, fsdp: bool = False,
+                    dp_axes: tuple[str, ...] | None = None) -> Any:
+    """NamedShardings for a (shape-)pytree of parameters."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if dp_axes is None:
+        dp_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, leaf_spec(path, leaf.shape, dp_axes=dp_axes, fsdp=fsdp,
+                            axis_sizes=sizes)),
+        params_shape)
+
+
+def batch_spec(mesh: Mesh, ndim: int, *, seq_axis: int | None = None,
+               batch_sharded: bool = True) -> P:
+    """Activations/batch: leading dim over the DP axes; optionally a sequence
+    axis over 'data' (long-context single-sequence shapes)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = tuple(a for a in ("pod", "data") if a in sizes)
+    spec: list[Any] = [None] * ndim
+    if batch_sharded:
+        spec[0] = dp if len(dp) > 1 else dp[0]
+    if seq_axis is not None:
+        spec[seq_axis] = "data" if batch_sharded is False else None
+    return P(*spec)
+
+
+def opt_state_shardings(param_shardings_tree, params_shape, mesh: Mesh) -> Any:
+    """ZeRO-1: moments shard like their parameter (FSDP'd params already carry
+    a data-axis shard; replicated params keep their spec — documented)."""
+    return param_shardings_tree

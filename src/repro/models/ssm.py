@@ -1,0 +1,142 @@
+"""Mamba2 (SSD) block: chunked train path (MXU-friendly matmuls) and O(1)
+single-token decode, in the style of the minimal SSD reference.
+
+Chunking keeps all decay terms as exp(L_i - L_j) with i >= j (<= 1, fp32
+safe); cross-chunk state is carried by a lax.scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import rms_norm
+
+F32 = jnp.float32
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: [B,S,C], w: [K,C]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+
+
+def ssd_chunked(xh: jax.Array, dt: jax.Array, a_log: jax.Array,
+                bmat: jax.Array, cmat: jax.Array, *, chunk: int = 128,
+                h0: jax.Array | None = None):
+    """SSD scan.
+
+    xh:   [B,S,NH,HP]   per-head inputs
+    dt:   [B,S,NH]      softplus'd step sizes
+    a_log:[NH]          A = -exp(a_log)
+    bmat: [B,S,DS]      input projection (n_groups=1, shared across heads)
+    cmat: [B,S,DS]      output projection
+    Returns y [B,S,NH,HP] and final state [B,NH,DS,HP].
+    """
+    b, s, nh, hp = xh.shape
+    ds = bmat.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    a = -jnp.exp(a_log.astype(F32))                       # [NH]
+    lam = dt.astype(F32) * a                              # [B,S,NH] log-decay (<=0)
+
+    # reshape to chunks
+    def ck(t):
+        return t.reshape(b, n, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xh_c, dt_c, lam_c = ck(xh), ck(dt.astype(F32)), ck(lam)
+    b_c, c_c = ck(bmat), ck(cmat)
+
+    cum = jnp.cumsum(lam_c, axis=2)                       # [n,B,C,NH] inclusive
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, ds, hp), F32)
+
+    def body(h, inp):
+        xc, dtc, lamc, bc, cc, cumc = inp                  # leading dim B
+        # intra-chunk: scores[i,j] = (C_i . B_j) * exp(L_i - L_j) * dt_j, i>=j
+        cb = jnp.einsum("bis,bjs->bij", cc.astype(F32), bc.astype(F32))  # [B,C,C]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        diff = cumc[:, :, None, :] - cumc[:, None, :, :]                 # [B,C,C,NH]
+        # mask BEFORE exp: the upper triangle would be exp(+large) -> inf,
+        # whose cotangent is NaN even under a post-hoc where
+        dec = jnp.exp(jnp.where(mask[None, :, :, None], diff, -1e30))
+        w = cb[..., None] * dec * dtc[:, None, :, :]                     # [B,i,j,NH]
+        y = jnp.einsum("bijh,bjhp->bihp", w, xc.astype(F32))
+        # from previous state: y_i += exp(L_i) * C_i @ h
+        dec0 = jnp.exp(cumc)                                             # [B,C,NH]
+        y += jnp.einsum("bis,bih,bhsp->bihp", cc.astype(F32), dec0, h)
+        # state update: h' = exp(L_last) h + sum_j exp(L_last - L_j) dt_j B_j x_j^T
+        last = cumc[:, -1:, :]                                           # [B,1,NH]
+        decl = jnp.exp(last - cumc)                                      # [B,C,NH]
+        h = (jnp.exp(cumc[:, -1, :])[:, :, None, None] * h
+             + jnp.einsum("bjs,bjh,bjhp->bhsp", bc.astype(F32),
+                          decl * dtc, xc.astype(F32)))
+        return h, y
+
+    h, ys = jax.lax.scan(body, h0, (xh_c, dt_c, lam_c, b_c, c_c, cum))
+    y = ys.swapaxes(0, 1).reshape(b, s, nh, hp)
+    return y.astype(xh.dtype), h
+
+
+def mamba2_forward(x: jax.Array, p: dict, *, d_inner: int, n_heads: int,
+                   headdim: int, d_state: int, conv_k: int, chunk: int = 128):
+    """Full mamba2 block. x: [B,S,D]. p holds in_proj/conv_w/a_log/d_skip/
+    dt_bias/norm/out_proj. Returns y [B,S,D]."""
+    b, s, d = x.shape
+    zxbcdt = jnp.einsum("bsd,dp->bsp", x, p["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, d_inner + d_inner + 2 * d_state], axis=-1)
+    xbc = jax.nn.silu(causal_conv1d(xbc, p["conv_w"]).astype(F32)).astype(x.dtype)
+    xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"].astype(F32))      # [B,S,NH]
+    xh = xs.reshape(b, s, n_heads, headdim)
+    y, _ = ssd_chunked(xh, dt, p["a_log"], bmat, cmat, chunk=chunk)
+    y = y + xh.astype(F32).astype(x.dtype) * p["d_skip"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(b, s, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(F32)).astype(x.dtype), p["norm"])
+    return jnp.einsum("bsp,pd->bsd", y, p["out_proj"])
+
+
+def mamba2_decode(x1: jax.Array, state: dict, p: dict, *, d_inner: int,
+                  n_heads: int, headdim: int, d_state: int, conv_k: int):
+    """One-token step. x1: [B,1,D]; state: {"h": [B,NH,DS,HP],
+    "conv": [B,K-1,convdim]}. Returns (y1, state')."""
+    b, _, d = x1.shape
+    zxbcdt = jnp.einsum("bsd,dp->bsp", x1, p["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, d_inner + d_inner + 2 * d_state], axis=-1)
+    xbc = xbc[:, 0]                                       # [B, convdim]
+    window = jnp.concatenate([state["conv"], xbc[:, None]], axis=1)  # [B,K,convdim]
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"])
+    xbc = jax.nn.silu(conv_out.astype(F32)).astype(x1.dtype)
+    xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+    dt = jax.nn.softplus(dt[:, 0].astype(F32) + p["dt_bias"].astype(F32))  # [B,NH]
+    a = -jnp.exp(p["a_log"].astype(F32))
+    decay = jnp.exp(dt * a)                               # [B,NH]
+    xh = xs.reshape(b, n_heads, headdim).astype(F32)
+    h = state["h"] * decay[:, :, None, None] + jnp.einsum(
+        "bs,bh,bhp->bhsp", bmat.astype(F32), dt, xh)
+    y = jnp.einsum("bs,bhsp->bhp", cmat.astype(F32), h)
+    y = y + xh * p["d_skip"][None, :, None].astype(F32)
+    y = y.reshape(b, 1, d_inner).astype(x1.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(F32)).astype(x1.dtype), p["norm"])
+    y = jnp.einsum("bsp,pd->bsd", y, p["out_proj"])
+    state = {"h": h, "conv": window[:, 1:]}
+    return y, state
+
+
+def mamba2_init(key, d_model: int, *, d_inner: int, n_heads: int,
+                d_state: int, conv_k: int, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    convdim = 2 * d_inner + 2 * d_state  # x + B + C widths: d_inner + 2*ds... see below
+    convdim = d_inner + 2 * d_state
+    proj_out = 2 * d_inner + 2 * d_state + n_heads
+    init = lambda k, sh, s: (jax.random.normal(k, sh, F32) * s).astype(dtype)
+    return {
+        "in_proj": init(ks[0], (d_model, proj_out), d_model ** -0.5),
+        "conv_w": init(ks[1], (conv_k, convdim), conv_k ** -0.5),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(F32),
+        "d_skip": jnp.ones((n_heads,), F32),
+        "dt_bias": jnp.zeros((n_heads,), F32),
+        "norm": jnp.zeros((d_inner,), dtype),
+        "out_proj": init(ks[2], (d_inner, d_model), d_inner ** -0.5),
+    }

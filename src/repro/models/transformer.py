@@ -1,0 +1,494 @@
+"""Model assembly: stacked-weight scan blocks for every architecture family.
+
+Design rules (MaxText-style):
+* weights for the repeated block are stacked on a leading layer axis and the
+  stack is consumed by ONE lax.scan — HLO stays compact regardless of depth;
+* per-layer heterogeneity that preserves parameter shapes (gemma local vs
+  global attention, per-layer rope theta, hash-router seeds) is expressed as
+  *scanned flag arrays*, not separate scans;
+* heterogeneity that changes parameter structure (zamba2's weight-shared
+  attention block between mamba groups) lives outside the scan.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import dhash
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import rwkv as rwkv_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import embed, rms_norm, swiglu
+from repro.models.sharding import constrain
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# initialization
+# ---------------------------------------------------------------------------
+
+def _init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, F32) * scale).astype(dtype)
+
+
+def _attn_block_init(key, cfg: ArchConfig, n: int, dtype) -> dict:
+    """n stacked attention(+ffn/moe) blocks."""
+    d, hd = cfg.d_model, cfg.head_dim
+    hq, hkv, f = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+    ks = iter(jax.random.split(key, 16))
+    s = d ** -0.5
+    p = {
+        "ln1": jnp.zeros((n, d), dtype),
+        "wo": _init(next(ks), (n, hq, hd, d), (hq * hd) ** -0.5, dtype),
+        "ln2": jnp.zeros((n, d), dtype),
+    }
+    if cfg.fused_qkv:
+        p["wqkv"] = _init(next(ks), (n, d, hq + 2 * hkv, hd), s, dtype)
+    else:
+        p["wq"] = _init(next(ks), (n, d, hq, hd), s, dtype)
+        p["wk"] = _init(next(ks), (n, d, hkv, hd), s, dtype)
+        p["wv"] = _init(next(ks), (n, d, hkv, hd), s, dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((n, hd), dtype)
+        p["k_norm"] = jnp.zeros((n, hd), dtype)
+    if cfg.n_experts:
+        fe = cfg.moe_dff
+        p["router"] = _init(next(ks), (n, d, cfg.n_experts), s, dtype)
+        p["we_g"] = _init(next(ks), (n, cfg.n_experts, d, fe), s, dtype)
+        p["we_u"] = _init(next(ks), (n, cfg.n_experts, d, fe), s, dtype)
+        p["we_d"] = _init(next(ks), (n, cfg.n_experts, fe, d), fe ** -0.5, dtype)
+        if cfg.dense_ff_residual:
+            p |= _mlp_init(ks, cfg, n, d, f, s, dtype)
+    else:
+        p |= _mlp_init(ks, cfg, n, d, f, s, dtype)
+    return p
+
+
+def _mlp_init(ks, cfg, n, d, f, s, dtype) -> dict:
+    if cfg.fused_gate_up:
+        # [2, d, f] (stacked), NOT [d, 2f] (concatenated): splitting a
+        # concatenated layout along the model-sharded f axis would place g
+        # and u on disjoint device halves -> resharding collectives
+        # (measured: refuted hypothesis in §Perf iteration 2 of gemma3)
+        return {"wgu": _init(next(ks), (n, 2, d, f), s, dtype),
+                "wd": _init(next(ks), (n, f, d), f ** -0.5, dtype)}
+    return {"wg": _init(next(ks), (n, d, f), s, dtype),
+            "wu": _init(next(ks), (n, d, f), s, dtype),
+            "wd": _init(next(ks), (n, f, d), f ** -0.5, dtype)}
+
+
+def _attn_flags(cfg: ArchConfig) -> dict:
+    """Per-layer window / rope-theta arrays for the scanned attn stack."""
+    kinds = [k for k in cfg.blocks if k in ("attn", "local")]
+    window = np.array([cfg.window if k == "local" else 0 for k in kinds], np.int32)
+    tg = cfg.rope_theta_global or cfg.rope_theta
+    theta = np.array([cfg.rope_theta if k == "local" else tg for k in kinds], np.float32)
+    return {"window": jnp.asarray(window), "theta": jnp.asarray(theta)}
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = iter(jax.random.split(key, 8))
+    d, v = cfg.d_model, cfg.vocab_size
+    params: dict[str, Any] = {
+        "embed": _init(next(ks), (v, d), 1.0, dtype),
+        "final_norm": jnp.zeros((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = _init(next(ks), (d, v), d ** -0.5, dtype)
+
+    kinds = cfg.blocks
+    n_attn = sum(k in ("attn", "local") for k in kinds)
+    n_mamba = sum(k == "mamba2" for k in kinds)
+    n_rwkv = sum(k == "rwkv6" for k in kinds)
+    if n_attn:
+        params["attn_stack"] = _attn_block_init(next(ks), cfg, n_attn, dtype)
+    if n_mamba:
+        d_in = cfg.ssm_expand * d
+        nh = d_in // cfg.ssm_headdim
+        sub = jax.random.split(next(ks), n_mamba)
+        per = [dict(ssm_lib.mamba2_init(sub[i], d, d_inner=d_in, n_heads=nh,
+                                        d_state=cfg.ssm_state, conv_k=cfg.ssm_conv,
+                                        dtype=dtype),
+                    ln=jnp.zeros((d,), dtype)) for i in range(n_mamba)]
+        params["mamba_stack"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per)
+    if n_rwkv:
+        nh = d // cfg.rwkv_head_size
+        sub = jax.random.split(next(ks), n_rwkv)
+        per = [dict(rwkv_lib.rwkv6_init(sub[i], d, cfg.d_ff, n_heads=nh,
+                                        head_size=cfg.rwkv_head_size, dtype=dtype,
+                                        fused_rkvg=cfg.rwkv_fused_rkvg),
+                    ln1=jnp.zeros((d,), dtype), ln2=jnp.zeros((d,), dtype))
+               for i in range(n_rwkv)]
+        params["rwkv_stack"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per)
+    if cfg.shared_attn_every:
+        shared_cfg = cfg.scaled(n_experts=0, block_pattern=("attn",))
+        params["shared_attn"] = jax.tree_util.tree_map(
+            lambda x: x[0], _attn_block_init(next(ks), shared_cfg, 1, dtype))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block bodies
+# ---------------------------------------------------------------------------
+
+def _mlp_fwd(h: jax.Array, p: dict) -> jax.Array:
+    if "wgu" in p:
+        gu = jnp.einsum("bsd,kdf->bskf", h, p["wgu"])   # one matmul, one dx AR
+        g, u = gu[:, :, 0], gu[:, :, 1]                 # split on UNsharded k
+        act = jax.nn.silu(g.astype(F32)).astype(h.dtype) * u
+        return jnp.einsum("bsf,fd->bsd", act, p["wd"])
+    return swiglu(h, p["wg"], p["wu"], p["wd"])
+
+
+def _project_qkv_cfg(h: jax.Array, p: dict, cfg: ArchConfig):
+    if "wqkv" in p:
+        qkv = jnp.einsum("bsd,dhk->bshk", h, p["wqkv"])
+        q, k, v = jnp.split(qkv, [cfg.n_heads, cfg.n_heads + cfg.n_kv_heads],
+                            axis=2)
+        if cfg.qk_norm:
+            from repro.models.layers import rms_norm as _rn
+            q, k = _rn(q, p["q_norm"]), _rn(k, p["k_norm"])
+        return q, k, v
+    qkn = (p["q_norm"], p["k_norm"]) if cfg.qk_norm else None
+    return attn_lib.project_qkv(h, p["wq"], p["wk"], p["wv"], qk_norm_scale=qkn)
+
+
+def _ckpt(body, cfg: ArchConfig):
+    if not cfg.remat:
+        return body
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(body)
+
+
+def _ffn_or_moe(h: jax.Array, p: dict, cfg: ArchConfig, token_ids, router_override,
+                hash_seeds):
+    """Feed-forward half of an attention block. Returns (y, aux, load)."""
+    b, s, d = h.shape
+    if not cfg.n_experts:
+        return _mlp_fwd(h, p), jnp.zeros((), F32), None
+    if cfg.use_hash_router:
+        eid, gate, aux = moe_lib.hash_route(token_ids.reshape(-1), None,
+                                            hash_seeds, cfg.n_experts, cfg.top_k)
+        if router_override is not None:
+            found, packed = router_override
+            ov = jnp.stack([packed & 0x7FFF, (packed >> 15) & 0x7FFF], -1)[:, :cfg.top_k]
+            eid = jnp.where(found[:, None], ov.astype(I32), eid)
+        eid = eid.reshape(b, s, -1)
+        gate = gate.reshape(b, s, -1)
+    else:
+        eid, gate, aux = moe_lib.topk_route(h.reshape(b * s, d), p["router"],
+                                            cfg.top_k)
+        eid = eid.reshape(b, s, -1)
+        gate = gate.reshape(b, s, -1)
+    y, load = moe_lib.moe_ffn(h, eid, gate, p["we_g"], p["we_u"], p["we_d"])
+    if cfg.dense_ff_residual:
+        y = y + _mlp_fwd(h, p)
+    return y, aux, load
+
+
+def _attn_body(x, p, flags, cfg: ArchConfig, positions, token_ids,
+               router_override, decode_cache=None, cache_len=None):
+    """One attention block. positions: [B,S] or [3,B,S] (mrope)."""
+    x = constrain(x, "dp", None, None)
+    h = rms_norm(x, p["ln1"])
+    q, k, v = _project_qkv_cfg(h, p, cfg)
+    q = constrain(q, "dp", None, "tp", None)
+    k = constrain(k, "dp", None, "tp", None)
+    v = constrain(v, "dp", None, "tp", None)
+    theta = flags["theta"]
+    if cfg.mrope_sections is not None:
+        from repro.models.layers import apply_mrope
+        rope = partial(apply_mrope, theta=cfg.rope_theta, sections=cfg.mrope_sections)
+        q, k = rope(q, positions), rope(k, positions)
+    else:
+        from repro.models.layers import apply_rope
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    if decode_cache is None:
+        qp = positions[0] if cfg.mrope_sections is not None else positions
+        o = attn_lib.attention(q, k, v, q_pos=qp, k_pos=qp, causal=cfg.causal,
+                               window=flags["window"], softcap=cfg.attn_softcap,
+                               chunk=cfg.attn_chunk)
+        new_cache = None
+    else:
+        kc, vc = decode_cache
+        idx = cache_len  # [B]
+        bidx = jnp.arange(kc.shape[0], dtype=I32)
+        kc = kc.at[bidx, idx].set(k[:, 0])
+        vc = vc.at[bidx, idx].set(v[:, 0])
+        o = attn_lib.decode_attention(q, kc, vc, cache_len + 1,
+                                      window=flags["window"],
+                                      softcap=cfg.attn_softcap)
+        new_cache = (kc, vc)
+    o = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    x = constrain(x + o, "dp", None, None)
+    h2 = rms_norm(x, p["ln2"])
+    y, aux, load = _ffn_or_moe(h2, p, cfg, token_ids, router_override, flags.get("hash_seeds"))
+    return constrain(x + y, "dp", None, None), aux, load, new_cache
+
+
+def _mamba_body(x, p, cfg: ArchConfig, decode_state=None):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_headdim
+    x = constrain(x, "dp", None, None)
+    h = rms_norm(x, p["ln"])
+    kw = dict(d_inner=d_in, n_heads=nh, headdim=cfg.ssm_headdim,
+              d_state=cfg.ssm_state, conv_k=cfg.ssm_conv)
+    if decode_state is None:
+        y = ssm_lib.mamba2_forward(h, p, chunk=min(128, h.shape[1]), **kw)
+        return x + y, None
+    y, st = ssm_lib.mamba2_decode(h, decode_state, p, **kw)
+    return x + y, st
+
+
+def _rwkv_body(x, p, cfg: ArchConfig, decode_state=None):
+    nh = cfg.d_model // cfg.rwkv_head_size
+    x = constrain(x, "dp", None, None)
+    h = rms_norm(x, p["ln1"])
+    if decode_state is None:
+        y, _ = rwkv_lib.rwkv6_time_mix(h, p, n_heads=nh,
+                                       head_size=cfg.rwkv_head_size,
+                                       chunk=cfg.rwkv_chunk,
+                                       tp_state=cfg.rwkv_tp_state)
+        x = x + y
+        y2 = rwkv_lib.rwkv6_channel_mix(rms_norm(x, p["ln2"]), p)
+        return x + y2, None
+    y, s1 = rwkv_lib.rwkv6_time_mix(h, p, n_heads=nh, head_size=cfg.rwkv_head_size,
+                                    prev_token=decode_state["tm_prev"],
+                                    s0=decode_state["wkv"])
+    x = x + y
+    h2 = rms_norm(x, p["ln2"])
+    y2 = rwkv_lib.rwkv6_channel_mix(h2, p, prev_token=decode_state["cm_prev"])
+    st = {"wkv": s1, "tm_prev": h, "cm_prev": h2}
+    return x + y2, st
+
+
+# ---------------------------------------------------------------------------
+# training forward
+# ---------------------------------------------------------------------------
+
+def _scan_attn(x, stack, cfg: ArchConfig, positions, token_ids, router_override):
+    flags = _attn_flags(cfg)
+    n = sum(k in ("attn", "local") for k in cfg.blocks)
+    if cfg.use_hash_router and cfg.n_experts:
+        key = jax.random.PRNGKey(0)
+        seeds = jax.random.randint(key, (n, cfg.top_k, 2), 0, 2**31 - 1).astype(jnp.uint32)
+        flags = dict(flags, hash_seeds=seeds)
+
+    def body(carry, sl):
+        p, fl = sl
+        y, aux, load, _ = _attn_body(carry[0], p, fl, cfg, positions, token_ids,
+                                     router_override)
+        new_load = carry[2] + (load if load is not None else 0)
+        return (y, carry[1] + aux, new_load), None
+
+    body = _ckpt(body, cfg)
+    load0 = jnp.zeros((cfg.n_experts,), I32) if cfg.n_experts else jnp.zeros((1,), I32)
+    (x, aux, load), _ = jax.lax.scan(body, (x, jnp.zeros((), F32), load0),
+                                     (stack, flags))
+    return x, aux, load
+
+
+def forward_train(params: dict, cfg: ArchConfig, batch: dict,
+                  router_table: dhash.DHashState | None = None):
+    """Returns (hidden [B,S,D], aux dict). batch: tokens [B,S] (or embeds),
+    positions [B,S] / [3,B,S]."""
+    if cfg.frontend == "stub_embed":
+        x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+        token_ids = batch.get("tokens", jnp.zeros(x.shape[:2], I32))
+    else:
+        token_ids = batch["tokens"]
+        x = embed(token_ids, params["embed"], scale=cfg.embed_scale)
+    x = constrain(x, "dp", None, None)
+    positions = batch.get("positions")
+    if positions is None:
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=I32), (b, s))
+
+    router_override = None
+    if cfg.use_hash_router and router_table is not None:
+        router_override = dhash.lookup(router_table, token_ids.reshape(-1))
+
+    aux_total = jnp.zeros((), F32)
+    load_total = jnp.zeros((max(cfg.n_experts, 1),), I32)
+
+    kinds = cfg.blocks
+    if cfg.shared_attn_every:                      # zamba2: groups + shared attn
+        stack = params["mamba_stack"]
+        n = sum(k == "mamba2" for k in kinds)
+        g = cfg.shared_attn_every
+        shared_flags = {"window": jnp.asarray(0, I32),
+                        "theta": jnp.asarray(cfg.rope_theta, F32)}
+
+        def mamba_scan(x, sub):
+            def body(c, p):
+                y, _ = _mamba_body(c, p, cfg)
+                return y, None
+            body = _ckpt(body, cfg)
+            x, _ = jax.lax.scan(body, x, sub)
+            return x
+
+        for start in range(0, n, g):
+            stop = min(start + g, n)
+            sub = jax.tree_util.tree_map(lambda a: a[start:stop], stack)
+            x = mamba_scan(x, sub)
+            x, aux, _, _ = _attn_body(x, params["shared_attn"], shared_flags,
+                                      cfg.scaled(n_experts=0), positions,
+                                      token_ids, None)
+    elif "mamba2" in kinds:
+        def body(c, p):
+            y, _ = _mamba_body(c, p, cfg)
+            return y, None
+        body = _ckpt(body, cfg)
+        x, _ = jax.lax.scan(body, x, params["mamba_stack"])
+    elif "rwkv6" in kinds:
+        def body(c, p):
+            y, _ = _rwkv_body(c, p, cfg)
+            return y, None
+        body = _ckpt(body, cfg)
+        x, _ = jax.lax.scan(body, x, params["rwkv_stack"])
+    else:
+        x, aux_total, load_total = _scan_attn(x, params["attn_stack"], cfg,
+                                              positions, token_ids, router_override)
+
+    x = rms_norm(x, params["final_norm"])
+    return x, {"moe_aux": aux_total, "expert_load": load_total}
+
+
+def unembed_matrix(params: dict, cfg: ArchConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["unembed"]
+
+
+# ---------------------------------------------------------------------------
+# decode (single new token against caches)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None) -> dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    kinds = cfg.blocks
+    cache: dict[str, Any] = {"len": jnp.zeros((batch,), I32)}
+    n_attn = sum(k in ("attn", "local") for k in kinds)
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh_m = d_in // cfg.ssm_headdim
+    if n_attn:
+        shp = (n_attn, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        cache["k"] = jnp.zeros(shp, dtype)
+        cache["v"] = jnp.zeros(shp, dtype)
+    n_mamba = sum(k == "mamba2" for k in kinds)
+    if n_mamba:
+        cache["ssm_h"] = jnp.zeros((n_mamba, batch, nh_m, cfg.ssm_state,
+                                    cfg.ssm_headdim), F32)
+        cache["ssm_conv"] = jnp.zeros((n_mamba, batch, cfg.ssm_conv - 1,
+                                       d_in + 2 * cfg.ssm_state), dtype)
+    n_rwkv = sum(k == "rwkv6" for k in kinds)
+    if n_rwkv:
+        nh = cfg.d_model // cfg.rwkv_head_size
+        cache["wkv"] = jnp.zeros((n_rwkv, batch, nh, cfg.rwkv_head_size,
+                                  cfg.rwkv_head_size), F32)
+        cache["tm_prev"] = jnp.zeros((n_rwkv, batch, 1, cfg.d_model), dtype)
+        cache["cm_prev"] = jnp.zeros((n_rwkv, batch, 1, cfg.d_model), dtype)
+    if cfg.shared_attn_every:
+        n_apps = -(-sum(k == "mamba2" for k in kinds) // cfg.shared_attn_every)
+        shp = (n_apps, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        cache["k"] = jnp.zeros(shp, dtype)
+        cache["v"] = jnp.zeros(shp, dtype)
+    return cache
+
+
+def forward_decode(params: dict, cfg: ArchConfig, tokens1: jax.Array,
+                   cache: dict, router_table=None):
+    """tokens1: [B,1] (or embeds [B,1,D] for stub frontends).
+    Returns (hidden [B,1,D], cache')."""
+    if cfg.frontend == "stub_embed" and tokens1.ndim == 3:
+        x = tokens1.astype(jnp.dtype(cfg.dtype))
+        token_ids = jnp.zeros(x.shape[:2], I32)
+    else:
+        token_ids = tokens1
+        x = embed(tokens1, params["embed"], scale=cfg.embed_scale)
+    b = x.shape[0]
+    clen = cache["len"]
+    positions = clen[:, None]
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(positions, (3, b, 1))
+
+    router_override = None
+    if cfg.use_hash_router and router_table is not None:
+        router_override = dhash.lookup(router_table, token_ids.reshape(-1))
+
+    kinds = cfg.blocks
+    new_cache = dict(cache)
+
+    if cfg.shared_attn_every:
+        n = sum(k == "mamba2" for k in kinds)
+        g = cfg.shared_attn_every
+        shared_flags = {"window": jnp.asarray(0, I32),
+                        "theta": jnp.asarray(cfg.rope_theta, F32)}
+        hs, convs, ks_, vs_ = cache["ssm_h"], cache["ssm_conv"], cache["k"], cache["v"]
+        app = 0
+        for start in range(0, n, g):
+            stop = min(start + g, n)
+            for i in range(start, stop):
+                p = jax.tree_util.tree_map(lambda a: a[i], params["mamba_stack"])
+                st = {"h": hs[i], "conv": convs[i]}
+                x, st = _mamba_body(x, p, cfg, decode_state=st)
+                hs = hs.at[i].set(st["h"])
+                convs = convs.at[i].set(st["conv"])
+            x, _, _, kv = _attn_body(x, params["shared_attn"], shared_flags,
+                                     cfg.scaled(n_experts=0), positions, token_ids,
+                                     None, decode_cache=(ks_[app], vs_[app]),
+                                     cache_len=clen)
+            ks_, vs_ = ks_.at[app].set(kv[0]), vs_.at[app].set(kv[1])
+            app += 1
+        new_cache |= {"ssm_h": hs, "ssm_conv": convs, "k": ks_, "v": vs_}
+    elif "mamba2" in kinds:
+        def body(c, sl):
+            p, h, cv = sl
+            y, st = _mamba_body(c, p, cfg, decode_state={"h": h, "conv": cv})
+            return y, (st["h"], st["conv"])
+        x, (hs, convs) = jax.lax.scan(body, x, (params["mamba_stack"],
+                                                cache["ssm_h"], cache["ssm_conv"]))
+        new_cache |= {"ssm_h": hs, "ssm_conv": convs}
+    elif "rwkv6" in kinds:
+        def body(c, sl):
+            p, w, tp, cp = sl
+            y, st = _rwkv_body(c, p, cfg, decode_state={"wkv": w, "tm_prev": tp,
+                                                        "cm_prev": cp})
+            return y, (st["wkv"], st["tm_prev"], st["cm_prev"])
+        x, (w, tp, cp) = jax.lax.scan(body, x, (params["rwkv_stack"], cache["wkv"],
+                                                cache["tm_prev"], cache["cm_prev"]))
+        new_cache |= {"wkv": w, "tm_prev": tp, "cm_prev": cp}
+    else:
+        flags = _attn_flags(cfg)
+        if cfg.use_hash_router and cfg.n_experts:
+            n = len(flags["window"])
+            seeds = jax.random.randint(jax.random.PRNGKey(0), (n, cfg.top_k, 2),
+                                       0, 2**31 - 1).astype(jnp.uint32)
+            flags = dict(flags, hash_seeds=seeds)
+
+        def body(c, sl):
+            p, fl, kc, vc = sl
+            y, _, _, kv = _attn_body(c, p, fl, cfg, positions, token_ids,
+                                     router_override, decode_cache=(kc, vc),
+                                     cache_len=clen)
+            return y, (kv[0], kv[1])
+
+        x, (ks_, vs_) = jax.lax.scan(body, x, (params["attn_stack"], flags,
+                                               cache["k"], cache["v"]))
+        new_cache |= {"k": ks_, "v": vs_}
+
+    new_cache["len"] = clen + 1
+    x = rms_norm(x, params["final_norm"])
+    return x, new_cache

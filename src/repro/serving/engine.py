@@ -1,0 +1,216 @@
+"""Serving engine: continuous batching over a DHash-paged KV cache.
+
+Host-side driver (the framework's serve driver, deliverable (b)):
+* fixed-slot continuous batching: finished sequences free their pages and
+  the slot is re-admitted from the queue on the same step boundary;
+* prefix-cache admission: longest cached block-prefix is reused;
+* **live rehash**: when the page table's load factor or probe-length stats
+  degrade (bursty admission / adversarial patterns), the engine starts a
+  DHash rebuild; every decode step advances it one transition — serving
+  latency is flat through the entire rehash (measured in
+  benchmarks/bench_kvcache.py).
+
+The jitted step is fully paged: per layer, K/V of the new token are written
+to the page pool and attention runs flash-decoding over DHash-resolved pages.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import buckets, dhash
+from repro.models import transformer
+from repro.models.attention import project_qkv
+from repro.models.layers import apply_rope, rms_norm, swiglu
+from repro.serving import kvcache
+from repro.serving.kvcache import PagedKV
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_seqs: int = 8
+    page_size: int = 16
+    n_pages: int = 512
+    max_blocks: int = 64          # per-seq block bound (= max_len / page_size)
+    max_new_tokens: int = 32
+    rehash_load_factor: float = 0.7
+
+
+def paged_decode_step(params: dict, cfg: ArchConfig, kv: PagedKV,
+                      seq_ids: jax.Array, tokens: jax.Array,
+                      lengths: jax.Array, active: jax.Array,
+                      n_blocks: int):
+    """One decode step for all slots. tokens/lengths/active: [B].
+    Returns (logits [B, V], kv')."""
+    x = transformer.embed(tokens[:, None], params["embed"], scale=cfg.embed_scale)
+    positions = lengths[:, None]                            # [B,1]
+    stack = params["attn_stack"]
+    flags = transformer._attn_flags(cfg)
+    safe_ids = jnp.where(active, seq_ids, 0)
+
+    # page-table work is layer-independent: allocate the new block (if the
+    # position opens one) and resolve the write target ONCE
+    ps = kv.page_size
+    blk, off = lengths // ps, lengths % ps
+    kv, _ = kvcache.alloc_pages(kv, safe_ids, blk, active & (off == 0))
+    pages_w, found_w = kvcache.resolve_blocks_at(kv, safe_ids, blk)
+    pg = jnp.where(found_w & active, pages_w, kv.n_pages)   # OOB -> dropped
+
+    def body(carry, sl):
+        x, pool_k, pool_v = carry
+        p, fl, layer = sl
+        h = rms_norm(x, p["ln1"])
+        qkn = (p["q_norm"], p["k_norm"]) if cfg.qk_norm else None
+        q, k, v = project_qkv(h, p["wq"], p["wk"], p["wv"], qk_norm_scale=qkn)
+        q = apply_rope(q, positions, fl["theta"])
+        k = apply_rope(k, positions, fl["theta"])
+        pool_k = pool_k.at[layer, pg, off].set(k[:, 0], mode="drop")
+        pool_v = pool_v.at[layer, pg, off].set(v[:, 0], mode="drop")
+        kv2 = kvcache.replace(kv, pool_k=pool_k, pool_v=pool_v)
+        o = kvcache.paged_decode_attention(
+            kv2, layer, q[:, 0], safe_ids, lengths + 1, n_blocks,
+            window=fl["window"], softcap=cfg.attn_softcap)
+        x = x + jnp.einsum("bhk,hkd->bd", o, p["wo"])[:, None]
+        h2 = rms_norm(x, p["ln2"])
+        y = swiglu(h2, p["wg"], p["wu"], p["wd"])
+        return (x + y, pool_k, pool_v), None
+
+    n = len(flags["window"])
+    (x, pool_k, pool_v), _ = jax.lax.scan(
+        body, (x, kv.pool_k, kv.pool_v),
+        (stack, flags, jnp.arange(n, dtype=I32)))
+    kv = kvcache.replace(kv, pool_k=pool_k, pool_v=pool_v)
+    x = rms_norm(x, params["final_norm"])
+    w = transformer.unembed_matrix(params, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", x, w).astype(F32)[:, 0]
+    if cfg.logit_softcap > 0:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits, kv
+
+
+@dataclass
+class ServingEngine:
+    params: dict
+    cfg: ArchConfig
+    sc: ServeConfig
+    kv: PagedKV = None
+    queue: list = field(default_factory=list)     # list[(seq_id, prompt np.array)]
+    finished: dict = field(default_factory=dict)  # seq_id -> list[int]
+    rehashes: int = 0
+    _next_id: int = 1
+
+    def __post_init__(self):
+        c, s = self.cfg, self.sc
+        self.kv = kvcache.make(c.n_layers, s.page_size, s.n_pages,
+                               c.n_kv_heads, c.head_dim,
+                               max_blocks=s.max_blocks, dtype=jnp.dtype(c.dtype))
+        b = s.max_seqs
+        self.seq_ids = np.zeros((b,), np.int32)
+        self.lengths = np.zeros((b,), np.int32)
+        self.active = np.zeros((b,), bool)
+        self.cur_tok = np.zeros((b,), np.int32)
+        self.new_count = np.zeros((b,), np.int32)
+        self.outputs: dict[int, list[int]] = {}
+        self._step = jax.jit(partial(paged_decode_step, cfg=self.cfg,
+                                     n_blocks=s.max_blocks))
+        self._rehash = jax.jit(kvcache.rehash_step)
+        self._free = jax.jit(kvcache.free_sequences, static_argnums=2)
+
+    # -- request lifecycle ---------------------------------------------------
+    def submit(self, prompt: list[int]) -> int:
+        sid = self._next_id
+        self._next_id += 1
+        self.queue.append((sid, np.asarray(prompt, np.int32)))
+        return sid
+
+    def _admit(self):
+        for slot in np.where(~self.active)[0]:
+            if not self.queue:
+                break
+            sid, prompt = self.queue.pop(0)
+            self._prefill(slot, sid, prompt)
+
+    def _prefill(self, slot: int, sid: int, prompt: np.ndarray):
+        """Prefill token-by-token through the paged step (simple, exact).
+        Only THIS slot is active during its prefill — other in-flight
+        sequences must not advance (their KV writes are masked and their
+        lengths untouched)."""
+        self.seq_ids[slot] = sid
+        self.lengths[slot] = 0
+        self.new_count[slot] = 0
+        self.outputs[sid] = []
+        saved = self.active.copy()
+        self.active[:] = False
+        self.active[slot] = True
+        for t in prompt[:-1]:
+            self.cur_tok[slot] = t
+            self._run_slots(sample=False)
+        self.active = saved
+        self.active[slot] = True
+        self.cur_tok[slot] = prompt[-1]
+
+    # -- stepping -------------------------------------------------------------
+    def _run_slots(self, sample: bool = True):
+        sids = jnp.asarray(self.seq_ids)
+        toks = jnp.asarray(self.cur_tok)
+        lens = jnp.asarray(self.lengths)
+        act = jnp.asarray(self.active)
+        logits, self.kv = self._step(self.params, kv=self.kv, seq_ids=sids,
+                                     tokens=toks, lengths=lens, active=act)
+        self.lengths = np.where(self.active, self.lengths + 1, self.lengths)
+        self.kv = self._rehash(self.kv)            # background rebuild progress
+        if sample:
+            nxt = np.asarray(jax.device_get(jnp.argmax(logits, -1)), np.int32)
+            return nxt
+        return None
+
+    def step(self):
+        """One engine step: decode all active slots, harvest, admit."""
+        self._admit()
+        if not self.active.any():
+            return False
+        nxt = self._run_slots(sample=True)
+        for slot in np.where(self.active)[0]:
+            sid = int(self.seq_ids[slot])
+            self.outputs[sid].append(int(nxt[slot]))
+            self.cur_tok[slot] = nxt[slot]
+            self.new_count[slot] += 1
+            done = (self.new_count[slot] >= self.sc.max_new_tokens
+                    or int(self.lengths[slot]) >= self.sc.max_blocks * self.sc.page_size - 1)
+            if done:
+                self.finished[sid] = self.outputs.pop(sid)
+                self.kv = self._free(self.kv, jnp.asarray([sid], np.int32),
+                                     self.sc.max_blocks)
+                self.active[slot] = False
+        self._maybe_rehash()
+        return True
+
+    def run(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.queue or self.active.any()) and steps < max_steps:
+            self.step()
+            steps += 1
+        return steps
+
+    # -- live rehash ----------------------------------------------------------
+    def _maybe_rehash(self):
+        t = self.kv.table
+        if bool(jax.device_get(t.rebuilding)):
+            if bool(jax.device_get(dhash.rebuild_done(t))):
+                self.kv = kvcache.replace(self.kv, table=dhash.rebuild_finish(t))
+                self.rehashes += 1
+            return
+        cap = buckets.capacity_of(t.old)
+        live = int(jax.device_get(buckets.count_live(t.old)))
+        if live / cap > self.sc.rehash_load_factor:
+            self.kv = kvcache.replace(
+                self.kv, table=dhash.rebuild_start(t, seed=live + 1))

@@ -1,0 +1,179 @@
+"""Paged KV cache with a DHash page table (vLLM-style, TPU-native).
+
+The page table is the paper's structure in its natural serving role:
+``(seq_id, block_idx) -> physical page`` lives in a DHash instance, so the
+cache can be *rehashed/resized live* (bursty admission, fragmentation, or
+adversarial request patterns) while decode steps keep resolving pages at
+full rate — lookups follow the ordered old->hazard->new check and never
+block on the rebuild.
+
+Attention over pages is flash-decoding style: a scan over blocks with a
+running (max, denominator) accumulator — no materialization of the gathered
+KV, so the memory roofline term stays at one pass over the live pages.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dhash
+from repro.core.struct_utils import pytree_dataclass, replace
+
+F32 = jnp.float32
+I32 = jnp.int32
+NEG_INF = -2.0e38
+
+
+def block_key(seq_id: jax.Array, block_idx: jax.Array) -> jax.Array:
+    """Pack the page-table key; 15 bits of block index."""
+    return (seq_id.astype(I32) << 15) | block_idx.astype(I32)
+
+
+@pytree_dataclass(meta_fields=("layers", "page_size", "n_pages", "kv_heads",
+                               "head_dim", "max_blocks"))
+class PagedKV:
+    layers: int
+    page_size: int
+    n_pages: int
+    kv_heads: int
+    head_dim: int
+    max_blocks: int              # blocks per sequence bound
+    pool_k: jax.Array            # [L, n_pages, page, KV, HD]
+    pool_v: jax.Array
+    table: dhash.DHashState      # block_key -> page id
+    free_stack: jax.Array        # [n_pages] i32
+    free_top: jax.Array          # scalar i32
+
+
+def make(layers: int, page_size: int, n_pages: int, kv_heads: int,
+         head_dim: int, *, max_blocks: int = 4096, dtype=jnp.bfloat16,
+         table_chunk: int = 256, seed: int = 3) -> PagedKV:
+    shp = (layers, n_pages, page_size, kv_heads, head_dim)
+    return PagedKV(
+        layers=layers, page_size=page_size, n_pages=n_pages, kv_heads=kv_heads,
+        head_dim=head_dim, max_blocks=max_blocks,
+        pool_k=jnp.zeros(shp, dtype), pool_v=jnp.zeros(shp, dtype),
+        table=dhash.make("linear", capacity=2 * n_pages, chunk=table_chunk,
+                         seed=seed),
+        free_stack=jnp.arange(n_pages, dtype=I32),
+        free_top=jnp.asarray(n_pages, I32))
+
+
+def resolve_blocks(kv: PagedKV, seq_ids: jax.Array, n_blocks: int):
+    """DHash-resolve the page of every (seq, block) pair.
+    seq_ids: [B] -> (pages [B, n_blocks] i32, found [B, n_blocks])."""
+    b = seq_ids.shape[0]
+    blk = jnp.arange(n_blocks, dtype=I32)
+    keys = block_key(seq_ids[:, None], blk[None, :]).reshape(-1)
+    found, page = dhash.lookup(kv.table, keys)
+    return page.reshape(b, n_blocks), found.reshape(b, n_blocks)
+
+
+def alloc_pages(kv: PagedKV, seq_ids: jax.Array, block_idx: jax.Array,
+                mask: jax.Array):
+    """Allocate one page per masked (seq, block) and insert into the table.
+    Idempotent: pairs already mapped keep their page (no leak).
+    Returns (kv', pages [B])."""
+    keys = block_key(seq_ids, block_idx)
+    present, _ = dhash.lookup(kv.table, keys)
+    want = mask & ~present
+    rank = jnp.cumsum(want.astype(I32)) - 1
+    can = want & (rank < kv.free_top)
+    page = kv.free_stack[jnp.where(can, kv.free_top - 1 - rank, 0)]
+    table, ok = dhash.insert(kv.table, keys, page, can)
+    used = jnp.sum((can & ok).astype(I32))
+    return replace(kv, table=table, free_top=kv.free_top - used), \
+        jnp.where(can, page, -1)
+
+
+def append_token(kv: PagedKV, seq_ids: jax.Array, positions: jax.Array,
+                 k_new: jax.Array, v_new: jax.Array):
+    """Write one token's K/V for every layer.
+
+    k_new/v_new: [L, B, KV, HD]; positions: [B] (0-based index of the new
+    token). Allocates a fresh page when the position opens a new block."""
+    ps = kv.page_size
+    blk, off = positions // ps, positions % ps
+    kv, pages_new = alloc_pages(kv, seq_ids, blk, off == 0)
+    pages, found = resolve_blocks_at(kv, seq_ids, blk)
+    page = jnp.where(found, pages, pages_new)
+    lidx = jnp.arange(kv.layers, dtype=I32)[:, None]
+    pool_k = kv.pool_k.at[lidx, page[None, :], off[None, :]].set(k_new)
+    pool_v = kv.pool_v.at[lidx, page[None, :], off[None, :]].set(v_new)
+    return replace(kv, pool_k=pool_k, pool_v=pool_v)
+
+
+def resolve_blocks_at(kv: PagedKV, seq_ids: jax.Array, block_idx: jax.Array):
+    keys = block_key(seq_ids, block_idx)
+    found, page = dhash.lookup(kv.table, keys)
+    return page, found
+
+
+def paged_decode_attention(kv: PagedKV, layer: jax.Array, q1: jax.Array,
+                           seq_ids: jax.Array, cache_len: jax.Array,
+                           n_blocks: int, *, window=0, softcap: float = 0.0):
+    """Flash-decoding over pages for ONE layer slice of the pool.
+
+    q1: [B, Hq, HD]; returns [B, Hq, HD].  ``layer`` may be traced (scan).
+    """
+    b, hq, hd = q1.shape
+    hkv, ps = kv.kv_heads, kv.page_size
+    g = hq // hkv
+    scale = 1.0 / np.sqrt(hd)
+    pages, found = resolve_blocks(kv, seq_ids, n_blocks)    # [B, n_blocks]
+    qg = q1.reshape(b, hkv, g, hd)
+    pool_k = jax.lax.dynamic_index_in_dim(kv.pool_k, layer, 0, keepdims=False)
+    pool_v = jax.lax.dynamic_index_in_dim(kv.pool_v, layer, 0, keepdims=False)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        pg = pages[:, blk]                                   # [B]
+        kb = pool_k[jnp.where(pg >= 0, pg, 0)]               # [B, ps, KV, HD]
+        vb = pool_v[jnp.where(pg >= 0, pg, 0)]
+        s = jnp.einsum("bhgd,bphd->bhgp", qg, kb).astype(F32) * scale
+        if softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap
+        pos = blk * ps + jnp.arange(ps, dtype=I32)[None, :]  # [1, ps]
+        ok = (pos < cache_len[:, None]) & found[:, blk][:, None] & (pg >= 0)[:, None]
+        ok &= (window <= 0) | (pos >= cache_len[:, None] - window)
+        s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+        m2 = jnp.maximum(m, s.max(-1))
+        w = jnp.exp(s - m2[..., None])
+        corr = jnp.exp(m - m2)
+        l2 = l * corr + w.sum(-1)
+        acc2 = acc * corr[..., None] + jnp.einsum(
+            "bhgp,bphd->bhgd", w.astype(vb.dtype), vb).astype(F32)
+        return (m2, l2, acc2), None
+
+    m0 = jnp.full((b, hkv, g), -jnp.inf, F32)
+    l0 = jnp.zeros((b, hkv, g), F32)
+    a0 = jnp.zeros((b, hkv, g, hd), F32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  jnp.arange(n_blocks, dtype=I32))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, hq, hd).astype(q1.dtype)
+
+
+def free_sequences(kv: PagedKV, seq_ids: jax.Array, max_blocks: int):
+    """Release all pages of finished sequences back to the free list and
+    delete their table entries (batched)."""
+    b = seq_ids.shape[0]
+    blk = jnp.arange(max_blocks, dtype=I32)
+    keys = block_key(seq_ids[:, None], blk[None, :]).reshape(-1)
+    found, pages = dhash.lookup(kv.table, keys)
+    table, ok = dhash.delete(kv.table, keys, found)
+    # push freed pages (deterministic order)
+    rank = jnp.cumsum(ok.astype(I32)) - 1
+    dst = jnp.where(ok, kv.free_top + rank, kv.n_pages)
+    free_stack = kv.free_stack.at[dst].set(pages, mode="drop")
+    freed = jnp.sum(ok.astype(I32))
+    return replace(kv, table=table, free_stack=free_stack,
+                   free_top=kv.free_top + freed)
+
+
+def rehash_step(kv: PagedKV) -> PagedKV:
+    """One live rebuild transition on the page table (engine interleaves)."""
+    return replace(kv, table=dhash.rebuild_step(kv.table))

@@ -1,0 +1,56 @@
+"""Prefix cache: content-hash -> cached KV page, backed by DHash.
+
+Block-granular prefix reuse (vLLM/SGLang style): the fingerprint of token
+block i is hash(fingerprint(i-1), tokens[i*ps:(i+1)*ps]), so a chain of
+fingerprints identifies a unique prefix.  Admission looks up the longest
+cached prefix; published prefixes insert their (fingerprint -> page) pairs.
+
+This is the serving surface where the paper's *dynamic* property earns its
+keep: adversarial/bursty request mixes skew the fingerprint distribution
+(hash collision attack), and the engine responds by REBUILDING the prefix
+index with a fresh seed — lookups keep streaming mid-rebuild.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dhash, hashing
+
+I32 = jnp.int32
+
+
+def prefix_fingerprints(tokens: jax.Array, page_size: int) -> jax.Array:
+    """tokens: [B, S] -> chained block fingerprints [B, S // page_size]."""
+    b, s = tokens.shape
+    n = s // page_size
+    blocks = tokens[:, : n * page_size].reshape(b, n, page_size)
+
+    def chain(h, blk):             # blk: [B, ps]
+        for i in range(page_size):
+            h = hashing.hash_combine(h, blk[:, i])
+        return h, (h & jnp.uint32(0x7FFFFFFF)).astype(I32)
+
+    h0 = jnp.full((b,), jnp.uint32(0x811C9DC5))
+    _, fps = jax.lax.scan(chain, h0, blocks.swapaxes(0, 1))
+    return fps.swapaxes(0, 1)                              # [B, n]
+
+
+def match_prefix(table: dhash.DHashState, fps: jax.Array):
+    """Longest cached prefix per row. fps: [B, n].
+    Returns (n_hit [B], pages [B, n] with -1 past the hit length)."""
+    b, n = fps.shape
+    found, pages = dhash.lookup(table, fps.reshape(-1))
+    found = found.reshape(b, n)
+    pages = pages.reshape(b, n)
+    run = jnp.cumprod(found.astype(I32), axis=1)           # 1 while contiguous
+    n_hit = run.sum(axis=1)
+    return n_hit, jnp.where(run.astype(bool), pages, -1)
+
+
+def publish_prefix(table: dhash.DHashState, fps: jax.Array, pages: jax.Array,
+                   mask: jax.Array):
+    """Insert fingerprint->page pairs for freshly computed blocks."""
+    t, ok = dhash.insert(table, fps.reshape(-1), pages.reshape(-1),
+                         mask.reshape(-1))
+    return t, ok.reshape(fps.shape)

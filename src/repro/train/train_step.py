@@ -1,0 +1,89 @@
+"""Train-step builder: grad accumulation, sharding, donation, DHash-router
+state threading.
+
+The returned step is pure (state, batch) -> (state, metrics) so it jits with
+in/out shardings and donated state.  For hash-router MoE archs the DHash
+override table rides in the state and advances one rebuild transition per
+step — a live router rebalance never blocks training (the paper's property,
+exercised in the training loop itself).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import dhash
+from repro.models import model
+from repro.optim import optimizer as opt_lib
+
+F32 = jnp.float32
+
+
+def make_router_table(cfg: ArchConfig, *, capacity: int = 4096) -> dhash.DHashState | None:
+    if not (cfg.n_experts and cfg.use_hash_router):
+        return None
+    return dhash.make("linear", capacity=capacity, chunk=256, seed=17)
+
+
+def init_state(cfg: ArchConfig, opt_cfg: opt_lib.OptConfig, key: jax.Array) -> dict:
+    from repro.models import transformer
+    params = transformer.init_params(cfg, key)
+    state = {"params": params, "opt": opt_lib.init_opt_state(params, opt_cfg)}
+    rt = make_router_table(cfg)
+    if rt is not None:
+        state["router_table"] = rt
+    return state
+
+
+def train_step(state: dict, batch: dict, *, cfg: ArchConfig,
+               opt_cfg: opt_lib.OptConfig, grad_accum: int = 1):
+    """One optimizer step. With grad_accum > 1, batch leaves carry a leading
+    [A, ...] microbatch axis consumed by a scan (activation memory / A)."""
+    rt = state.get("router_table")
+
+    def loss(p, b):
+        return model.loss_fn(p, cfg, b, router_table=rt)
+
+    vg = jax.value_and_grad(loss, has_aux=True)
+    if grad_accum == 1:
+        (l, metrics), grads = vg(state["params"], batch)
+    else:
+        def acc(carry, mb):
+            gsum, lsum = carry
+            (li, mi), gi = vg(state["params"], mb)
+            return (jax.tree_util.tree_map(jnp.add, gsum, gi), lsum + li), mi
+        g0 = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, F32),
+                                    state["params"])
+        (grads, lsum), mlast = jax.lax.scan(acc, (g0, jnp.zeros((), F32)), batch)
+        grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+        l, metrics = lsum / grad_accum, mlast
+
+    params, opt, om = opt_lib.apply_updates(state["params"], grads,
+                                            state["opt"], opt_cfg)
+    new_state = {"params": params, "opt": opt}
+    if rt is not None:
+        # background rebuild progress: one transition per step, never blocking
+        new_state["router_table"] = dhash.rebuild_step(rt)
+    metrics = dict(metrics, loss=l, **om)
+    return new_state, metrics
+
+
+def rebalance_router(state: dict, expert_load: jax.Array, cfg: ArchConfig,
+                     *, hot_frac: float = 2.0) -> dict:
+    """Host-level reaction to expert-load skew (the paper's attack response):
+    insert overrides steering traffic away from hot experts, or trigger a
+    full rebuild of the override table with a fresh hash seed."""
+    rt = state.get("router_table")
+    if rt is None:
+        return state
+    import numpy as np
+    load = np.asarray(jax.device_get(expert_load), dtype=np.float64)
+    mean = max(load.mean(), 1.0)
+    if load.max() > hot_frac * mean and not bool(jax.device_get(rt.rebuilding)):
+        state = dict(state, router_table=dhash.rebuild_start(
+            rt, seed=int(load.sum()) % (2**31 - 1) + 1))
+    return state

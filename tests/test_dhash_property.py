@@ -1,0 +1,153 @@
+"""Property tests: DHash vs a dict oracle under randomized interleavings.
+
+This is the SPMD analogue of the paper's linearizability argument (§5):
+arbitrary batched lookup/insert/delete traffic interleaved at every point of
+the rebuild protocol (start / extract / hazard-window / land / finish) must
+observe exactly the oracle's membership and values — Lemmas 4.1/4.2/4.4.
+
+The generator never re-inserts a currently-live key; the paper's own insert
+has set-semantics in that corner (duplicate across old/new resolved at
+migration, new copy wins) which is covered by an explicit unit test in
+test_dhash_unit.py instead.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import buckets, dhash
+
+Q = 8            # fixed batch width (padded with mask) to avoid recompiles
+KEYS = list(range(1, 33))
+
+_op = st.sampled_from(["insert", "delete", "lookup", "extract", "land",
+                       "start", "finish"])
+_script = st.lists(st.tuples(_op, st.lists(st.sampled_from(KEYS), min_size=1,
+                                           max_size=Q)),
+                   min_size=4, max_size=40)
+
+
+def _pad(keys: list[int]):
+    ks = np.zeros(Q, np.int32)
+    mask = np.zeros(Q, bool)
+    ks[: len(keys)] = keys
+    mask[: len(keys)] = True
+    return jnp.asarray(ks), jnp.asarray(mask)
+
+
+@pytest.fixture(scope="module")
+def fns():
+    return {
+        "insert": jax.jit(dhash.insert),
+        "delete": jax.jit(dhash.delete),
+        "lookup": jax.jit(dhash.lookup),
+        "extract": jax.jit(dhash.rebuild_extract),
+        "land": jax.jit(dhash.rebuild_land),
+        "done": jax.jit(dhash.rebuild_done),
+    }
+
+
+@pytest.mark.parametrize("backend", ["linear", "twochoice", "chain",
+                                     "linear+fwd_hazard"])
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(script=_script, seed=st.integers(0, 2**16))
+def test_oracle_interleaved_rebuild(fns, backend, script, seed):
+    fwd = backend.endswith("+fwd_hazard")
+    backend = backend.split("+")[0]
+    d = dhash.make(backend, capacity=128, chunk=16, seed=seed, fwd_hazard=fwd)
+    oracle: dict[int, int] = {}
+    vcounter = 100
+    rebuilding = False
+
+    for op, keys in script:
+        if op == "insert":
+            fresh = [k for k in dict.fromkeys(keys) if k not in oracle]
+            if not fresh:
+                continue
+            ks, mask = _pad(fresh)
+            vals = ks * 0 + jnp.arange(Q, dtype=jnp.int32) + vcounter
+            d, ok = fns["insert"](d, ks, vals, mask)
+            okn = np.asarray(ok)
+            for i, k in enumerate(fresh):
+                assert okn[i], (backend, "insert failed", k)
+                oracle[k] = vcounter + i
+            vcounter += Q
+        elif op == "delete":
+            ks, mask = _pad(list(dict.fromkeys(keys)))
+            d, ok = fns["delete"](d, ks, mask)
+            okn = np.asarray(ok)
+            for i, k in enumerate(dict.fromkeys(keys)):
+                assert okn[i] == (k in oracle), (backend, "delete", k)
+                oracle.pop(k, None)
+        elif op == "lookup":
+            ks, mask = _pad(keys)
+            found, vals = fns["lookup"](d, ks)
+            fn_, vn = np.asarray(found), np.asarray(vals)
+            for i, k in enumerate(keys):
+                assert fn_[i] == (k in oracle), (backend, "lookup", k, oracle)
+                if k in oracle:
+                    assert vn[i] == oracle[k], (backend, "value", k)
+        elif op == "start" and not rebuilding:
+            d = dhash.rebuild_start(d, seed=seed + vcounter)
+            rebuilding = True
+        elif op == "extract" and rebuilding:
+            d = fns["extract"](d)
+        elif op == "land" and rebuilding:
+            d = fns["land"](d)
+        elif op == "finish" and rebuilding:
+            if bool(jax.device_get(fns["done"](d))):
+                d = dhash.rebuild_finish(d)
+                rebuilding = False
+
+    # quiesce and verify the complete final state
+    if rebuilding:
+        d = dhash.rebuild_all(d)
+    ks, _ = _pad(KEYS[:Q])
+    for chunk_start in range(0, len(KEYS), Q):
+        group = KEYS[chunk_start: chunk_start + Q]
+        ks, _ = _pad(group)
+        found, vals = fns["lookup"](d, ks)
+        for i, k in enumerate(group):
+            assert bool(found[i]) == (k in oracle), (backend, "final", k)
+            if k in oracle:
+                assert int(vals[i]) == oracle[k]
+    assert int(jax.device_get(dhash.count_items(d))) == len(oracle)
+
+
+@pytest.mark.parametrize("backend", ["linear", "twochoice", "chain"])
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(keys=st.lists(st.sampled_from(KEYS), min_size=2, max_size=Q),
+       seed=st.integers(0, 999))
+def test_batch_duplicate_inserts_one_winner(fns, backend, keys, seed):
+    """Within one batch, duplicate keys: exactly one insert wins (the
+    deterministic linearization of the paper's concurrent threads)."""
+    d = dhash.make(backend, capacity=64, chunk=8, seed=seed)
+    ks, mask = _pad(keys)
+    vals = jnp.arange(Q, dtype=jnp.int32) * 10
+    d, ok = fns["insert"](d, ks, vals, mask)
+    okn = np.asarray(ok)[: len(keys)]
+    from collections import Counter
+    c = Counter(keys)
+    # one winner per distinct key
+    assert okn.sum() == len(c)
+    # winner is the first occurrence
+    seen = set()
+    for i, k in enumerate(keys):
+        if k not in seen:
+            assert okn[i], (backend, i, keys)
+            seen.add(k)
+        else:
+            assert not okn[i], (backend, i, keys)
+    # and the stored value is the winner's value
+    found, vals_out = fns["lookup"](d, ks)
+    first_idx = {}
+    for i, k in enumerate(keys):
+        first_idx.setdefault(k, i)
+    for k, i in first_idx.items():
+        j = keys.index(k)
+        assert int(vals_out[j]) == j * 10

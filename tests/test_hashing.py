@@ -1,0 +1,65 @@
+"""Hash-family property tests: determinism, seed sensitivity, range, and
+rough uniformity — the statistical basis for the paper's rebuild defence
+(a fresh seed must actually disperse an adversarial key set)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing
+
+
+@pytest.mark.parametrize("kind", hashing.HASH_KINDS)
+def test_deterministic_and_seed_sensitive(kind):
+    keys = jnp.arange(1, 4097, dtype=jnp.int32)
+    f1, f2 = hashing.fresh(kind, 1), hashing.fresh(kind, 2)
+    a = np.asarray(hashing.hash_u32(f1, keys))
+    b = np.asarray(hashing.hash_u32(f1, keys))
+    c = np.asarray(hashing.hash_u32(f2, keys))
+    np.testing.assert_array_equal(a, b)
+    assert (a != c).mean() > 0.99, kind
+
+
+@pytest.mark.parametrize("kind", hashing.HASH_KINDS)
+@pytest.mark.parametrize("nbuckets", [64, 100, 1024])
+def test_bucket_range_and_uniformity(kind, nbuckets):
+    rng = np.random.default_rng(0)
+    keys = jnp.asarray(rng.choice(10_000_000, 1 << 14, replace=False)
+                       .astype(np.int32))
+    b = np.asarray(hashing.bucket_of(hashing.fresh(kind, 7), keys, nbuckets))
+    assert b.min() >= 0 and b.max() < nbuckets
+    counts = np.bincount(b, minlength=nbuckets)
+    mean = counts.mean()
+    # chi-square-ish sanity: no bucket grossly over/under-loaded
+    assert counts.max() < 3 * mean, (kind, nbuckets, counts.max(), mean)
+    assert (counts > 0).mean() > 0.95
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**20), x=st.integers(-2**31, 2**31 - 1))
+def test_rebuild_disperses_collisions(seed, x):
+    """Keys colliding under one seed must (w.h.p.) spread under another —
+    the paper's whole premise."""
+    rng = np.random.default_rng(seed)
+    f1 = hashing.fresh("mix32", rng)
+    f2 = hashing.fresh("mix32", rng)
+    keys = jnp.asarray(
+        np.random.default_rng(seed + 1).choice(2**30, 512, replace=False)
+        .astype(np.int32))
+    b1 = np.asarray(hashing.bucket_of(f1, keys, 64))
+    collide = keys[b1 == b1[0]]
+    if collide.size < 4:
+        return
+    b2 = np.asarray(hashing.bucket_of(f2, jnp.asarray(collide), 64))
+    assert len(np.unique(b2)) > 1, "new seed failed to disperse"
+
+
+def test_hash_combine_order_dependent():
+    h0 = jnp.full((1,), jnp.uint32(1))
+    a = hashing.hash_combine(hashing.hash_combine(h0, jnp.asarray([3])),
+                             jnp.asarray([5]))
+    b = hashing.hash_combine(hashing.hash_combine(h0, jnp.asarray([5])),
+                             jnp.asarray([3]))
+    assert int(a[0]) != int(b[0])

@@ -1,0 +1,67 @@
+"""Structural invariants: no two live slots share a key, the jitted
+same-shape epoch swap, and conservation of items across the full protocol."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import buckets, dhash
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       nkeys=st.integers(1, 200),
+       ndel=st.integers(0, 100))
+def test_linear_no_duplicate_live_keys(seed, nkeys, ndel):
+    """The claim-round batched insert must never produce two LIVE slots with
+    the same key, under any interleaving of inserts and deletes."""
+    rng = np.random.default_rng(seed)
+    t = buckets.linear_make(512, __import__("repro.core.hashing", fromlist=["fresh"]).fresh("mix32", seed), max_probes=64)
+    keys = jnp.asarray(rng.integers(1, 500, nkeys).astype(np.int32))
+    t, _ = jax.jit(buckets.linear_insert)(t, keys, keys, jnp.ones(nkeys, bool))
+    if ndel:
+        dk = jnp.asarray(rng.integers(1, 500, ndel).astype(np.int32))
+        t, _ = jax.jit(buckets.linear_delete)(t, dk, jnp.ones(ndel, bool))
+        t, _ = jax.jit(buckets.linear_insert)(t, dk, dk * 2, jnp.ones(ndel, bool))
+    live = np.asarray(t.state) == 1
+    lk = np.asarray(t.key)[live]
+    assert len(lk) == len(np.unique(lk)), "duplicate live key"
+
+
+def test_finish_same_shape_jitted_swap():
+    """The fully-jitted epoch swap (same-capacity rebuild) is a no-op until
+    done, then swaps tables and bumps the epoch — inside jit."""
+    d = dhash.make("linear", capacity=128, chunk=128, seed=0)
+    keys = jnp.arange(1, 51, dtype=jnp.int32)
+    d, _ = jax.jit(dhash.insert)(d, keys, keys * 2)
+    d = dhash.rebuild_start(d, seed=9)
+    fin = jax.jit(dhash.finish_same_shape)
+    d2 = fin(d)                       # not done yet -> unchanged epoch
+    assert int(d2.epoch) == 0 and bool(d2.rebuilding)
+    d2 = jax.jit(dhash.rebuild_chunk)(d2)
+    d2 = jax.jit(dhash.rebuild_chunk)(d2)  # land any pending hazard
+    d2 = fin(d2)
+    assert int(d2.epoch) == 1 and not bool(d2.rebuilding)
+    f, v = jax.jit(dhash.lookup)(d2, keys)
+    assert bool(f.all()) and bool((v == keys * 2).all())
+
+
+@pytest.mark.parametrize("backend", ["linear", "twochoice", "chain"])
+def test_item_conservation_across_protocol(backend):
+    """count_items is invariant across extract/land/finish (nothing is lost
+    or duplicated by the hazard window)."""
+    d = dhash.make(backend, capacity=256, chunk=16, seed=3)
+    keys = jnp.arange(1, 101, dtype=jnp.int32)
+    d, _ = jax.jit(dhash.insert)(d, keys, keys)
+    d = dhash.rebuild_start(d, seed=5)
+    step = jax.jit(dhash.rebuild_step)
+    for _ in range(80):
+        assert int(jax.device_get(dhash.count_items(d))) == 100
+        if bool(jax.device_get(dhash.rebuild_done(d))):
+            break
+        d = step(d)
+    d = dhash.rebuild_finish(d)
+    assert int(jax.device_get(dhash.count_items(d))) == 100

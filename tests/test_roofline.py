@@ -1,0 +1,91 @@
+"""HLO cost-walker validation: exact flop counts on known programs,
+trip-count multiplication, and collective accounting."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_cost
+
+
+def _analyze(fn, *args):
+    text = jax.jit(fn).lower(*args).compile().as_text()
+    return hlo_cost.analyze(text)
+
+
+def test_single_matmul_flops_exact():
+    a = jnp.zeros((128, 256), jnp.float32)
+    b = jnp.zeros((256, 512), jnp.float32)
+    cost = _analyze(lambda a, b: a @ b, a, b)
+    assert cost.flops == 2 * 128 * 256 * 512, cost.flops
+
+
+def test_scan_multiplies_trip_count():
+    w = jnp.zeros((10, 64, 64), jnp.float32)
+    x = jnp.zeros((8, 64), jnp.float32)
+
+    def fn(w, x):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    cost = _analyze(fn, w, x)
+    expect = 10 * 2 * 8 * 64 * 64
+    # exact trip multiplication of the dot inside the while body
+    assert abs(cost.flops - expect) / expect < 0.01, (cost.flops, expect)
+
+
+def test_nested_scan_multiplies():
+    w = jnp.zeros((4, 3, 32, 32), jnp.float32)
+    x = jnp.zeros((8, 32), jnp.float32)
+
+    def fn(w, x):
+        def outer(c, wo):
+            def inner(ci, wi):
+                return ci @ wi, None
+            c2, _ = jax.lax.scan(inner, c, wo)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, w)
+        return y
+
+    cost = _analyze(fn, w, x)
+    expect = 4 * 3 * 2 * 8 * 32 * 32
+    assert abs(cost.flops - expect) / expect < 0.01, (cost.flops, expect)
+
+
+def test_scan_stash_counts_slices_not_buffer():
+    """The DUS writing a scan's stacked outputs must count the slice (x trips
+    == one pass over the stack), never the full buffer per trip."""
+    x = jnp.zeros((8, 128), jnp.float32)
+
+    def fn(x):
+        def body(c, _):
+            c = c * 1.5
+            return c, c          # stacked output [64, 8, 128]
+        _, ys = jax.lax.scan(body, x, None, length=64)
+        return ys
+
+    cost = _analyze(fn, x)
+    stack_bytes = 64 * 8 * 128 * 4
+    # a few stack-sized passes (init + compute + slice writes) is fine; the
+    # bug this guards against counts the FULL buffer per trip (~66x+)
+    assert cost.bytes < 20 * stack_bytes, (cost.bytes, stack_bytes)
+
+
+def test_shape_bytes_tuple_and_dtypes():
+    assert hlo_cost._shape_bytes("bf16[2,3]") == 12
+    assert hlo_cost._shape_bytes("(f32[4], s8[8], pred[2])") == 26
+    assert hlo_cost._shape_bytes("token[]") == 0
+
+
+def test_roofline_terms():
+    from repro.launch.analysis import Roofline
+    rl = Roofline(chips=256, hlo_flops=197e12 * 256, hlo_bytes=819e9 * 256,
+                  coll_bytes=0.0, model_flops=197e12 * 256 / 2)
+    assert rl.t_compute == pytest.approx(1.0)
+    assert rl.t_memory == pytest.approx(1.0)
+    assert rl.bottleneck in ("compute", "memory")
+    assert rl.mfu == pytest.approx(0.5)

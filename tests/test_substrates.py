@@ -1,0 +1,157 @@
+"""Substrate tests: optimizer, checkpointing, data pipeline, sharding rules."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import DataConfig, dedup_batch, synth_batch
+from repro.optim import optimizer as opt_lib
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def _quadratic_fit(cfg, steps=200):
+    target = jnp.asarray([1.5, -2.0, 0.5, 3.0])
+    params = {"w": jnp.zeros((4,))}
+    state = opt_lib.init_opt_state(params, cfg)
+
+    @jax.jit
+    def step(params, state):
+        def loss(p):
+            return jnp.sum((p["w"] - target) ** 2)
+        l, g = jax.value_and_grad(loss)(params)
+        params, state, m = opt_lib.apply_updates(params, g, state, cfg)
+        return params, state, l
+
+    for _ in range(steps):
+        params, state, l = step(params, state)
+    return float(jnp.max(jnp.abs(params["w"] - target))), float(l)
+
+
+def test_adamw_converges():
+    cfg = opt_lib.OptConfig(lr=5e-2, weight_decay=0.0, total_steps=200,
+                            warmup_steps=5, schedule="const")
+    err, _ = _quadratic_fit(cfg)
+    assert err < 0.05, err
+
+
+def test_grad_compression_error_feedback_converges():
+    """int8 error-feedback compression must not break convergence (the
+    feedback buffer recovers the quantization error across steps)."""
+    cfg = opt_lib.OptConfig(lr=5e-2, weight_decay=0.0, total_steps=300,
+                            warmup_steps=5, schedule="const",
+                            grad_compression=True)
+    err, _ = _quadratic_fit(cfg, steps=300)
+    assert err < 0.1, err
+
+
+def test_lr_schedule_shapes():
+    cfg = opt_lib.OptConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(opt_lib.lr_at(cfg, jnp.asarray(s))) for s in (0, 5, 10, 55, 100)]
+    assert lrs[0] == 0.0 and lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert 0 < lrs[3] < 1.0 and lrs[4] == pytest.approx(0.0, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_atomic_gc(tmp_path):
+    from repro.train import checkpoint as ck
+    state = {"params": {"w": jnp.arange(12.0).reshape(3, 4)},
+             "opt": {"step": jnp.asarray(7)}}
+    for step in (10, 20, 30, 40):
+        ck.save(str(tmp_path), step, state, keep=2)
+    assert ck.latest_step(str(tmp_path)) == 40
+    # gc kept only 2
+    dirs = [d for d in os.listdir(tmp_path) if d.startswith("step_")]
+    assert len(dirs) == 2
+    restored, step = ck.restore(str(tmp_path), state)
+    assert step == 40
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    from repro.train import checkpoint as ck
+    state = {"w": jnp.ones((4,))}
+    path = ck.save(str(tmp_path), 1, state)
+    fn = os.path.join(path, "w.npy")
+    arr = np.load(fn)
+    arr[0] = 999.0
+    np.save(fn, arr)
+    with pytest.raises(IOError, match="corrupt"):
+        ck.restore(str(tmp_path), state)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_elastic():
+    cfg = DataConfig(vocab_size=1000, seq_len=64, global_batch=8, seed=3)
+    a = synth_batch(cfg, step=5)
+    b = synth_batch(cfg, step=5)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+    # elastic: 2 shards concatenated == 1 shard global
+    s0 = synth_batch(cfg, step=5, shard=0, nshards=2)
+    s1 = synth_batch(cfg, step=5, shard=1, nshards=2)
+    both = np.concatenate([np.asarray(s0["tokens"]), np.asarray(s1["tokens"])])
+    np.testing.assert_array_equal(both, np.asarray(a["tokens"]))
+    # different steps differ
+    c = synth_batch(cfg, step=6)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))
+    # labels are next-token shifted
+    np.testing.assert_array_equal(np.asarray(a["labels"][:, :-1]),
+                                  np.asarray(a["tokens"][:, 1:]))
+
+
+def test_dedup_batch_drops_repeats():
+    from repro.core import dhash
+    cfg = DataConfig(vocab_size=1000, seq_len=256, global_batch=4, seed=1)
+    table = dhash.make("linear", capacity=4096, chunk=64, seed=0)
+    batch = synth_batch(cfg, 0)
+    table, keep1 = dedup_batch(table, batch["tokens"], block=64)
+    assert bool(np.asarray(keep1).all()), "first sight: all kept"
+    # same batch again -> all blocks are duplicates
+    table, keep2 = dedup_batch(table, batch["tokens"], block=64)
+    assert not bool(np.asarray(keep2).any()), "second sight: all dropped"
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+def test_leaf_spec_rules():
+    from jax.sharding import PartitionSpec as P
+    from repro.models.sharding import leaf_spec
+
+    class K:  # fake DictKey
+        def __init__(self, key):
+            self.key = key
+
+    sizes = {"data": 16, "model": 16}
+    # heads divisible -> model on head axis
+    assert leaf_spec((K("attn_stack"), K("wq")), (26, 2304, 32, 128),
+                     axis_sizes=sizes) == P(None, None, "model", None)
+    # heads NOT divisible -> replicated (no invalid sharding)
+    assert leaf_spec((K("attn_stack"), K("wq")), (26, 2304, 8, 256),
+                     axis_sizes=sizes) == P(None, None, None, None)
+    # fsdp adds a data shard on D
+    assert leaf_spec((K("attn_stack"), K("wq")), (26, 2304, 8, 256),
+                     axis_sizes=sizes, fsdp=True) == P(None, "data", None, None)
+    # experts over model
+    assert leaf_spec((K("attn_stack"), K("we_g")), (35, 128, 7168, 4864),
+                     axis_sizes=sizes) == P(None, "model", None, None)
+    # vocab over model
+    assert leaf_spec((K("embed"),), (256000, 2304),
+                     axis_sizes=sizes) == P("model", None)
+    # norms replicated
+    assert leaf_spec((K("final_norm"),), (2304,), axis_sizes=sizes) == P(None)
