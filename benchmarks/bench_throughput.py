@@ -18,7 +18,8 @@ import argparse
 
 import numpy as np
 
-from benchmarks.common import ALGOS, UNIVERSE, Workload, run_throughput
+from benchmarks.common import (ALGOS, UNIVERSE, DHashDriver, Workload,
+                               run_throughput)
 
 
 def run(alpha: int, mix: tuple[int, int, int], qs=(256, 1024, 4096), *,
@@ -42,16 +43,45 @@ def run(alpha: int, mix: tuple[int, int, int], qs=(256, 1024, 4096), *,
     return rows
 
 
+def run_fused(alpha=20, mix=(90, 5, 5), qs=(1024, 4096), *, steps=4,
+              quiet=False):
+    """fused=on|off continuous-rebuild throughput for the linear backend
+    (interpret-mode wall clock — trend data only; the op-count acceptance
+    lives in bench_rebuild.run_fused_probe)."""
+    nbuckets = 128
+    n_items = alpha * nbuckets
+    rng = np.random.default_rng(0)
+    present = rng.choice(UNIVERSE, size=n_items, replace=False).astype(np.int32)
+    rows = []
+    for fused in (False, True):
+        drv = DHashDriver(nbuckets, n_items, backend="linear", seed=1,
+                          fused=fused)
+        drv.populate(present)
+        for q in qs:
+            wl = Workload(q=q, mix=mix)
+            mops = run_throughput(drv, wl, present, steps=steps,
+                                  rng=np.random.default_rng(q)) / 1e6
+            rows.append((drv.name, alpha, mix[0], q, mops))
+            if not quiet:
+                print(f"{drv.name:20s} alpha={alpha:<4d} mix={mix[0]}% "
+                      f"Q={q:<6d} {mops:8.3f} Mops/s")
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--alpha", type=int, nargs="*", default=[20, 200])
     ap.add_argument("--qs", type=int, nargs="*", default=[256, 1024, 4096])
     ap.add_argument("--steps", type=int, default=6)
+    ap.add_argument("--fused", action="store_true",
+                    help="also run the fused=on|off linear-backend variants")
     args = ap.parse_args(argv)
     all_rows = []
     for alpha in args.alpha:
         for mix in ((90, 5, 5), (80, 10, 10)):
             all_rows += run(alpha, mix, tuple(args.qs), steps=args.steps)
+    if args.fused:
+        all_rows += run_fused(qs=tuple(args.qs), steps=args.steps)
     # paper-style summary: DHash speedup over each contender at max Q
     qmax = max(args.qs)
     for alpha in args.alpha:

@@ -21,6 +21,27 @@ I32 = jnp.int32
 UNIVERSE = 10_000_000          # key range U, paper §6.1
 
 
+def count_primitives(closed_jaxpr, names):
+    """Recursively count jaxpr primitives (incl. cond/scan/while bodies) —
+    the interpret-mode proxy for per-batch pass counts (sorts, pallas_calls)."""
+    from collections import Counter
+    ctr = Counter()
+
+    def rec(jaxpr):
+        for eq in jaxpr.eqns:
+            ctr[eq.primitive.name] += 1
+            for p in eq.params.values():
+                if hasattr(p, "jaxpr"):
+                    rec(p.jaxpr if hasattr(p.jaxpr, "eqns") else p.jaxpr.jaxpr)
+                if isinstance(p, (list, tuple)):
+                    for q in p:
+                        if hasattr(q, "jaxpr"):
+                            rec(q.jaxpr if hasattr(q.jaxpr, "eqns") else q.jaxpr.jaxpr)
+
+    rec(closed_jaxpr.jaxpr)
+    return {n: ctr.get(n, 0) for n in names}
+
+
 def timeit(fn, *args, warmup=3, iters=10):
     for _ in range(warmup):
         out = fn(*args)
@@ -51,9 +72,9 @@ class Driver:
 
 class DHashDriver(Driver):
     def __init__(self, nbuckets, n_items, *, backend="chain", seed=0,
-                 max_chain=None, chunk=1024):
+                 max_chain=None, chunk=1024, fused=False):
         self.backend = backend
-        self.name = f"DHash-{backend}"
+        self.name = f"DHash-{backend}" + ("-fused" if fused else "")
         alpha = n_items / nbuckets
         mc = max_chain or int(alpha * 2 + 32)
         if backend == "chain":
@@ -62,17 +83,17 @@ class DHashDriver(Driver):
                                 max_chain=mc)
         else:
             self.d = dhash.make(backend, capacity=int(n_items * 1.3),
-                                chunk=chunk, seed=seed)
+                                chunk=chunk, seed=seed, fused=fused)
         self._seed = seed
 
-        def fused(d, lk, ik, dk):
+        def step_body(d, lk, ik, dk):   # distinct from the `fused` bool arg
             found, _ = dhash.lookup(d, lk)
             d, ok_i = dhash.insert(d, ik, ik)
             d, ok_d = dhash.delete(d, dk)
             d = dhash.rebuild_step(d)
             return d, (found.sum(), ok_i.sum(), ok_d.sum())
 
-        self._step = jax.jit(fused)
+        self._step = jax.jit(step_body)
         self._done = jax.jit(dhash.rebuild_done)
         self._chunk = jax.jit(dhash.rebuild_chunk)
 

@@ -75,11 +75,41 @@ def kvcache_rehash():
          f"p50_over_{r['rehash_steps']}steps")
 
 
+def fused_probe():
+    from benchmarks.bench_rebuild import run_fused_probe
+    r = run_fused_probe(batch=4096, n_items=3_000, quiet=True)
+    for name in ("fused", "unfused"):
+        _row(f"fused_probe/{name}/q{r['batch']}", r[name]["wall_us"],
+             f"{r[name]['sort']}sorts_{r[name]['pallas_call']}pallas")
+    _row("fused_probe/pass_ratio", 0.0, f"{r['pass_ratio']:.2f}x_fewer_passes")
+
+
 TABLES = [fig2_throughput, fig3_rebuild, fig4_portability, s62_oversubscribe,
-          s1_attack, moe_router, kvcache_rehash]
+          s1_attack, moe_router, kvcache_rehash, fused_probe]
 
 
-def main() -> None:
+def quick() -> None:
+    """CI smoke mode: exercises the perf harness end-to-end in minutes —
+    the fused-probe acceptance check (pass counts + BENCH_fused_probe.json)
+    plus a tiny fig3 rebuild sweep so perf code can't silently rot."""
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    fused_probe()
+    from benchmarks.bench_rebuild import run as rebuild_run
+    for name, n, dt in rebuild_run(ns=(2_000,), quiet=True):
+        _row(f"fig3/{name}/n{n}", dt * 1e6, f"{dt*1e3:.1f}ms_full_rebuild")
+    print(f"# quick done in {time.time()-t0:.0f}s", flush=True)
+
+
+def main(argv=None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fused-probe acceptance + tiny fig3")
+    args = ap.parse_args(argv)
+    if args.quick:
+        quick()
+        return
     print("name,us_per_call,derived")
     for fn in TABLES:
         t0 = time.time()

@@ -86,9 +86,11 @@ class LinearTable:
 
 
 def linear_make(capacity: int, hfn: hashing.HashFn, max_probes: int = 64) -> LinearTable:
-    z = jnp.zeros((capacity,), I32)
+    # distinct buffers per field (aliased leaves break jit buffer donation)
+    def z():
+        return jnp.zeros((capacity,), I32)
     return LinearTable(capacity=capacity, max_probes=max_probes, hfn=hfn,
-                       key=z, val=z, state=z)
+                       key=z(), val=z(), state=z())
 
 
 def linear_lookup(t: LinearTable, keys: jax.Array):
@@ -191,6 +193,40 @@ def linear_count_live(t: LinearTable):
     return jnp.sum(t.state == LIVE)
 
 
+def linear_clear(t: LinearTable) -> LinearTable:
+    z = jnp.zeros((t.capacity,), I32)
+    return LinearTable(capacity=t.capacity, max_probes=t.max_probes, hfn=t.hfn,
+                       key=z, val=z, state=z)
+
+
+# -- Pallas-accelerated linear paths (kernels/ops.py): same observable set
+# semantics as linear_lookup/linear_insert, hot loop in VMEM ----------------
+
+def linear_lookup_fused(t: LinearTable, keys: jax.Array, *,
+                        interpret: bool = True):
+    """Kernel-backed lookup.  Returns (found, vals) — no slot locations (the
+    delete path, which needs them, stays on the jnp path)."""
+    from repro.kernels import ops
+    h0 = hashing.bucket_of(t.hfn, keys, t.capacity)
+    return ops.probe_lookup(t.key, t.val, t.state, h0, keys,
+                            max_probes=t.max_probes, interpret=interpret)
+
+
+def linear_insert_fused(t: LinearTable, keys: jax.Array, vals: jax.Array,
+                        mask: jax.Array, *, interpret: bool = True):
+    """Kernel-backed insert: batch_winners dedup (the kernel's caller
+    contract), then one claim pass + one scatter instead of the
+    O(Q x max_probes) jnp claim loop."""
+    from repro.kernels import ops
+    winner = batch_winners(keys, mask)
+    h0 = hashing.bucket_of(t.hfn, keys, t.capacity)
+    tk, tv, ts, ok = ops.probe_insert(t.key, t.val, t.state, h0, keys, vals,
+                                      winner, max_probes=t.max_probes,
+                                      interpret=interpret)
+    return LinearTable(capacity=t.capacity, max_probes=t.max_probes,
+                       hfn=t.hfn, key=tk, val=tv, state=ts), ok
+
+
 # ---------------------------------------------------------------------------
 # twochoice: bucketed 2-choice hashing (W-wide vector buckets)
 # ---------------------------------------------------------------------------
@@ -209,9 +245,10 @@ class TwoChoiceTable:
 
 def twochoice_make(nbuckets: int, hfn_a: hashing.HashFn, hfn_b: hashing.HashFn,
                    width: int = 8, max_rounds: int = 8) -> TwoChoiceTable:
-    z = jnp.zeros((nbuckets, width), I32)
+    def z():
+        return jnp.zeros((nbuckets, width), I32)
     return TwoChoiceTable(nbuckets=nbuckets, width=width, max_rounds=max_rounds,
-                          hfn_a=hfn_a, hfn_b=hfn_b, key=z, val=z, state=z)
+                          hfn_a=hfn_a, hfn_b=hfn_b, key=z(), val=z(), state=z())
 
 
 def _tc_rows(t: TwoChoiceTable, keys: jax.Array):
@@ -296,6 +333,13 @@ def twochoice_extract_chunk(t: TwoChoiceTable, cursor: jax.Array, n: int):
 
 def twochoice_count_live(t: TwoChoiceTable):
     return jnp.sum(t.state == LIVE)
+
+
+def twochoice_clear(t: TwoChoiceTable) -> TwoChoiceTable:
+    z = jnp.zeros((t.nbuckets, t.width), I32)
+    return TwoChoiceTable(nbuckets=t.nbuckets, width=t.width,
+                          max_rounds=t.max_rounds, hfn_a=t.hfn_a,
+                          hfn_b=t.hfn_b, key=z, val=z, state=z)
 
 
 # ---------------------------------------------------------------------------
@@ -444,17 +488,30 @@ def chain_count_live(t: ChainTable):
     return jnp.sum(t.astate == LIVE)
 
 
+def chain_clear(t: ChainTable) -> ChainTable:
+    n = t.arena
+    return ChainTable(
+        nbuckets=t.nbuckets, arena=n, max_chain=t.max_chain, hfn=t.hfn,
+        akey=jnp.zeros((n,), I32), aval=jnp.zeros((n,), I32),
+        anext=jnp.full((n,), -1, I32), astate=jnp.zeros((n,), I32),
+        heads=jnp.full((t.nbuckets,), -1, I32),
+        free_stack=jnp.arange(n, dtype=I32), free_top=jnp.asarray(n, I32))
+
+
 # ---------------------------------------------------------------------------
 # dispatch facade
 # ---------------------------------------------------------------------------
 
 _OPS: dict[str, dict[str, Any]] = {
     "linear": dict(lookup=linear_lookup, insert=linear_insert, delete=linear_delete,
-                   extract_chunk=linear_extract_chunk, count_live=linear_count_live),
+                   extract_chunk=linear_extract_chunk, count_live=linear_count_live,
+                   clear=linear_clear),
     "twochoice": dict(lookup=twochoice_lookup, insert=twochoice_insert, delete=twochoice_delete,
-                      extract_chunk=twochoice_extract_chunk, count_live=twochoice_count_live),
+                      extract_chunk=twochoice_extract_chunk, count_live=twochoice_count_live,
+                      clear=twochoice_clear),
     "chain": dict(lookup=chain_lookup, insert=chain_insert, delete=chain_delete,
-                  extract_chunk=chain_extract_chunk, count_live=chain_count_live),
+                  extract_chunk=chain_extract_chunk, count_live=chain_count_live,
+                  clear=chain_clear),
 }
 
 
@@ -486,6 +543,13 @@ def extract_chunk(t, cursor, n):
 
 def count_live(t):
     return _OPS[backend_of(t)]["count_live"](t)
+
+
+def clear(t):
+    """Empty the table in place (shape/hash-function preserving, jittable) —
+    the on-device reset of a drained table before it becomes the next rebuild
+    target."""
+    return _OPS[backend_of(t)]["clear"](t)
 
 
 def capacity_of(t) -> int:

@@ -52,12 +52,16 @@ from repro.core.struct_utils import pytree_dataclass, replace
 I32 = jnp.int32
 
 
-@pytree_dataclass(meta_fields=("backend", "chunk", "fwd_hazard"))
+@pytree_dataclass(meta_fields=("backend", "chunk", "fwd_hazard", "fused"))
 class DHashState:
     backend: str
     chunk: int                  # hazard buffer capacity (entries per rebuild chunk)
     fwd_hazard: bool            # linear backend: resolve hazard hits via
                                 # MIGRATED-slot forwarding (zero extra passes)
+    fused: bool                 # linear backend: route lookup/insert through
+                                # the Pallas kernels (kernels/ops.py); the
+                                # rebuild-epoch lookup becomes ONE sort + ONE
+                                # pallas_call (old+hazard+new in one pass)
     old: Any                    # active table (backend pytree)
     new: Any                    # target table; meaningful only while rebuilding
     hazard_key: jax.Array       # [chunk] i32
@@ -95,13 +99,19 @@ def _next_pow2(x: int) -> int:
 
 
 def make(backend: str = "linear", capacity: int = 1024, *, chunk: int = 256,
-         seed: int = 0, fwd_hazard: bool = False, **kw) -> DHashState:
+         seed: int = 0, fwd_hazard: bool = False, fused: bool = False,
+         **kw) -> DHashState:
+    if fused and backend != "linear":
+        raise ValueError("fused kernels are implemented for the linear "
+                         "backend only (see ROADMAP open items)")
     old = _make_table(backend, capacity, seed, **kw)
     new = _make_table(backend, capacity, seed + 1, **kw)
-    z = jnp.zeros((chunk,), I32)
+    # distinct buffers per field (aliased leaves break jit buffer donation)
     return DHashState(backend=backend, chunk=chunk, fwd_hazard=fwd_hazard,
-                      old=old, new=new,
-                      hazard_key=z, hazard_val=z, hazard_live=jnp.zeros((chunk,), bool),
+                      fused=fused, old=old, new=new,
+                      hazard_key=jnp.zeros((chunk,), I32),
+                      hazard_val=jnp.zeros((chunk,), I32),
+                      hazard_live=jnp.zeros((chunk,), bool),
                       cursor=jnp.asarray(0, I32), rebuilding=jnp.asarray(False),
                       epoch=jnp.asarray(0, I32))
 
@@ -118,13 +128,28 @@ def _hazard_probe(d: DHashState, keys: jax.Array):
 
 
 def lookup(d: DHashState, keys: jax.Array):
-    """Batched lookup honouring the rebuild protocol. Returns (found, vals)."""
+    """Batched lookup honouring the rebuild protocol. Returns (found, vals).
+
+    With ``fused`` (linear backend) both branches run on the Pallas kernels;
+    the rebuild-epoch branch is the fused probe2 kernel: ONE argsort + ONE
+    pallas_call cover the whole old -> hazard -> new ordered check."""
 
     def fast(dd: DHashState):
+        if dd.fused:
+            return buckets.linear_lookup_fused(dd.old, keys)
         f, v, _ = buckets.lookup(dd.old, keys)
         return f, v
 
     def slow(dd: DHashState):
+        if dd.fused:
+            from repro.kernels import ops
+            h0_old = hashing.bucket_of(dd.old.hfn, keys, dd.old.capacity)
+            h0_new = hashing.bucket_of(dd.new.hfn, keys, dd.new.capacity)
+            return ops.ordered_lookup_fused(
+                (dd.old.key, dd.old.val, dd.old.state),
+                (dd.new.key, dd.new.val, dd.new.state),
+                dd.hazard_key, dd.hazard_val, dd.hazard_live,
+                h0_old, h0_new, keys, max_probes=dd.old.max_probes)
         if dd.fwd_hazard and dd.backend == "linear":
             # beyond-paper: the old-table probe already passes over the
             # MIGRATED slots of the in-flight chunk, so the hazard check is
@@ -153,12 +178,17 @@ def insert(d: DHashState, keys: jax.Array, vals: jax.Array, mask: jax.Array | No
     if mask is None:
         mask = jnp.ones(keys.shape, bool)
 
+    def _ins(dd: DHashState, t, kk, vv, mm):
+        if dd.fused:
+            return buckets.linear_insert_fused(t, kk, vv, mm)
+        return buckets.insert(t, kk, vv, mm)
+
     def fast(dd: DHashState):
-        t, ok = buckets.insert(dd.old, keys, vals, mask)
+        t, ok = _ins(dd, dd.old, keys, vals, mask)
         return replace(dd, old=t), ok
 
     def slow(dd: DHashState):
-        t, ok = buckets.insert(dd.new, keys, vals, mask)
+        t, ok = _ins(dd, dd.new, keys, vals, mask)
         return replace(dd, new=t), ok
 
     return jax.lax.cond(d.rebuilding, slow, fast, d)
@@ -281,6 +311,35 @@ def rebuild_step(d: DHashState) -> DHashState:
     """One rebuild transition per call: land if hazard pending, else extract.
     Interleave with op batches for concurrent-rebuild execution."""
     return jax.lax.cond(d.hazard_live.any(), rebuild_land, rebuild_extract, d)
+
+
+def _reseed_table(t, salt: jax.Array):
+    """Shape-preserving on-device hash refresh for any backend table."""
+    if isinstance(t, buckets.LinearTable):
+        return replace(t, hfn=hashing.reseed(t.hfn, salt))
+    if isinstance(t, buckets.TwoChoiceTable):
+        return replace(t, hfn_a=hashing.reseed(t.hfn_a, salt),
+                       hfn_b=hashing.reseed(t.hfn_b, salt + 0x5851F42))
+    return replace(t, hfn=hashing.reseed(t.hfn, salt))
+
+
+def rebuild_autostart(d: DHashState) -> DHashState:
+    """Fully-jitted rebuild start: when NOT rebuilding, clear the (drained)
+    standby table, reseed its hash function on-device from the epoch counter
+    (hashing.reseed — no host RNG), and raise ``rebuilding``.
+
+    This is the continuous-rebuild engine's device-side replacement for the
+    host-level ``rebuild_start``: combined with ``finish_same_shape`` the
+    steady state never leaves the accelerator.  Valid when old/new share
+    static shapes (same-capacity rebuilds)."""
+
+    def go(dd: DHashState):
+        new = buckets.clear(dd.new)
+        new = _reseed_table(new, dd.epoch + 1)
+        return replace(dd, new=new, cursor=jnp.asarray(0, I32),
+                       rebuilding=jnp.asarray(True))
+
+    return jax.lax.cond(d.rebuilding, lambda dd: dd, go, d)
 
 
 # ---------------------------------------------------------------------------

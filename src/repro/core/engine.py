@@ -1,10 +1,30 @@
-"""Host-side engine: interleaves full-rate op batches with rebuild transitions.
+"""Engine: interleaves full-rate op batches with rebuild transitions.
 
 This is the SPMD rendering of the paper's concurrency: "worker threads"
 (batched lookup/insert/delete steps) run at full rate while a rebuild makes
 incremental progress — one extract or land transition per engine step, with
 the hazard window genuinely observable by the ops interleaved between the two
-halves.  The engine also owns the host-level epoch swap (rebuild_finish).
+halves.
+
+The steady state is **fully on-device**: the jitted step performs the op
+batch, one rebuild transition, the epoch swap (``finish_same_shape``, valid
+whenever old/new share static shapes — every default rebuild), and, in
+continuous-rebuild mode, the next rebuild start (``rebuild_autostart``, which
+reseeds the hash function on-device).  State buffers are **donated**
+(``donate_argnums``) so XLA updates tables in place instead of copying them
+every step, and the host polls ``rebuild_done`` only every ``poll_every``
+steps (default 32) — zero ``device_get`` round-trips on the other K-1 steps,
+so dispatch is never serialized on a device->host sync.
+
+Only a *shape-changing* rebuild (a user-supplied ``new_table`` with a
+different capacity) still needs the host: its epoch swap happens at the next
+poll via ``rebuild_finish`` — up to K-1 steps late, which is safe because a
+completed-but-unswapped rebuild still answers every op correctly through the
+ordered check.
+
+Ownership note: the engine donates its state buffers to the jitted step, so
+after the first ``step()`` the ``DHashState`` passed to the constructor must
+not be used elsewhere.
 
 Used by the benchmarks (continuous-rebuild mode reproduces the paper's Fig 2
 setup) and by the serving engine for live cache rehash.
@@ -12,15 +32,16 @@ setup) and by the serving engine for live cache rehash.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import dhash
 
 I32 = jnp.int32
+
+DEFAULT_POLL_EVERY = 32
 
 
 @dataclass
@@ -30,6 +51,7 @@ class EngineStats:
     hits: int = 0
     rebuilds_completed: int = 0
     rebuild_transitions: int = 0
+    host_syncs: int = 0         # engine-internal device_get round-trips
 
 
 @dataclass
@@ -39,19 +61,59 @@ class DHashEngine:
     state: dhash.DHashState
     continuous_rebuild: bool = False   # paper Fig 2: rebuild forever
     rebuild_seed: int = 1234
-    stats: EngineStats = field(default_factory=EngineStats)
-    _step_fn: Callable | None = None
+    poll_every: int = DEFAULT_POLL_EVERY   # host polls 1 of every K steps
+    _stats: EngineStats = field(default_factory=EngineStats, repr=False)
+    _step_fns: dict = field(default_factory=dict, init=False, repr=False)
+    _poll_fn: Callable | None = field(default=None, init=False, repr=False)
+    _lookup_fn: Callable | None = field(default=None, init=False, repr=False)
+    _count_fn: Callable | None = field(default=None, init=False, repr=False)
+    _epoch0: int = field(default=0, init=False, repr=False)
+    _last_poll_step: int = field(default=-1, init=False, repr=False)
 
     def __post_init__(self):
-        # one fused jitted transition: ops + one rebuild transition
-        def fused(d, lk, ik, iv, dk, imask, dmask):
-            found, vals = dhash.lookup(d, lk)
-            d, ok_i = dhash.insert(d, ik, iv, imask)
-            d, ok_d = dhash.delete(d, dk, dmask)
-            d = dhash.rebuild_step(d)
-            return d, (found, vals, ok_i, ok_d)
+        # take ownership: copy so donation never sees aliased or shared
+        # buffers (e.g. a caller-held reference or zeros reused across leaves)
+        self.state = jax.tree_util.tree_map(jnp.copy, self.state)
+        self._poll_fn = jax.jit(
+            lambda d: (d.epoch, d.rebuilding, dhash.rebuild_done(d)))
+        self._lookup_fn = jax.jit(dhash.lookup)
+        self._count_fn = jax.jit(dhash.count_items)
+        self._epoch0 = int(jax.device_get(self.state.epoch))
 
-        self._step_fn = jax.jit(fused)
+    # -- jitted step ---------------------------------------------------------
+
+    def _get_step_fn(self, swap_on_device: bool):
+        key = swap_on_device
+        if key not in self._step_fns:
+            autostart = swap_on_device and self.continuous_rebuild
+
+            def fused(d, lk, ik, iv, dk, imask, dmask):
+                found, vals = dhash.lookup(d, lk)
+                d, ok_i = dhash.insert(d, ik, iv, imask)
+                d, ok_d = dhash.delete(d, dk, dmask)
+                d = dhash.rebuild_step(d)
+                if swap_on_device:
+                    d = dhash.finish_same_shape(d)   # on-device epoch swap
+                    if autostart:
+                        d = dhash.rebuild_autostart(d)
+                return d, (found, vals, ok_i, ok_d)
+
+            # donate the state: tables update in place, no per-step copy
+            self._step_fns[key] = jax.jit(fused, donate_argnums=(0,))
+        return self._step_fns[key]
+
+    def _swap_on_device(self) -> bool:
+        """True iff old/new share static shapes, so the epoch swap can run
+        inside the jitted step (host metadata only — no device sync)."""
+        old, new = self.state.old, self.state.new
+        if (jax.tree_util.tree_structure(old)
+                != jax.tree_util.tree_structure(new)):
+            return False
+        return all(
+            getattr(a, "shape", None) == getattr(b, "shape", None)
+            and getattr(a, "dtype", None) == getattr(b, "dtype", None)
+            for a, b in zip(jax.tree_util.tree_leaves(old),
+                            jax.tree_util.tree_leaves(new)))
 
     def step(self, lookup_keys, ins_keys, ins_vals, del_keys,
              ins_mask=None, del_mask=None):
@@ -61,36 +123,68 @@ class DHashEngine:
         dk = jnp.asarray(del_keys, I32)
         im = jnp.ones(ik.shape, bool) if ins_mask is None else jnp.asarray(ins_mask)
         dm = jnp.ones(dk.shape, bool) if del_mask is None else jnp.asarray(del_mask)
-        self.state, out = self._step_fn(self.state, lk, ik, iv, dk, im, dm)
-        self.stats.steps += 1
-        self.stats.ops += lk.size + ik.size + dk.size
-        self._maybe_epoch()
+        fn = self._get_step_fn(self._swap_on_device())
+        self.state, out = fn(self.state, lk, ik, iv, dk, im, dm)
+        self._stats.steps += 1
+        self._stats.ops += lk.size + ik.size + dk.size
+        if self.poll_every <= 1 or self._stats.steps % self.poll_every == 0:
+            self._poll()
         return out
+
+    # -- host-side polling (1 of every K steps) ------------------------------
+
+    def _poll(self):
+        """One batched device_get: refresh stats; finish a shape-changing
+        rebuild; (re)start a rebuild in continuous mode if the on-device
+        autostart could not (shape-changing tables)."""
+        epoch, rebuilding, done = (
+            int(x) for x in jax.device_get(self._poll_fn(self.state)))
+        self._stats.host_syncs += 1
+        self._last_poll_step = self._stats.steps
+        if done:
+            # only reachable when the on-device swap wasn't applicable
+            self.state = dhash.rebuild_finish(self.state)
+            epoch += 1
+            rebuilding = False
+        self._stats.rebuilds_completed = epoch - self._epoch0
+        if self.continuous_rebuild and not rebuilding:
+            self.request_rebuild()
+
+    @property
+    def stats(self) -> EngineStats:
+        """Engine statistics.  Reading them performs a refresh-only device
+        read if the engine stepped since the last poll (so
+        ``rebuilds_completed`` is current) — it never finishes or starts a
+        rebuild (those happen only on ``step()``'s K-step poll), and
+        steady-state ``step()`` calls themselves stay sync-free."""
+        if self._stats.steps != self._last_poll_step:
+            epoch = int(jax.device_get(self.state.epoch))
+            self._stats.host_syncs += 1
+            self._last_poll_step = self._stats.steps
+            self._stats.rebuilds_completed = epoch - self._epoch0
+        return self._stats
 
     def request_rebuild(self, *, seed: int | None = None, new_table=None):
         """Begin a live rebuild (fails like the paper's trylock if one is
         already in progress)."""
+        self._stats.host_syncs += 1
         if bool(jax.device_get(self.state.rebuilding)):
             return False  # -EBUSY
+        if new_table is not None:
+            new_table = jax.tree_util.tree_map(jnp.copy, new_table)  # own it
         self.state = dhash.rebuild_start(
             self.state, new_table,
             seed=self.rebuild_seed if seed is None else seed)
         self.rebuild_seed += 1
         return True
 
-    def _maybe_epoch(self):
-        # Poll completion; swap at the host level (the paper's lines 41-46).
-        if bool(jax.device_get(dhash.rebuild_done(self.state))):
-            self.state = dhash.rebuild_finish(self.state)
-            self.stats.rebuilds_completed += 1
-            if self.continuous_rebuild:
-                self.request_rebuild()
-        elif self.continuous_rebuild and not bool(jax.device_get(self.state.rebuilding)):
-            self.request_rebuild()
-
     def lookup(self, keys):
-        f, v = jax.jit(dhash.lookup)(self.state, jnp.asarray(keys, I32))
-        return f, v
+        return self._lookup_fn(self.state, jnp.asarray(keys, I32))
 
     def count(self) -> int:
-        return int(jax.device_get(dhash.count_items(self.state)))
+        self._stats.host_syncs += 1
+        return int(jax.device_get(self._count_fn(self.state)))
+
+    def _step_cache_size(self) -> int:
+        """Total jit cache entries across step variants (retrace detector)."""
+        return sum(f._cache_size() for f in self._step_fns.values())

@@ -50,6 +50,21 @@ def fresh(kind: str, rng: np.random.Generator | int) -> HashFn:
     return HashFn(kind=kind, seeds=seeds)
 
 
+def reseed(fn: HashFn, salt: jax.Array) -> HashFn:
+    """Derive a fresh function of the same family from ``fn`` and a scalar
+    ``salt`` — fully jittable (no host RNG), so an engine can start a new
+    rebuild epoch entirely on-device.  Distinct salts give decorrelated seed
+    vectors via the mix32 finalizer over (seed, position, salt)."""
+    s = fn.seeds
+    pos = jnp.arange(s.size, dtype=_U32).reshape(s.shape)
+    salt32 = (jnp.asarray(salt).astype(jnp.int32).view(_U32)
+              * _U32(0x9E3779B1) + _U32(0x85EBCA77))
+    seeds = _mix32(s ^ salt32, _U32(0x27D4EB2F) ^ pos, _U32(0x165667B1))
+    if fn.kind == "multiply_shift":
+        seeds = seeds.at[0].set(seeds[0] | _U32(1))  # multiplier must be odd
+    return HashFn(kind=fn.kind, seeds=seeds)
+
+
 def _mix32(x: jax.Array, s0: jax.Array, s1: jax.Array) -> jax.Array:
     x = x ^ s0
     x = x ^ (x >> 16)

@@ -1,10 +1,15 @@
 """Jit'd wrappers around the Pallas kernels: padding, sorting, fallback.
 
 ``probe_lookup`` is a drop-in accelerated equivalent of
-``ref.probe_lookup_ref`` (and of ``buckets.linear_lookup``'s inner loop):
-exact results for every query — tiles whose probe window escapes the
-VMEM-resident slab are recomputed by the jnp fallback (rare: requires > 8192
-contiguously occupied slots of hash skew).
+``ref.probe_lookup_ref`` (and of ``buckets.linear_lookup``'s inner loop);
+``ordered_lookup_fused`` is the accelerated rebuild-epoch path (one sort +
+one pallas_call for the whole old->hazard->new ordered check);
+``probe_insert`` is the accelerated write path (claim kernel + one scatter).
+
+Exactness contract shared by all three: queries whose probe window escapes
+the VMEM-resident slab (hash skew), or whose insert claim collides across
+tiles, are recomputed by the jnp oracle fallback — which is gated behind
+``jax.lax.cond`` so the steady state (no escapes) never pays for it.
 """
 from __future__ import annotations
 
@@ -14,13 +19,44 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.probe import QT, SLAB, probe_lookup_tiles
+from repro.kernels.probe import (QT, SLAB, probe2_tiles, probe_insert_tiles,
+                                 probe_lookup_tiles)
 
 I32 = jnp.int32
+LIVE = 1
 
 
 def _pad_to(x: jax.Array, n: int, fill=0):
     return jnp.pad(x, (0, n - x.shape[0]), constant_values=fill)
+
+
+def _pad_table(arrays, c: int, max_probes: int):
+    """Pad table arrays with a wrapped copy (probes never wrap in-kernel),
+    then to a SLAB multiple plus one spare block (block s+1 always valid);
+    padding slots are EMPTY so probes terminate there."""
+    cpad = -(-(c + max_probes) // SLAB) * SLAB + SLAB
+    return tuple(_pad_to(jnp.concatenate([a, a[:max_probes]]), cpad)
+                 for a in arrays)
+
+
+def _sort_pad_queries(order, qpad, *arrays):
+    """Apply the shared sort and pad to a QT multiple by REPLICATING the last
+    sorted element (edge padding).  Padding with a constant sentinel would
+    break the slab math: an h0=0 pad in a tile whose slab base is > 0 reads
+    complete=False and drags min-based tile bases to block 0, firing the
+    oracle fallback on every non-QT-multiple batch.  Edge pads stay inside
+    their tile's slab, and their results land in the discarded tail of the
+    unsort (positions >= q)."""
+    return tuple(jnp.pad(a[order], (0, qpad - a.shape[0]), mode="edge")
+                 for a in arrays)
+
+
+def _tile_base(h0_sorted: jax.Array, tiles: int, cpad: int, *,
+               already_sorted: bool) -> jax.Array:
+    """Per-tile slab block index, clipped so block s+1 stays in range."""
+    t = h0_sorted.reshape(tiles, QT)
+    base = (t[:, 0] if already_sorted else t.min(axis=1)) // SLAB
+    return jnp.minimum(base.astype(I32), cpad // SLAB - 2)
 
 
 @partial(jax.jit, static_argnames=("max_probes", "interpret"))
@@ -36,41 +72,34 @@ def probe_lookup(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
     """
     c = tkey.shape[0]
     q = qkey.shape[0]
+    tk, tv, ts = _pad_table((tkey, tval, tstate), c, max_probes)
 
-    # 1. pad the table with a wrapped copy so probes never wrap, then to a
-    #    SLAB multiple (padding slots are EMPTY => probes terminate there).
-    cpad = -(-(c + max_probes) // SLAB) * SLAB + SLAB  # +SLAB: block s+1 always valid
-    tk = _pad_to(jnp.concatenate([tkey, tkey[:max_probes]]), cpad)
-    tv = _pad_to(jnp.concatenate([tval, tval[:max_probes]]), cpad)
-    ts = _pad_to(jnp.concatenate([tstate, tstate[:max_probes]]), cpad)
-
-    # 2. sort queries by start slot so tiles hit contiguous slabs
+    # ONE sort: queries ordered by start slot so tiles hit contiguous slabs
     order = jnp.argsort(h0)
-    h0s, qks = h0[order], qkey[order]
     qpad = -(-q // QT) * QT
-    # pad queries with h0=0 sentinels (complete, harmless)
-    h0s = _pad_to(h0s, qpad)
-    qks = _pad_to(qks, qpad)
-
-    # 3. per-tile slab block: floor(min h0 of tile / SLAB)
+    h0s, qks = _sort_pad_queries(order, qpad, h0, qkey)
     tiles = qpad // QT
-    slab_base = (h0s.reshape(tiles, QT)[:, 0] // SLAB).astype(I32)
-    slab_base = jnp.minimum(slab_base, cpad // SLAB - 2)
+    slab_base = _tile_base(h0s, tiles, tk.shape[0], already_sorted=True)
 
     found_s, val_s, complete_s = probe_lookup_tiles(
         tk, tv, ts, h0s, qks, slab_base, max_probes=max_probes,
         interpret=interpret)
 
-    # 4. fallback: recompute incomplete queries with the jnp oracle
-    #    (masked: cost is one extra pass only in the skew regime)
+    # fallback: recompute incomplete queries with the jnp oracle — gated so
+    # the no-skew steady state skips the oracle pass entirely (h0s is already
+    # in [0, C), so no re-mod either; the oracle wraps internally).
     need = ~complete_s
-    fb_found, fb_val = ref.probe_lookup_ref(
-        tkey, tval, tstate, jnp.where(need, h0s % c, 0),
-        qks, max_probes)
-    found_s = jnp.where(need, fb_found, found_s)
-    val_s = jnp.where(need, fb_val, val_s)
 
-    # 5. unsort (order permutes [0, q); tail positions are padding)
+    def fallback(fv):
+        f0, v0 = fv
+        fb_f, fb_v = ref.probe_lookup_ref(tkey, tval, tstate, h0s, qks,
+                                          max_probes)
+        return jnp.where(need, fb_f, f0), jnp.where(need, fb_v, v0)
+
+    found_s, val_s = jax.lax.cond(need.any(), fallback, lambda fv: fv,
+                                  (found_s, val_s))
+
+    # unsort (order permutes [0, q); tail positions are padding)
     found = jnp.zeros((q,), jnp.bool_).at[order].set(found_s[:q])
     val = jnp.zeros((q,), I32).at[order].set(val_s[:q])
     return found, val
@@ -80,8 +109,10 @@ def probe_lookup(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
 def ordered_lookup(old_tables, new_tables, hazard_key, hazard_val, hazard_live,
                    h0_old, h0_new, qkey, *, max_probes: int = 64,
                    interpret: bool = True):
-    """Fused rebuild-epoch lookup: old table -> hazard buffer -> new table
-    (the paper's Lemma 4.1 order), each table pass via the Pallas kernel."""
+    """UNFUSED rebuild-epoch lookup: old table -> hazard buffer -> new table
+    (the paper's Lemma 4.1 order), each table pass via its own sort +
+    pallas_call.  Kept as the comparison baseline for ``ordered_lookup_fused``
+    (see bench_rebuild's fused=on|off axis)."""
     f_old, v_old = probe_lookup(*old_tables, h0_old, qkey,
                                 max_probes=max_probes, interpret=interpret)
     eq = (qkey[:, None] == hazard_key[None, :]) & hazard_live[None, :]
@@ -92,3 +123,116 @@ def ordered_lookup(old_tables, new_tables, hazard_key, hazard_val, hazard_live,
     found = f_old | f_hz | f_new
     val = jnp.where(f_old, v_old, jnp.where(f_hz, v_hz, v_new))
     return found, val
+
+
+@partial(jax.jit, static_argnames=("max_probes", "interpret"))
+def ordered_lookup_fused(old_tables, new_tables, hazard_key, hazard_val,
+                         hazard_live, h0_old, h0_new, qkey, *,
+                         max_probes: int = 64, interpret: bool = True):
+    """FUSED rebuild-epoch lookup: ONE argsort (keyed on h0_old) and ONE
+    pallas_call emit the Lemma-4.1-ordered result for both tables plus the
+    hazard buffer.  The new-table slab is anchored per tile at the tile's min
+    h0_new; queries whose new-table window escapes it AND that the old table
+    / hazard buffer did not resolve fall back to the jnp oracle (gated —
+    free when nothing escapes)."""
+    c_old = old_tables[0].shape[0]
+    c_new = new_tables[0].shape[0]
+    q = qkey.shape[0]
+    old_p = _pad_table(old_tables, c_old, max_probes)
+    new_p = _pad_table(new_tables, c_new, max_probes)
+
+    # the ONE shared sort, keyed on the old table's start slot
+    order = jnp.argsort(h0_old)
+    qpad = -(-q // QT) * QT
+    h0os, h0ns, qks = _sort_pad_queries(order, qpad, h0_old, h0_new, qkey)
+    tiles = qpad // QT
+    slab2 = jnp.stack([
+        _tile_base(h0os, tiles, old_p[0].shape[0], already_sorted=True),
+        _tile_base(h0ns, tiles, new_p[0].shape[0], already_sorted=False),
+    ])
+
+    found_s, val_s, complete_s = probe2_tiles(
+        old_p, new_p, hazard_key, hazard_val, hazard_live.astype(I32),
+        h0os, h0ns, qks, slab2, max_probes=max_probes, interpret=interpret)
+
+    need = ~complete_s
+
+    def fallback(fv):
+        f0, v0 = fv
+        fb_f, fb_v = ref.ordered_lookup_ref(
+            old_tables, new_tables, hazard_key, hazard_val, hazard_live,
+            h0os, h0ns, qks, max_probes)
+        return jnp.where(need, fb_f, f0), jnp.where(need, fb_v, v0)
+
+    found_s, val_s = jax.lax.cond(need.any(), fallback, lambda fv: fv,
+                                  (found_s, val_s))
+
+    found = jnp.zeros((q,), jnp.bool_).at[order].set(found_s[:q])
+    val = jnp.zeros((q,), I32).at[order].set(val_s[:q])
+    return found, val
+
+
+@partial(jax.jit, static_argnames=("max_probes", "interpret"))
+def probe_insert(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
+                 h0: jax.Array, keys: jax.Array, vals: jax.Array,
+                 mask: jax.Array, *, max_probes: int = 64,
+                 interpret: bool = True):
+    """Batched linear-probe INSERT via the claim kernel + one scatter.
+
+    Caller contract: ``mask`` is winner-filtered (at most one True per
+    distinct key; use ``buckets.batch_winners``).  Set semantics: ok=False if
+    the key is already LIVE or no free slot exists within ``max_probes``.
+
+    Escape hatches (all exact, resolved by the gated jnp fallback):
+      * probe window escapes the 2-block slab (``complete=False``);
+      * two tiles claim the same physical slot (the padded table holds a
+        wrapped copy of the first ``max_probes`` slots, so the same physical
+        slot can be claimed under two padded positions) — first claimant in
+        sort order keeps it, the loser escapes.
+
+    Returns (tkey', tval', tstate', ok[Q]).
+    """
+    c = tkey.shape[0]
+    q = keys.shape[0]
+    tk, ts = _pad_table((tkey, tstate), c, max_probes)
+
+    order = jnp.argsort(h0)
+    qpad = -(-q // QT) * QT
+    h0s, qks, qvs = _sort_pad_queries(order, qpad, h0, keys, vals)
+    qms = _pad_to(mask[order], qpad, fill=False)
+    tiles = qpad // QT
+    slab_base = _tile_base(h0s, tiles, tk.shape[0], already_sorted=True)
+
+    present_s, claim_s, complete_s = probe_insert_tiles(
+        tk, ts, h0s, qks, qms.astype(I32), slab_base,
+        max_probes=max_probes, interpret=interpret)
+
+    # resolve claims globally: claims live in padded coordinates within
+    # [h0, h0 + max_probes) ⊂ [0, C + max_probes), so % C maps the wrapped
+    # region back onto the physical table; first claimant (sort order) wins.
+    claimed = complete_s & (claim_s >= 0)
+    phys = jnp.where(claimed, claim_s % c, c)
+    sidx = jnp.arange(qpad, dtype=I32)
+    first = jnp.full((c,), qpad, I32).at[phys].min(sidx, mode="drop")
+    keep = claimed & (first[jnp.clip(phys, 0, c - 1)] == sidx)
+    conflict = claimed & ~keep
+
+    wp = jnp.where(keep, phys, c)
+    tkey2 = tkey.at[wp].set(qks, mode="drop")
+    tval2 = tval.at[wp].set(qvs, mode="drop")
+    tstate2 = tstate.at[wp].set(LIVE, mode="drop")
+    ok_s = keep
+
+    need = qms & (~complete_s | conflict)
+
+    def fallback(op):
+        k, v, s, ok = op
+        fb_k, fb_v, fb_s, fb_ok = ref.probe_insert_ref(
+            k, v, s, h0s, qks, qvs, need, max_probes)
+        return fb_k, fb_v, fb_s, ok | fb_ok
+
+    tkey2, tval2, tstate2, ok_s = jax.lax.cond(
+        need.any(), fallback, lambda op: op, (tkey2, tval2, tstate2, ok_s))
+
+    ok = jnp.zeros((q,), jnp.bool_).at[order].set(ok_s[:q])
+    return tkey2, tval2, tstate2, ok

@@ -1,12 +1,13 @@
-"""Pallas TPU kernel: batched linear-probe lookup over VMEM-resident slabs.
+"""Pallas TPU kernels: batched probing over VMEM-resident table slabs.
 
-TPU adaptation of the paper's hot path.  On CPUs the per-op cost at load
+TPU adaptation of the paper's hot paths.  On CPUs the per-op cost at load
 factor alpha is pointer chasing; on TPU the equivalent hot loop is the probe
-sequence, and the roofline term is HBM traffic: a naive gather streams
-table lines per query.  This kernel restructures the access pattern:
+sequence, and the roofline term is HBM traffic: a naive gather streams table
+lines per query.  Every kernel here restructures the access pattern the same
+way (HashGraph-style sorted/coalesced probing):
 
-  1. ops.py sorts the query batch by start slot h0 (one XLA sort), so each
-     query tile touches a *contiguous slab* of the table;
+  1. ops.py sorts the query batch by start slot h0 (ONE XLA sort per batch),
+     so each query tile touches a *contiguous slab* of the table;
   2. a scalar-prefetch BlockSpec (`pltpu.PrefetchScalarGridSpec`) picks the
      two consecutive table blocks covering the tile's slab — data-dependent
      block indexing, the canonical TPU pattern for sorted gathers;
@@ -14,14 +15,39 @@ table lines per query.  This kernel restructures the access pattern:
      ``max_probes`` rounds is a vectorized compare of the query tile against
      dynamically-indexed slab lanes.
 
-Queries whose probe window escapes the 2-block slab (hash skew) raise a
-`complete=False` flag and are re-run by the jnp fallback in ops.py — the
-kernel is exact, never wrong, occasionally partial.
+Three kernels share that skeleton:
 
-Tiling: query tile QT=1024 (8x128 vregs), slab block SLAB=4096 i32 words
--> VMEM residency = 2 blocks x 3 arrays x 16 KiB = 96 KiB per step, well
-under the ~16 MiB v5e VMEM budget; the MXU is idle (this is a VPU/memory
-kernel) so the matmul pipeline of a co-scheduled layer is undisturbed.
+* ``_probe_kernel``        — single-table lookup (steady state, no rebuild).
+* ``_probe2_kernel``       — the fused **rebuild-epoch** lookup: ONE pass
+  emits the paper's Lemma-4.1-ordered result (old table -> hazard buffer ->
+  new table).  One shared query sort keyed on ``h0_old`` drives BOTH tables'
+  slab selection: the scalar-prefetch operand is a ``[2, tiles]`` block map
+  (row 0 = old-table slab, row 1 = new-table slab, the latter anchored at the
+  tile's min ``h0_new``), and the hazard buffer is broadcast whole into VMEM
+  for a dense tile-vs-chunk compare.  This replaces the unfused path's three
+  sort+pallas passes with one of each.
+* ``_probe_insert_kernel`` — batched linear-probe INSERT (claim-first-empty):
+  phase 1 re-proves absence against the original slab states, phase 2 runs
+  the claim loop on a local VMEM copy of the slab states (lowest in-tile
+  query index wins a contested slot; claimed slots flip LIVE locally so later
+  rounds skip them).  The kernel emits *claim positions*; ops.py applies them
+  with one scatter and resolves cross-tile collisions there.
+
+Exactness contract (all kernels): a query whose probe window escapes its
+2-block slab (hash skew), or whose new-table window misses the resident new
+slab, or whose claimed slot collides across tiles, raises ``complete=False``
+/ a conflict flag and is re-run by the jnp fallback in ops.py — the kernels
+are exact, never wrong, occasionally partial.
+
+VMEM budget (v5e ~16 MiB/core): query tile QT=1024 (8x128 vregs, 3 x 4 KiB),
+slab block SLAB=4096 i32 words.  Single-table lookup holds 2 blocks x 3
+arrays x 16 KiB = 96 KiB.  The fused probe2 doubles the table residency
+(old + new = 192 KiB) and adds the hazard buffer (3 x chunk x 4 B; 48 KiB at
+chunk=4096) plus the dense compare intermediate QT x chunk bools (4 MiB at
+chunk=4096 before vreg tiling) — keep ``chunk <= 4096`` to stay well inside
+VMEM.  Insert holds 2 key blocks + 2 state blocks + a 2*SLAB local state
+copy = 96 KiB.  The MXU is idle throughout (VPU/memory kernels), so the
+matmul pipeline of a co-scheduled layer is undisturbed.
 """
 from __future__ import annotations
 
@@ -39,19 +65,17 @@ QT = 1024     # queries per tile
 SLAB = 4096   # table words per block (2 consecutive blocks resident)
 
 
-def _probe_kernel(slab_ref,              # scalar-prefetch: [tiles] block index
-                  h0_ref, qk_ref,        # [QT] query start slots / keys
-                  tk0, tk1, tv0, tv1, ts0, ts1,   # [SLAB] table key/val/state
-                  found_ref, val_ref, complete_ref,
-                  *, max_probes: int):
-    i = pl.program_id(0)
-    base = slab_ref[i] * SLAB
-    off = h0_ref[...] - base                      # [QT] offset into 2*SLAB window
-    qk = qk_ref[...]
+def _window_probe(base_blk, h0, qk, k0, k1, v0, v1, s0, s1, max_probes: int):
+    """Shared probe loop over one 2-block VMEM window.
 
-    keys = jnp.concatenate([tk0[...], tk1[...]])    # [2*SLAB]
-    vals = jnp.concatenate([tv0[...], tv1[...]])
-    stat = jnp.concatenate([ts0[...], ts1[...]])
+    Returns (found, val, complete); found/val are gated to False/0 for
+    incomplete queries (probe window escapes the resident window).
+    """
+    base = base_blk * SLAB
+    off = h0 - base                               # [QT] offset into 2*SLAB
+    keys = jnp.concatenate([k0[...], k1[...]])    # [2*SLAB]
+    vals = jnp.concatenate([v0[...], v1[...]])
+    stat = jnp.concatenate([s0[...], s1[...]])
 
     # a probe sequence is complete iff it fits the resident window
     complete = (off >= 0) & (off + max_probes <= 2 * SLAB)
@@ -70,11 +94,119 @@ def _probe_kernel(slab_ref,              # scalar-prefetch: [tiles] block index
         active = active & ~hit & ~stop
         return active, found, val
 
-    init = (jnp.ones((QT,), bool), jnp.zeros((QT,), bool), jnp.zeros((QT,), I32))
+    q = h0.shape[0]
+    init = (jnp.ones((q,), bool), jnp.zeros((q,), bool), jnp.zeros((q,), I32))
     _, found, val = jax.lax.fori_loop(0, max_probes, body, init)
+    return found & complete, jnp.where(complete, val, 0), complete
 
+
+def _probe_kernel(slab_ref,              # scalar-prefetch: [tiles] block index
+                  h0_ref, qk_ref,        # [QT] query start slots / keys
+                  tk0, tk1, tv0, tv1, ts0, ts1,   # [SLAB] table key/val/state
+                  found_ref, val_ref, complete_ref,
+                  *, max_probes: int):
+    i = pl.program_id(0)
+    found, val, complete = _window_probe(
+        slab_ref[i], h0_ref[...], qk_ref[...],
+        tk0, tk1, tv0, tv1, ts0, ts1, max_probes)
+    found_ref[...] = found
+    val_ref[...] = val
+    complete_ref[...] = complete
+
+
+def _probe2_kernel(slab2_ref,            # scalar-prefetch: [2, tiles]
+                   h0o_ref, h0n_ref, qk_ref,           # [QT]
+                   ok0, ok1, ov0, ov1, os0, os1,       # old table blocks
+                   nk0, nk1, nv0, nv1, ns0, ns1,       # new table blocks
+                   hk_ref, hv_ref, hl_ref,             # [CH] hazard buffer
+                   found_ref, val_ref, complete_ref,
+                   *, max_probes: int):
+    """Fused rebuild-epoch lookup: Lemma 4.1 order old -> hazard -> new in a
+    single pass.  ``complete`` is refined: a query resolved by the old table
+    or the hazard buffer is complete even if its new-table window escaped —
+    the answer is already determined by the ordered-check priority."""
+    i = pl.program_id(0)
+    qk = qk_ref[...]
+    f_old, v_old, c_old = _window_probe(
+        slab2_ref[0, i], h0o_ref[...], qk,
+        ok0, ok1, ov0, ov1, os0, os1, max_probes)
+    f_new, v_new, c_new = _window_probe(
+        slab2_ref[1, i], h0n_ref[...], qk,
+        nk0, nk1, nv0, nv1, ns0, ns1, max_probes)
+
+    # hazard buffer: dense [QT, CH] compare, whole chunk resident in VMEM
+    eq = (qk[:, None] == hk_ref[...][None, :]) & (hl_ref[...][None, :] != 0)
+    f_hz = eq.any(-1)
+    v_hz = jnp.take(hv_ref[...], jnp.argmax(eq, axis=-1), axis=0)
+
+    found = f_old | f_hz | f_new
+    val = jnp.where(f_old, v_old, jnp.where(f_hz, v_hz, v_new))
+    complete = c_old & (f_old | f_hz | c_new)
     found_ref[...] = found & complete
     val_ref[...] = jnp.where(complete, val, 0)
+    complete_ref[...] = complete
+
+
+def _probe_insert_kernel(slab_ref,           # scalar-prefetch: [tiles]
+                         h0_ref, qk_ref, qm_ref,       # [QT] (qm: i32 mask)
+                         tk0, tk1, ts0, ts1,           # [SLAB] key/state
+                         present_ref, claim_ref, complete_ref,
+                         *, max_probes: int):
+    """Claim-first-EMPTY batched insert.  Emits per-query claim positions
+    (padded-table coordinates; -1 = no claim) instead of mutating the table;
+    ops.py scatters the claims and sends cross-tile conflicts to the jnp
+    fallback.  Caller contract: ``qm`` is winner-filtered (at most one True
+    per distinct key in the whole batch)."""
+    i = pl.program_id(0)
+    base = slab_ref[i] * SLAB
+    off = h0_ref[...] - base
+    qk = qk_ref[...]
+    qm = qm_ref[...] != 0
+    keys = jnp.concatenate([tk0[...], tk1[...]])
+    stat = jnp.concatenate([ts0[...], ts1[...]])
+
+    complete = (off >= 0) & (off + max_probes <= 2 * SLAB)
+    safe_off = jnp.clip(off, 0, 2 * SLAB - max_probes)
+
+    # phase 1: re-prove absence on the ORIGINAL slab states (same semantics
+    # as buckets.linear_insert's presence lookup before its claim loop)
+    def probe(p, carry):
+        active, present = carry
+        idx = safe_off + p
+        s = jnp.take(stat, idx, axis=0)
+        hit = active & (s == LIVE) & (jnp.take(keys, idx, axis=0) == qk)
+        stop = active & (s == EMPTY)
+        present = present | hit
+        active = active & ~hit & ~stop
+        return active, present
+
+    qn = off.shape[0]
+    _, present = jax.lax.fori_loop(0, max_probes, probe,
+                                   (qm, jnp.zeros((qn,), bool)))
+
+    # phase 2: claim loop on a LOCAL copy of the slab states; claimed slots
+    # flip LIVE locally so later rounds skip them (matches the evolving-state
+    # semantics of buckets.linear_insert); lowest in-tile index wins a slot.
+    qidx = jax.lax.broadcasted_iota(I32, (qn,), 0)
+    pending0 = qm & complete & ~present
+
+    def claim_round(p, carry):
+        st, pending, claim_rel = carry
+        pos = safe_off + p
+        free = pending & (jnp.take(st, pos, axis=0) != LIVE)
+        tgt = jnp.where(free, pos, 2 * SLAB)
+        cl = jnp.full((2 * SLAB,), qn, I32).at[tgt].min(qidx, mode="drop")
+        won = free & (jnp.take(cl, pos, axis=0) == qidx)
+        st = st.at[jnp.where(won, pos, 2 * SLAB)].set(LIVE, mode="drop")
+        claim_rel = jnp.where(won, pos, claim_rel)
+        return st, pending & ~won, claim_rel
+
+    _, _, claim_rel = jax.lax.fori_loop(
+        0, max_probes, claim_round,
+        (stat, pending0, jnp.full((qn,), -1, I32)))
+
+    present_ref[...] = present & complete
+    claim_ref[...] = jnp.where(claim_rel >= 0, base + claim_rel, -1)
     complete_ref[...] = complete
 
 
@@ -125,3 +257,86 @@ def probe_lookup_tiles(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
     return pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
                           interpret=interpret)(
         slab_base, h0_sorted, qk_sorted, tkey, tkey, tval, tval, tstate, tstate)
+
+
+def probe2_tiles(old_padded, new_padded,
+                 hazard_key: jax.Array, hazard_val: jax.Array,
+                 hazard_live_i32: jax.Array,
+                 h0o_sorted: jax.Array, h0n_sorted: jax.Array,
+                 qk_sorted: jax.Array, slab2: jax.Array, *,
+                 max_probes: int, interpret: bool = True):
+    """Fused rebuild-epoch probe over pre-sorted, pre-tiled queries.
+
+    old_padded/new_padded: (key, val, state) triples padded as in
+    ``probe_lookup_tiles`` (each table padded independently).
+    slab2: [2, tiles] i32 — row 0 old-table block, row 1 new-table block.
+    hazard_live_i32: hazard liveness as i32 (pallas-friendly).
+    """
+    q = qk_sorted.shape[0]
+    (okk, ovv, oss), (nkk, nvv, nss) = old_padded, new_padded
+    assert q % QT == 0 and okk.shape[0] % SLAB == 0 and nkk.shape[0] % SLAB == 0
+    tiles = q // QT
+    ch = hazard_key.shape[0]
+
+    qspec = pl.BlockSpec((QT,), lambda i, s: (i,))
+    oblk0 = pl.BlockSpec((SLAB,), lambda i, s: (s[0, i],))
+    oblk1 = pl.BlockSpec((SLAB,), lambda i, s: (s[0, i] + 1,))
+    nblk0 = pl.BlockSpec((SLAB,), lambda i, s: (s[1, i],))
+    nblk1 = pl.BlockSpec((SLAB,), lambda i, s: (s[1, i] + 1,))
+    hspec = pl.BlockSpec((ch,), lambda i, s: (0,))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(tiles,),
+        in_specs=[qspec, qspec, qspec,
+                  oblk0, oblk1, oblk0, oblk1, oblk0, oblk1,
+                  nblk0, nblk1, nblk0, nblk1, nblk0, nblk1,
+                  hspec, hspec, hspec],
+        out_specs=[qspec, qspec, qspec],
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((q,), jnp.bool_),
+        jax.ShapeDtypeStruct((q,), I32),
+        jax.ShapeDtypeStruct((q,), jnp.bool_),
+    ]
+    kernel = functools.partial(_probe2_kernel, max_probes=max_probes)
+    return pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
+                          interpret=interpret)(
+        slab2, h0o_sorted, h0n_sorted, qk_sorted,
+        okk, okk, ovv, ovv, oss, oss,
+        nkk, nkk, nvv, nvv, nss, nss,
+        hazard_key, hazard_val, hazard_live_i32)
+
+
+def probe_insert_tiles(tkey: jax.Array, tstate: jax.Array,
+                       h0_sorted: jax.Array, qk_sorted: jax.Array,
+                       qm_sorted_i32: jax.Array, slab_base: jax.Array, *,
+                       max_probes: int, interpret: bool = True):
+    """Claim pass of the batched insert over pre-sorted, pre-tiled queries.
+
+    Returns (present[Q], claim[Q] padded-table position or -1, complete[Q]).
+    """
+    q = h0_sorted.shape[0]
+    assert q % QT == 0 and tkey.shape[0] % SLAB == 0
+    tiles = q // QT
+
+    qspec = pl.BlockSpec((QT,), lambda i, s: (i,))
+    blk0 = pl.BlockSpec((SLAB,), lambda i, s: (s[i],))
+    blk1 = pl.BlockSpec((SLAB,), lambda i, s: (s[i] + 1,))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(tiles,),
+        in_specs=[qspec, qspec, qspec, blk0, blk1, blk0, blk1],
+        out_specs=[qspec, qspec, qspec],
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((q,), jnp.bool_),
+        jax.ShapeDtypeStruct((q,), I32),
+        jax.ShapeDtypeStruct((q,), jnp.bool_),
+    ]
+    kernel = functools.partial(_probe_insert_kernel, max_probes=max_probes)
+    return pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
+                          interpret=interpret)(
+        slab_base, h0_sorted, qk_sorted, qm_sorted_i32,
+        tkey, tkey, tstate, tstate)

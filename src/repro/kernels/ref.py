@@ -34,6 +34,41 @@ def probe_lookup_ref(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
     return found, val
 
 
+def probe_insert_ref(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
+                     h0: jax.Array, keys: jax.Array, vals: jax.Array,
+                     mask: jax.Array, max_probes: int):
+    """Linear-probe insert oracle on raw table arrays (claim-first-non-LIVE,
+    lowest batch index wins a contested slot — the same linearization as
+    ``buckets.linear_insert``).
+
+    Caller contract: ``mask`` is winner-filtered (at most one True per
+    distinct key; use ``buckets.batch_winners``).  Returns
+    (tkey', tval', tstate', ok[Q]).
+    """
+    c = tkey.shape[0]
+    q = keys.shape[0]
+    present, _ = probe_lookup_ref(tkey, tval, tstate, h0, keys, max_probes)
+    pending0 = mask & ~present
+    idx = jnp.arange(q, dtype=I32)
+
+    def body(p, carry):
+        key, val, state, pending, done = carry
+        pos = (h0 + p) % c
+        free = pending & (state[pos] != LIVE)
+        wpos = jnp.where(free, pos, c)
+        claim = jnp.full((c,), q, I32).at[wpos].min(idx, mode="drop")
+        won = free & (claim[pos] == idx)
+        wp = jnp.where(won, pos, c)
+        key = key.at[wp].set(keys, mode="drop")
+        val = val.at[wp].set(vals, mode="drop")
+        state = state.at[wp].set(LIVE, mode="drop")
+        return key, val, state, pending & ~won, done | won
+
+    init = (tkey, tval, tstate, pending0, jnp.zeros((q,), bool))
+    tkey, tval, tstate, _, done = jax.lax.fori_loop(0, max_probes, body, init)
+    return tkey, tval, tstate, done
+
+
 def ordered_lookup_ref(old_t, new_t, hazard_key, hazard_val, hazard_live,
                        h0_old, h0_new, qkey, max_probes: int):
     """The paper's ordered three-way check: old -> hazard -> new."""

@@ -1,0 +1,137 @@
+"""Engine acceptance tests for the on-device steady state: K-step deferred
+polling, buffer donation without retraces, zero host syncs between polls,
+on-device epoch swap + continuous-rebuild autostart, and the fused
+(Pallas-kernel) state driven end-to-end against a dict oracle."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dhash
+from repro.core.engine import DHashEngine
+
+I32 = np.int32
+
+
+def _z1():
+    return np.zeros(1, I32)
+
+
+def _quiet_step(eng, look):
+    """An op batch that only looks up (masked-out insert/delete)."""
+    return eng.step(look, _z1(), _z1(), _z1(),
+                    ins_mask=np.zeros(1, bool), del_mask=np.zeros(1, bool))
+
+
+def test_zero_host_sync_between_polls(monkeypatch):
+    """Steady state: zero device_get for K-1 of every K steps (the poll step
+    itself performs exactly one batched device_get)."""
+    eng = DHashEngine(dhash.make("linear", capacity=512, chunk=32, seed=7),
+                      poll_every=8)
+    keys = np.arange(1, 65, dtype=I32)
+    eng.step(keys, keys, keys * 2, _z1(), del_mask=np.zeros(1, bool))
+
+    calls = {"n": 0}
+    orig = jax.device_get
+
+    def counting(x):
+        calls["n"] += 1
+        return orig(x)
+
+    monkeypatch.setattr(jax, "device_get", counting)
+    for _ in range(16):
+        _quiet_step(eng, keys)
+    monkeypatch.undo()
+    # steps 2..17 -> polls at steps 8 and 16 only
+    assert calls["n"] == 2, calls
+    assert eng._stats.host_syncs >= 2
+
+
+def test_donation_no_retrace():
+    """The donated step stays on one compiled executable across many steps
+    (one cache entry per batch-shape signature, none added by stepping)."""
+    eng = DHashEngine(dhash.make("linear", capacity=512, chunk=32, seed=7))
+    keys = np.arange(1, 65, dtype=I32)
+    for _ in range(12):
+        eng.step(keys, keys, keys * 2, keys[:8])
+    assert eng._step_cache_size() == 1
+
+
+def test_deferred_poll_never_misses_epoch_swap():
+    """K-step deferred polling: the swap happens on-device the step the
+    rebuild completes; item counts are conserved and every key stays
+    readable through the whole rebuild window."""
+    rng = np.random.default_rng(0)
+    eng = DHashEngine(dhash.make("linear", capacity=512, chunk=32, seed=3),
+                      poll_every=32)
+    keys = rng.choice(100_000, 300, replace=False).astype(I32)
+    for i in range(0, 300, 64):
+        b = keys[i:i + 64]
+        eng.step(b, b, b * 2, _z1(), del_mask=np.zeros(1, bool))
+    assert eng.count() == 300
+    epoch0 = int(jax.device_get(eng.state.epoch))
+    assert eng.request_rebuild(seed=5)
+    syncs0 = eng._stats.host_syncs
+    steps = 0
+    while bool(jax.device_get(eng.state.rebuilding)):
+        f, v, _, _ = _quiet_step(eng, keys[:64])
+        assert bool(np.asarray(f).all()), "lookup missed mid-rebuild"
+        assert bool((np.asarray(v) == keys[:64] * 2).all())
+        steps += 1
+        assert steps < 500
+    # swap happened on-device (possibly between host polls) and lost nothing
+    assert int(jax.device_get(eng.state.epoch)) == epoch0 + 1
+    # the host only polled every K steps during the whole rebuild
+    assert eng._stats.host_syncs - syncs0 <= steps // eng.poll_every + 1
+    assert eng.count() == 300
+    assert eng.stats.rebuilds_completed == 1
+
+
+def test_continuous_autostart_on_device_and_reseed():
+    """Continuous mode cycles rebuilds with ZERO host involvement between
+    polls; each epoch gets a fresh on-device-derived hash function."""
+    eng = DHashEngine(dhash.make("linear", capacity=256, chunk=64, seed=1),
+                      continuous_rebuild=True, poll_every=32)
+    keys = np.arange(1, 101, dtype=I32)
+    seeds0 = np.asarray(jax.device_get(eng.state.old.hfn.seeds))
+    eng.step(keys, keys, keys * 2, _z1(), del_mask=np.zeros(1, bool))
+    for _ in range(40):
+        f, _, _, _ = _quiet_step(eng, keys)
+        assert bool(np.asarray(f).all())
+    assert eng.stats.rebuilds_completed >= 1
+    assert eng.count() == 100
+    seeds1 = np.asarray(jax.device_get(eng.state.old.hfn.seeds))
+    assert not np.array_equal(seeds0, seeds1), "autostart did not reseed"
+
+
+def test_fused_engine_matches_dict_oracle():
+    """End-to-end: fused (Pallas kernel) state in a continuous-rebuild engine
+    against a dict oracle — mixed inserts/deletes/lookups across epochs."""
+    rng = np.random.default_rng(2)
+    eng = DHashEngine(dhash.make("linear", capacity=256, chunk=32, seed=4,
+                                 fused=True),
+                      continuous_rebuild=True, poll_every=8)
+    oracle: dict[int, int] = {}
+    universe = np.arange(1, 200)
+    for step in range(24):
+        ins = rng.choice(universe, 6, replace=False)
+        ins = np.array([k for k in ins if k not in oracle] or [0], I32)
+        dels = np.array([k for k in rng.choice(list(oracle) or [0], 3)
+                         if k in oracle] or [0], I32)
+        dels = np.unique(dels)
+        look = rng.choice(universe, 16, replace=False).astype(I32)
+        pre = dict(oracle)
+        found, vals, ok_i, ok_d = eng.step(look, ins, ins * 3, dels,
+                                           ins_mask=ins > 0,
+                                           del_mask=dels > 0)
+        for k in ins[ins > 0]:
+            oracle[int(k)] = int(k) * 3
+        for k in dels[dels > 0]:
+            oracle.pop(int(k), None)
+        fn, vn = np.asarray(found), np.asarray(vals)
+        for i, k in enumerate(look):
+            assert fn[i] == (int(k) in pre), (step, k)
+            if int(k) in pre:
+                assert vn[i] == pre[int(k)]
+    assert eng.count() == len(oracle)

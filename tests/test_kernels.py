@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from benchmarks.common import count_primitives as _count_primitives
 from repro.core import buckets, hashing
 from repro.kernels import ops, ref
 
@@ -67,6 +68,142 @@ def test_probe_lookup_adversarial_skew():
     f_k, v_k = ops.probe_lookup(t.key, t.val, t.state, h0, qs, max_probes=64)
     np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_ref))
     np.testing.assert_allclose(np.asarray(v_k), np.asarray(v_ref))
+
+
+def _ordered_args(n_old=1_500, n_new=1_200, n_q=4_096, hazard=64, seed=7):
+    rng = np.random.default_rng(seed)
+    told, keys, _ = _table(1 << 12, n_old, seed=11)
+    tnew, keys2, _ = _table(1 << 12, n_new, seed=12)
+    hk = jnp.asarray(rng.choice(10_000_000, hazard, replace=False).astype(np.int32))
+    hv = hk * 7
+    hl = jnp.asarray(rng.random(hazard) < 0.7)
+    qs = jnp.concatenate([keys, keys2, hk,
+                          jnp.asarray(rng.integers(2**30, 2**31 - 1, n_q)
+                                      .astype(np.int32))])[:n_q]
+    h0_old = hashing.bucket_of(told.hfn, qs, told.capacity)
+    h0_new = hashing.bucket_of(tnew.hfn, qs, tnew.capacity)
+    return ((told.key, told.val, told.state), (tnew.key, tnew.val, tnew.state),
+            hk, hv, hl, h0_old, h0_new, qs)
+
+
+def test_fused_rebuild_lookup_single_sort_single_pallas_call():
+    """Acceptance: during an active rebuild the fused lookup path executes
+    exactly ONE argsort and ONE pallas_call per batch; the unfused path pays
+    at least two of each (old pass + new pass)."""
+    args = _ordered_args(n_q=4_096)
+    fused = jax.make_jaxpr(
+        lambda *a: ops.ordered_lookup_fused(*a, max_probes=32))(*args)
+    unfused = jax.make_jaxpr(
+        lambda *a: ops.ordered_lookup(*a, max_probes=32))(*args)
+    nf = _count_primitives(fused, ("sort", "pallas_call"))
+    nu = _count_primitives(unfused, ("sort", "pallas_call"))
+    assert nf == {"sort": 1, "pallas_call": 1}, nf
+    assert nu["sort"] >= 2 and nu["pallas_call"] >= 2, nu
+    # pass-count reduction is the interpret-mode proxy for the >=1.5x
+    # rebuild-epoch throughput criterion (see bench_rebuild --fused)
+    passes_u = nu["sort"] + nu["pallas_call"]
+    passes_f = nf["sort"] + nf["pallas_call"]
+    assert passes_u / passes_f >= 1.5
+
+
+def test_probe2_matches_ref():
+    """Fused two-table+hazard kernel == ordered oracle (multi-tile batch with
+    duplicates and hazard hits)."""
+    args = _ordered_args(n_q=4_096)
+    f_ref, v_ref = ref.ordered_lookup_ref(*args, max_probes=32)
+    f_k, v_k = ops.ordered_lookup_fused(*args, max_probes=32)
+    np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_ref))
+    np.testing.assert_allclose(np.asarray(v_k), np.asarray(v_ref))
+
+
+def test_probe2_skew_forced_fallback():
+    """A large new table makes per-tile new-slab windows miss (h0_new is
+    scattered while the shared sort is keyed on h0_old): complete=False
+    queries must be recovered exactly by the gated fallback; duplicate query
+    keys ride along."""
+    rng = np.random.default_rng(3)
+    told, keys, _ = _table(1 << 12, 1_000, seed=21)
+    tnew = buckets.linear_make(1 << 15, hashing.fresh("mix32", 22), max_probes=32)
+    k2 = jnp.asarray(rng.choice(10_000_000, 5_000, replace=False).astype(np.int32))
+    tnew, _ = jax.jit(buckets.linear_insert)(tnew, k2, k2 * 9,
+                                             jnp.ones(k2.shape, bool))
+    hz = jnp.zeros(32, jnp.int32)
+    qs = jnp.concatenate([k2[:2000], jnp.tile(k2[:128], 8), keys])
+    h0_old = hashing.bucket_of(told.hfn, qs, told.capacity)
+    h0_new = hashing.bucket_of(tnew.hfn, qs, tnew.capacity)
+    args = ((told.key, told.val, told.state), (tnew.key, tnew.val, tnew.state),
+            hz, hz, jnp.zeros(32, bool), h0_old, h0_new, qs)
+    f_ref, v_ref = ref.ordered_lookup_ref(*args, max_probes=32)
+    f_k, v_k = ops.ordered_lookup_fused(*args, max_probes=32)
+    np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_ref))
+    np.testing.assert_allclose(np.asarray(v_k), np.asarray(v_ref))
+
+
+def test_probe_insert_matches_oracle_low_load():
+    """Claim kernel == insert oracle at low load: identical ok flags, every
+    inserted key readable with its value, live-count conserved."""
+    rng = np.random.default_rng(5)
+    t = buckets.linear_make(1 << 13, hashing.fresh("mix32", 5), max_probes=32)
+    keys = jnp.asarray(rng.choice(1_000_000, 3_000, replace=False).astype(np.int32))
+    h0 = hashing.bucket_of(t.hfn, keys, t.capacity)
+    mask = jnp.ones(keys.shape, bool)
+    tk, tv, ts, ok = ops.probe_insert(t.key, t.val, t.state, h0, keys,
+                                      keys * 5, mask, max_probes=32)
+    _, _, ts_ref, ok_ref = ref.probe_insert_ref(t.key, t.val, t.state, h0,
+                                                keys, keys * 5, mask, 32)
+    np.testing.assert_array_equal(np.asarray(ok), np.asarray(ok_ref))
+    assert bool(ok.all())
+    assert int((ts == 1).sum()) == int((ts_ref == 1).sum()) == 3_000
+    f, v = ref.probe_lookup_ref(tk, tv, ts, h0, keys, 32)
+    assert bool(f.all()) and bool((v == keys * 5).all())
+
+
+def test_probe_insert_duplicates_and_existing():
+    """buckets.linear_insert_fused (winner dedup + kernel) must agree with
+    the jnp linear_insert on every observable: ok counts per key, final
+    membership, values."""
+    rng = np.random.default_rng(9)
+    base = jnp.asarray(rng.choice(1_000_000, 500, replace=False).astype(np.int32))
+    t0 = buckets.linear_make(1 << 12, hashing.fresh("mix32", 1), max_probes=32)
+    t0, _ = jax.jit(buckets.linear_insert)(t0, base, base * 2,
+                                           jnp.ones(base.shape, bool))
+    # batch: duplicates of new keys, re-inserts of existing keys, masked-out
+    fresh = jnp.asarray(rng.choice(np.arange(2_000_000, 3_000_000), 400,
+                                   replace=False).astype(np.int32))
+    batch = jnp.concatenate([fresh, fresh[:200], base[:100]])
+    vals = batch * 3
+    mask = jnp.ones(batch.shape, bool).at[-50:].set(False)
+    t_j, ok_j = jax.jit(buckets.linear_insert)(t0, batch, vals, mask)
+    t_k, ok_k = jax.jit(buckets.linear_insert_fused)(t0, batch, vals, mask)
+    np.testing.assert_array_equal(np.asarray(ok_k), np.asarray(ok_j))
+    assert int(buckets.linear_count_live(t_k)) == int(buckets.linear_count_live(t_j))
+    probe = jnp.concatenate([base, fresh])
+    f_j, v_j, _ = buckets.linear_lookup(t_j, probe)
+    f_k, v_k, _ = buckets.linear_lookup(t_k, probe)
+    np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_j))
+    np.testing.assert_array_equal(np.asarray(v_k), np.asarray(v_j))
+
+
+def test_probe_insert_full_table_pressure():
+    """Near-capacity insert with a short probe bound: successful claims are
+    readable, failures genuinely exhausted their windows, no slot double-
+    claimed (live count == ok count)."""
+    rng = np.random.default_rng(4)
+    t = buckets.linear_make(1 << 10, hashing.fresh("mix32", 5), max_probes=16)
+    keys = jnp.asarray(rng.choice(1_000_000, 1_200, replace=False).astype(np.int32))
+    h0 = hashing.bucket_of(t.hfn, keys, t.capacity)
+    mask = jnp.ones(keys.shape, bool)
+    tk, tv, ts, ok = ops.probe_insert(t.key, t.val, t.state, h0, keys, keys,
+                                      mask, max_probes=16)
+    _, _, _, ok_ref = ref.probe_insert_ref(t.key, t.val, t.state, h0, keys,
+                                           keys, mask, 16)
+    # claim order is a different (equally legal) linearization than the
+    # oracle's, so the totals may differ by a whisker under contention
+    assert abs(int(ok.sum()) - int(ok_ref.sum())) <= 5
+    assert int((ts == 1).sum()) == int(ok.sum())       # no double-claims
+    f, v = ref.probe_lookup_ref(tk, tv, ts, h0, keys, 16)
+    assert bool(f[ok].all()) and bool((v[ok] == keys[ok]).all())
+    assert not bool(f[~ok].any())                       # failures not inserted
 
 
 def test_ordered_lookup_fused_matches_ref():
