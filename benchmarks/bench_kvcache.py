@@ -10,7 +10,6 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
@@ -51,7 +50,8 @@ def run(*, quiet=False):
     eng.kv = kvcache.replace(eng.kv, table=dhash.rebuild_finish(eng.kv.table))
     after = [one_step() for _ in range(30)]
 
-    p = lambda xs, q: float(np.percentile(np.asarray(xs) * 1e3, q))
+    def p(xs, q):
+        return float(np.percentile(np.asarray(xs) * 1e3, q))
     if not quiet:
         print(f"decode step p50/p95 (ms): baseline {p(baseline,50):.1f}/{p(baseline,95):.1f}  "
               f"during rehash {p(during,50):.1f}/{p(during,95):.1f}  "

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import UNIVERSE, DHashDriver, Workload, run_throughput
-from repro.core import dhash, hashing
+from repro.core import hashing
 
 
 def run(alpha=20, qs=(256, 1024, 4096), *, quiet=False):

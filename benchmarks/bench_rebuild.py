@@ -116,17 +116,218 @@ def run_fused_probe(batch=4096, n_items=3_000, *, iters=3, quiet=False,
     return result
 
 
+def _count_passes(closed_jaxpr):
+    """Serialized table-pass proxy for the write-path comparison.
+
+    A "pass" is one serialized table-touching round: sorts, pallas_calls,
+    and top-level gathers/scatters count 1 each; a scan whose body touches
+    the table (the jnp probe/claim loops — ``fori_loop`` lowers to scan)
+    counts its static ``length``, because each round is a *dependent* HBM
+    gather that must land before the next slot can be probed.  A kernel's
+    internal probe rounds run on a VMEM-resident slab inside its single
+    pallas pass, and ``lax.cond`` branches are runtime-gated fallbacks the
+    steady state never executes — neither is descended into.  This is the
+    roofline distinction (see kernels/probe.py) the fused write path exists
+    to exploit.
+    """
+    TABLE_OPS = ("sort", "gather", "scatter")
+
+    def has_table_ops(jaxpr):
+        for eq in jaxpr.eqns:
+            if any(s in eq.primitive.name for s in TABLE_OPS):
+                return True
+            for p in eq.params.values():
+                if hasattr(p, "jaxpr") and has_table_ops(
+                        p.jaxpr if hasattr(p.jaxpr, "eqns") else p.jaxpr.jaxpr):
+                    return True
+        return False
+
+    def rec(jaxpr):
+        total = 0
+        for eq in jaxpr.eqns:
+            name = eq.primitive.name
+            if name == "pallas_call":
+                total += 1
+                continue
+            if name == "cond":
+                continue
+            if name == "scan":
+                body = eq.params["jaxpr"].jaxpr
+                if has_table_ops(body):
+                    total += int(eq.params.get("length", 1))
+                continue
+            if name == "while":
+                body = eq.params["body_jaxpr"].jaxpr
+                total += 1 + rec(body)
+                continue
+            if any(s in name for s in TABLE_OPS):
+                total += 1
+            for p in eq.params.values():
+                if hasattr(p, "jaxpr"):
+                    total += rec(p.jaxpr if hasattr(p.jaxpr, "eqns")
+                                 else p.jaxpr.jaxpr)
+        return total
+
+    return rec(closed_jaxpr.jaxpr)
+
+
+def run_fused_writes(batch=4096, n_items=3_000, *, iters=3, quiet=False,
+                     out_path=None):
+    """fused=on vs jnp write-path comparison on the delete+rebuild mixed
+    workload (PR 2 acceptance).
+
+    One mid-rebuild step of the mixed workload = ordered lookup + insert
+    (new table) + ordered DELETE + rebuild chunk EXTRACT + hazard LANDING.
+    The fused arm runs the Pallas write kernels (``ordered_delete_fused``,
+    ``extract_chunk_fused``, ``probe_insert`` for the landing); the jnp arm
+    is the reference-oracle composition the unfused path executes.  The
+    acceptance metric is the serialized table-pass reduction
+    (``_count_passes``); interpreted-kernel wall clock is recorded for the
+    trajectory but not asserted (interpret mode is not representative).
+    Results land in BENCH_fused_writes.json; exactness of the fused arm is
+    cross-checked against the jnp arm in-run.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import buckets, dhash, hashing
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(0)
+    d = dhash.make("linear", capacity=n_items, chunk=256, seed=1, fused=True)
+    present = rng.choice(UNIVERSE, size=n_items, replace=False).astype(np.int32)
+    keys = jnp.asarray(present)
+    ins = jax.jit(dhash.insert)
+    for i in range(0, n_items, 4096):
+        d, _ = ins(d, keys[i:i + 4096], keys[i:i + 4096])
+    d = dhash.rebuild_start(d, seed=9)
+    d = jax.jit(dhash.rebuild_chunk)(d)
+    d = jax.jit(dhash.rebuild_extract)(d)   # populated hazard window
+
+    mp = d.old.max_probes
+    ch = d.chunk
+    c_old, c_new = d.old.capacity, d.new.capacity
+    qs = jnp.asarray(np.concatenate([
+        rng.choice(present, batch // 2),
+        rng.integers(1, UNIVERSE, batch - batch // 2)]).astype(np.int32))
+    dk = jnp.asarray(np.concatenate([
+        rng.choice(present, batch // 8),
+        rng.integers(1, UNIVERSE, batch // 8)]).astype(np.int32))
+    ik = jnp.asarray(rng.choice(
+        np.arange(UNIVERSE, UNIVERSE + 10 * batch), batch // 4,
+        replace=False).astype(np.int32))
+    iv = ik * 3
+    win_d = buckets.batch_winners(dk, jnp.ones(dk.shape, bool))
+    win_i = buckets.batch_winners(ik, jnp.ones(ik.shape, bool))
+    h0o_q = hashing.bucket_of(d.old.hfn, qs, c_old)
+    h0n_q = hashing.bucket_of(d.new.hfn, qs, c_new)
+    h0o_d = hashing.bucket_of(d.old.hfn, dk, c_old)
+    h0n_d = hashing.bucket_of(d.new.hfn, dk, c_new)
+    h0n_i = hashing.bucket_of(d.new.hfn, ik, c_new)
+    hfn_new = d.new.hfn
+
+    def fused_step(old_t, new_t, hk, hv, hl, cursor):
+        f, v = ops.ordered_lookup_fused(old_t, new_t, hk, hv, hl,
+                                        h0o_q, h0n_q, qs, max_probes=mp)
+        os_, ns_, hl, ok_d = ops.ordered_delete_fused(
+            old_t, new_t, hk, hv, hl, h0o_d, h0n_d, dk, win_d, max_probes=mp)
+        old_t = (old_t[0], old_t[1], os_)
+        new_t = (new_t[0], new_t[1], ns_)
+        nk, nv, ns2, ok_i = ops.probe_insert(*new_t, h0n_i, ik, iv, win_i,
+                                             max_probes=mp)
+        new_t = (nk, nv, ns2)
+        os2, hk2, hv2, hl2, cur2 = ops.extract_chunk_fused(
+            old_t[0], old_t[1], old_t[2], cursor, chunk=ch)
+        old_t = (old_t[0], old_t[1], os2)
+        h0_h = hashing.bucket_of(hfn_new, hk2, c_new)
+        lk2, lv2, ls2, _ = ops.probe_insert(*new_t, h0_h, hk2, hv2, hl2,
+                                            max_probes=mp)
+        return f, v, ok_d, ok_i, old_t[2], (lk2, lv2, ls2), cur2
+
+    def jnp_step(old_t, new_t, hk, hv, hl, cursor):
+        f, v = ref.ordered_lookup_ref(old_t, new_t, hk, hv, hl,
+                                      h0o_q, h0n_q, qs, mp)
+        os_, ok_o = ref.probe_delete_ref(old_t[0], old_t[1], old_t[2],
+                                         h0o_d, dk, win_d, mp)
+        pend = win_d & ~ok_o
+        eq = (dk[:, None] == hk[None, :]) & hl[None, :]
+        hz_hit = eq.any(-1) & pend
+        kill = jnp.zeros_like(hl).at[
+            jnp.where(hz_hit, jnp.argmax(eq, axis=-1), ch)].set(
+            True, mode="drop")
+        hl = hl & ~kill
+        ns_, ok_n = ref.probe_delete_ref(new_t[0], new_t[1], new_t[2],
+                                         h0n_d, dk, pend & ~hz_hit, mp)
+        ok_d = ok_o | hz_hit | ok_n
+        nk, nv, ns2, ok_i = ref.probe_insert_ref(
+            new_t[0], new_t[1], ns_, h0n_i, ik, iv, win_i, mp)
+        # extract (the jnp gather scan of linear_extract_chunk)
+        pos = cursor + jnp.arange(ch, dtype=jnp.int32)
+        valid = pos < c_old
+        cpos = jnp.where(valid, pos, 0)
+        live = valid & (os_[cpos] == 1)
+        hk2 = jnp.where(live, old_t[0][cpos], 0)
+        hv2 = jnp.where(live, old_t[1][cpos], 0)
+        os2 = os_.at[jnp.where(live, cpos, c_old)].set(3, mode="drop")
+        cur2 = jnp.minimum(cursor + ch, c_old)
+        h0_h = hashing.bucket_of(hfn_new, hk2, c_new)
+        lk2, lv2, ls2, _ = ref.probe_insert_ref(nk, nv, ns2, h0_h, hk2, hv2,
+                                                live, mp)
+        return f, v, ok_d, ok_i, os2, (lk2, lv2, ls2), cur2
+
+    old_t = (d.old.key, d.old.val, d.old.state)
+    new_t = (d.new.key, d.new.val, d.new.state)
+    args = (old_t, new_t, d.hazard_key, d.hazard_val, d.hazard_live, d.cursor)
+
+    passes, walls = {}, {}
+    for name, fn in (("fused", fused_step), ("jnp", jnp_step)):
+        passes[name] = _count_passes(jax.make_jaxpr(fn)(*args))
+        walls[name] = timeit(jax.jit(fn), *args, warmup=1, iters=iters) * 1e6
+        if not quiet:
+            print(f"fused_writes/{name:5s} Q={batch} passes={passes[name]:4d} "
+                  f"{walls[name]:9.0f} us")
+
+    # exactness cross-check: both arms agree on every observable
+    out_f = jax.jit(fused_step)(*args)
+    out_j = jax.jit(jnp_step)(*args)
+    assert bool((out_f[0] == out_j[0]).all())            # lookup found
+    assert bool((out_f[1] == out_j[1]).all())            # lookup vals
+    assert bool((out_f[2] == out_j[2]).all())            # delete ok
+    assert bool((out_f[3] == out_j[3]).all())            # insert ok
+    assert bool((out_f[4] == out_j[4]).all())            # old states
+    assert int((out_f[5][2] == 1).sum()) == int((out_j[5][2] == 1).sum())
+    assert int(out_f[6]) == int(out_j[6])                # cursor
+
+    ratio = passes["jnp"] / passes["fused"]
+    result = {"batch": batch, "n_items": n_items, "chunk": ch,
+              "interpret": True,
+              "workload": "lookup+insert+delete+extract+land (mid-rebuild)",
+              "fused": {"passes": passes["fused"], "wall_us": walls["fused"]},
+              "jnp": {"passes": passes["jnp"], "wall_us": walls["jnp"]},
+              "pass_ratio": ratio}
+    assert ratio >= 1.5, f"write-path pass reduction regressed: {ratio:.2f}x"
+    out = (pathlib.Path(out_path) if out_path
+           else _REPO_ROOT / "BENCH_fused_writes.json")
+    out.write_text(json.dumps(result, indent=2) + "\n")
+    if not quiet:
+        print(f"[summary] fused write-path pass reduction {ratio:.2f}x "
+              f"(>=1.5x required) -> {out}")
+    return result
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--ns", type=int, nargs="*", default=[2_000, 8_000, 32_000])
     ap.add_argument("--alpha", type=int, default=20)
     ap.add_argument("--fused", action="store_true",
-                    help="also run the fused=on|off rebuild-epoch probe "
-                         "comparison (writes BENCH_fused_probe.json)")
+                    help="also run the fused=on|off rebuild-epoch probe and "
+                         "write-path comparisons (writes "
+                         "BENCH_fused_probe.json + BENCH_fused_writes.json)")
     args = ap.parse_args(argv)
     rows = run(tuple(args.ns), args.alpha)
     if args.fused:
         run_fused_probe()
+        run_fused_writes()
     return rows
 
 

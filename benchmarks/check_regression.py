@@ -1,0 +1,115 @@
+"""CI perf-regression gate: fresh BENCH_*.json vs the committed baselines.
+
+Every benchmark that writes a ``BENCH_*.json`` artifact (bench_rebuild's
+fused-probe and fused-writes comparisons today) commits its result at the
+repo root; CI snapshots those committed files, re-runs
+``benchmarks.run --quick``, and calls this script to diff the fresh
+artifacts against the snapshot.
+
+Gate semantics, per leaf key:
+
+* **pass counts** (``sort``, ``pallas_call``, ``passes``) are STRUCTURAL:
+  they come from jaxpr inspection, are machine-independent, and any
+  increase is a regression — the fused paths grew an extra sort or kernel
+  launch, or a jnp probe loop crept back in.  Compared exactly.
+* **pass ratios** (``pass_ratio``) must not drop by more than
+  ``--ratio-tolerance`` (default 15%): the fused-vs-jnp advantage is the
+  acceptance criterion of the kernels.
+* **timings** (``wall_us``) must not grow by more than
+  ``--time-tolerance`` (default 15%).  Committed baselines are produced on
+  the dev container, so cross-machine CI runs should pass a wider band
+  (the workflow uses 3.0: interpret-mode wall clock varies wildly across
+  runners, but a >4x blowup still means something is pathologically wrong).
+
+Exit status: 0 clean, 1 regression(s) found, 2 usage/setup error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+STRUCTURAL = ("sort", "pallas_call", "passes")
+RATIOS = ("pass_ratio",)
+TIMINGS = ("wall_us",)
+
+
+def _compare(base, cur, path: str, failures: list[str], *,
+             time_tol: float, ratio_tol: float) -> None:
+    if isinstance(base, dict):
+        if not isinstance(cur, dict):
+            failures.append(f"{path}: expected object, got {type(cur).__name__}")
+            return
+        for k, v in base.items():
+            if k not in cur:
+                failures.append(f"{path}/{k}: missing from current run")
+                continue
+            _compare(v, cur[k], f"{path}/{k}", failures,
+                     time_tol=time_tol, ratio_tol=ratio_tol)
+        return
+    if isinstance(base, bool) or not isinstance(base, (int, float)):
+        return  # strings/bools are descriptive, not gated
+    key = path.rsplit("/", 1)[-1]
+    if key in STRUCTURAL:
+        if cur > base:
+            failures.append(
+                f"{path}: pass count increased {base} -> {cur}")
+    elif key in RATIOS:
+        if cur < base * (1 - ratio_tol):
+            failures.append(
+                f"{path}: ratio regressed {base:.2f} -> {cur:.2f} "
+                f"(tolerance {ratio_tol:.0%})")
+    elif key in TIMINGS:
+        if cur > base * (1 + time_tol):
+            failures.append(
+                f"{path}: timing regressed {base:.0f}us -> {cur:.0f}us "
+                f"(tolerance {time_tol:.0%})")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline-dir", required=True,
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--current-dir", required=True,
+                    help="directory holding the freshly emitted BENCH_*.json")
+    ap.add_argument("--time-tolerance", type=float, default=0.15,
+                    help="allowed relative wall-clock growth (default 0.15)")
+    ap.add_argument("--ratio-tolerance", type=float, default=0.15,
+                    help="allowed relative pass-ratio drop (default 0.15)")
+    args = ap.parse_args(argv)
+
+    baseline_dir = pathlib.Path(args.baseline_dir)
+    current_dir = pathlib.Path(args.current_dir)
+    baselines = sorted(baseline_dir.glob("BENCH_*.json"))
+    if not baselines:
+        print(f"error: no BENCH_*.json baselines in {baseline_dir}",
+              file=sys.stderr)
+        return 2
+
+    failures: list[str] = []
+    for base_path in baselines:
+        cur_path = current_dir / base_path.name
+        if not cur_path.exists():
+            failures.append(f"{base_path.name}: artifact not produced by the "
+                            f"current run")
+            continue
+        base = json.loads(base_path.read_text())
+        cur = json.loads(cur_path.read_text())
+        _compare(base, cur, base_path.stem, failures,
+                 time_tol=args.time_tolerance,
+                 ratio_tol=args.ratio_tolerance)
+        print(f"checked {base_path.name}")
+
+    if failures:
+        print(f"\nPERF REGRESSION: {len(failures)} failure(s)",
+              file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print(f"perf gate clean: {len(baselines)} artifact(s) within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import baselines as bl
-from repro.core import buckets, dhash
+from repro.core import dhash
 
 I32 = jnp.int32
 UNIVERSE = 10_000_000          # key range U, paper §6.1

@@ -16,7 +16,6 @@ full sweep (paper-faithful configs).
 import json
 import time
 
-import jax
 
 from repro import configs
 from repro.launch import analysis, hlo_cost, shapes as shp

@@ -84,17 +84,29 @@ def fused_probe():
     _row("fused_probe/pass_ratio", 0.0, f"{r['pass_ratio']:.2f}x_fewer_passes")
 
 
+def fused_writes():
+    from benchmarks.bench_rebuild import run_fused_writes
+    r = run_fused_writes(batch=4096, n_items=3_000, quiet=True)
+    for name in ("fused", "jnp"):
+        _row(f"fused_writes/{name}/q{r['batch']}", r[name]["wall_us"],
+             f"{r[name]['passes']}passes")
+    _row("fused_writes/pass_ratio", 0.0,
+         f"{r['pass_ratio']:.2f}x_fewer_passes")
+
+
 TABLES = [fig2_throughput, fig3_rebuild, fig4_portability, s62_oversubscribe,
-          s1_attack, moe_router, kvcache_rehash, fused_probe]
+          s1_attack, moe_router, kvcache_rehash, fused_probe, fused_writes]
 
 
 def quick() -> None:
     """CI smoke mode: exercises the perf harness end-to-end in minutes —
-    the fused-probe acceptance check (pass counts + BENCH_fused_probe.json)
-    plus a tiny fig3 rebuild sweep so perf code can't silently rot."""
+    the fused-probe and fused-writes acceptance checks (pass counts +
+    BENCH_fused_probe.json / BENCH_fused_writes.json) plus a tiny fig3
+    rebuild sweep so perf code can't silently rot."""
     print("name,us_per_call,derived")
     t0 = time.time()
     fused_probe()
+    fused_writes()
     from benchmarks.bench_rebuild import run as rebuild_run
     for name, n, dt in rebuild_run(ns=(2_000,), quiet=True):
         _row(f"fig3/{name}/n{n}", dt * 1e6, f"{dt*1e3:.1f}ms_full_rebuild")

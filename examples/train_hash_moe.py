@@ -13,7 +13,6 @@ import time
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig

@@ -31,7 +31,7 @@ structure differs — which is what the paper measures.
 """
 from __future__ import annotations
 
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -115,7 +115,8 @@ def _xu_apply(x: HTXu, op, keys, vals, mask):
     node's entry in both pointer sets); the passive-set maintenance is the
     extra single pass, not extra lock rounds."""
     act, pas = _xu_pick(x)
-    bfn = lambda t, k: hashing.bucket_of(t.hfn, k, t.nbuckets)
+    def bfn(t, k):
+        return hashing.bucket_of(t.hfn, k, t.nbuckets)
     act, ok, _ = lock_serialized(op, act, keys, vals, mask, act.nbuckets, bfn)
 
     def also_passive(pas):
@@ -134,7 +135,8 @@ def xu_insert(x: HTXu, keys, vals, mask=None):
 
 def xu_delete(x: HTXu, keys, mask=None):
     mask = jnp.ones(keys.shape, bool) if mask is None else mask
-    op = lambda t, k, v, m: buckets.chain_delete(t, k, m)
+    def op(t, k, v, m):
+        return buckets.chain_delete(t, k, m)
     return _xu_apply(x, op, keys, vals=keys, mask=mask)
 
 
@@ -207,7 +209,8 @@ def rht_lookup(r: HTRHT, keys):
 
 def rht_insert(r: HTRHT, keys, vals, mask=None):
     mask = jnp.ones(keys.shape, bool) if mask is None else mask
-    bfn = lambda t, k: hashing.bucket_of(t.hfn, k, t.nbuckets)
+    def bfn(t, k):
+        return hashing.bucket_of(t.hfn, k, t.nbuckets)
 
     def idle(r):
         t, ok, _ = lock_serialized(buckets.chain_insert, r.old, keys, vals, mask,
@@ -224,8 +227,10 @@ def rht_insert(r: HTRHT, keys, vals, mask=None):
 
 def rht_delete(r: HTRHT, keys, mask=None):
     mask = jnp.ones(keys.shape, bool) if mask is None else mask
-    bfn = lambda t, k: hashing.bucket_of(t.hfn, k, t.nbuckets)
-    op = lambda t, k, v, m: buckets.chain_delete(t, k, m)
+    def bfn(t, k):
+        return hashing.bucket_of(t.hfn, k, t.nbuckets)
+    def op(t, k, v, m):
+        return buckets.chain_delete(t, k, m)
     t_old, ok_old, _ = lock_serialized(op, r.old, keys, keys, mask, r.old.nbuckets, bfn)
 
     def slow(r):

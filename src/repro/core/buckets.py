@@ -200,12 +200,12 @@ def linear_clear(t: LinearTable) -> LinearTable:
 
 
 # -- Pallas-accelerated linear paths (kernels/ops.py): same observable set
-# semantics as linear_lookup/linear_insert, hot loop in VMEM ----------------
+# semantics as linear_lookup/linear_insert/linear_delete/linear_extract_chunk,
+# hot loop in VMEM ----------------------------------------------------------
 
 def linear_lookup_fused(t: LinearTable, keys: jax.Array, *,
                         interpret: bool = True):
-    """Kernel-backed lookup.  Returns (found, vals) — no slot locations (the
-    delete path, which needs them, stays on the jnp path)."""
+    """Kernel-backed lookup.  Returns (found, vals)."""
     from repro.kernels import ops
     h0 = hashing.bucket_of(t.hfn, keys, t.capacity)
     return ops.probe_lookup(t.key, t.val, t.state, h0, keys,
@@ -225,6 +225,36 @@ def linear_insert_fused(t: LinearTable, keys: jax.Array, vals: jax.Array,
                                       interpret=interpret)
     return LinearTable(capacity=t.capacity, max_probes=t.max_probes,
                        hfn=t.hfn, key=tk, val=tv, state=ts), ok
+
+
+def linear_delete_fused(t: LinearTable, keys: jax.Array, mask: jax.Array, *,
+                        interpret: bool = True):
+    """Kernel-backed delete: the location-emitting probe kernel tombstones
+    in ONE pass (one sort + one pallas_call + one scatter) instead of the
+    jnp lookup-then-scatter double walk."""
+    from repro.kernels import ops
+    winner = batch_winners(keys, mask)
+    h0 = hashing.bucket_of(t.hfn, keys, t.capacity)
+    state, ok = ops.probe_delete(t.key, t.val, t.state, h0, keys, winner,
+                                 max_probes=t.max_probes, interpret=interpret)
+    return LinearTable(capacity=t.capacity, max_probes=t.max_probes,
+                       hfn=t.hfn, key=t.key, val=t.val, state=state), ok
+
+
+def linear_extract_chunk_fused(t: LinearTable, cursor: jax.Array, n: int, *,
+                               interpret: bool = True):
+    """Kernel-backed rebuild chunk scan: one pallas_call over the resident
+    slab window + one MIGRATED scatter; hazard entries come back COMPACTED
+    (live entries first) rather than position-aligned — identical as a set,
+    which is all the hazard protocol observes."""
+    from repro.kernels import ops
+    if n > ops.SLAB:   # window contract; fall back to the jnp scan
+        return linear_extract_chunk(t, cursor, n)
+    state, hk, hv, hl, cur = ops.extract_chunk_fused(
+        t.key, t.val, t.state, cursor, chunk=n, interpret=interpret)
+    t = LinearTable(capacity=t.capacity, max_probes=t.max_probes, hfn=t.hfn,
+                    key=t.key, val=t.val, state=state)
+    return t, hk, hv, hl, cur
 
 
 # ---------------------------------------------------------------------------
@@ -340,6 +370,70 @@ def twochoice_clear(t: TwoChoiceTable) -> TwoChoiceTable:
     return TwoChoiceTable(nbuckets=t.nbuckets, width=t.width,
                           max_rounds=t.max_rounds, hfn_a=t.hfn_a,
                           hfn_b=t.hfn_b, key=z, val=z, state=z)
+
+
+# -- Pallas-accelerated twochoice paths (kernels/ops.py): both row choices
+# of a query become two entries of ONE sorted batch — one argsort + one
+# pallas_call replace the [Q, W] double-row gathers --------------------------
+
+def twochoice_lookup_fused(t: TwoChoiceTable, keys: jax.Array, *,
+                           interpret: bool = True):
+    """Kernel-backed 2-choice lookup.  Returns (found, vals, loc) — the same
+    triple as ``twochoice_lookup`` so the delete path can reuse ``loc``."""
+    from repro.kernels import ops
+    ba, bb = _tc_rows(t, keys)
+    return ops.twochoice_lookup(t.key, t.val, t.state, ba, bb, keys,
+                                interpret=interpret)
+
+
+def twochoice_insert_fused(t: TwoChoiceTable, keys: jax.Array,
+                           vals: jax.Array, mask: jax.Array, *,
+                           interpret: bool = True):
+    """Kernel-backed 2-choice insert: batch_winners dedup, then one claim
+    pass + one scatter (a-row claims shadow b-row claims of the same
+    query)."""
+    from repro.kernels import ops
+    winner = batch_winners(keys, mask)
+    ba, bb = _tc_rows(t, keys)
+    tk, tv, ts, ok = ops.twochoice_insert(t.key, t.val, t.state, ba, bb,
+                                          keys, vals, winner,
+                                          max_rounds=t.max_rounds,
+                                          interpret=interpret)
+    return TwoChoiceTable(nbuckets=t.nbuckets, width=t.width,
+                          max_rounds=t.max_rounds, hfn_a=t.hfn_a,
+                          hfn_b=t.hfn_b, key=tk, val=tv, state=ts), ok
+
+
+def twochoice_delete_fused(t: TwoChoiceTable, keys: jax.Array,
+                           mask: jax.Array, *, interpret: bool = True):
+    """Kernel-backed 2-choice delete: reuses the fused lookup's location
+    output — one kernel pass + one tombstone scatter, instead of the jnp
+    path's full second ``twochoice_lookup`` row-gather probe."""
+    from repro.kernels import ops
+    winner = batch_winners(keys, mask)
+    ba, bb = _tc_rows(t, keys)
+    state, ok = ops.twochoice_delete(t.key, t.val, t.state, ba, bb, keys,
+                                     winner, interpret=interpret)
+    return TwoChoiceTable(nbuckets=t.nbuckets, width=t.width,
+                          max_rounds=t.max_rounds, hfn_a=t.hfn_a,
+                          hfn_b=t.hfn_b, key=t.key, val=t.val, state=state), ok
+
+
+def twochoice_extract_chunk_fused(t: TwoChoiceTable, cursor: jax.Array,
+                                  n: int, *, interpret: bool = True):
+    """Kernel-backed 2-choice rebuild chunk scan: the extract kernel runs on
+    the row-major flattened arrays (the scan order is identical)."""
+    from repro.kernels import ops
+    if n > ops.SLAB:
+        return twochoice_extract_chunk(t, cursor, n)
+    state, hk, hv, hl, cur = ops.extract_chunk_fused(
+        t.key.reshape(-1), t.val.reshape(-1), t.state.reshape(-1), cursor,
+        chunk=n, interpret=interpret)
+    t = TwoChoiceTable(nbuckets=t.nbuckets, width=t.width,
+                       max_rounds=t.max_rounds, hfn_a=t.hfn_a, hfn_b=t.hfn_b,
+                       key=t.key, val=t.val,
+                       state=state.reshape(t.nbuckets, t.width))
+    return t, hk, hv, hl, cur
 
 
 # ---------------------------------------------------------------------------

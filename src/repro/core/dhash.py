@@ -39,7 +39,7 @@ never a stop-the-world O(N) pause.
 """
 from __future__ import annotations
 
-from functools import partial
+import os
 from typing import Any
 
 import jax
@@ -58,9 +58,11 @@ class DHashState:
     chunk: int                  # hazard buffer capacity (entries per rebuild chunk)
     fwd_hazard: bool            # linear backend: resolve hazard hits via
                                 # MIGRATED-slot forwarding (zero extra passes)
-    fused: bool                 # linear backend: route lookup/insert through
-                                # the Pallas kernels (kernels/ops.py); the
-                                # rebuild-epoch lookup becomes ONE sort + ONE
+    fused: bool                 # linear/twochoice: route the FULL op surface
+                                # (lookup/insert/delete + rebuild extract and
+                                # land) through the Pallas kernels
+                                # (kernels/ops.py); the linear rebuild-epoch
+                                # lookup AND delete are each ONE sort + ONE
                                 # pallas_call (old+hazard+new in one pass)
     old: Any                    # active table (backend pytree)
     new: Any                    # target table; meaningful only while rebuilding
@@ -98,12 +100,29 @@ def _next_pow2(x: int) -> int:
     return 1 << (int(x) - 1).bit_length()
 
 
+FUSED_BACKENDS = ("linear", "twochoice")
+
+
+def _fused_default(backend: str) -> bool:
+    """Resolve ``fused=None``: the DHASH_FUSED env var (``on``/``1``/``true``)
+    turns the Pallas kernels on for every backend that supports them — the
+    hook CI's fused=on|off test matrix uses to drive the whole suite through
+    the fused paths without touching call sites."""
+    flag = os.environ.get("DHASH_FUSED", "off").lower()
+    return flag in ("1", "on", "true") and backend in FUSED_BACKENDS
+
+
 def make(backend: str = "linear", capacity: int = 1024, *, chunk: int = 256,
-         seed: int = 0, fwd_hazard: bool = False, fused: bool = False,
+         seed: int = 0, fwd_hazard: bool = False, fused: bool | None = None,
          **kw) -> DHashState:
-    if fused and backend != "linear":
-        raise ValueError("fused kernels are implemented for the linear "
-                         "backend only (see ROADMAP open items)")
+    if fused is None:
+        # fwd_hazard is the alternative (jnp) hazard-resolution strategy; the
+        # env default must not silently shadow it with the fused branch
+        fused = _fused_default(backend) and not fwd_hazard
+    if fused and backend not in FUSED_BACKENDS:
+        raise ValueError("fused kernels are implemented for the linear and "
+                         "twochoice backends only (chain is the documented "
+                         "jnp reference; see ROADMAP open items)")
     old = _make_table(backend, capacity, seed, **kw)
     new = _make_table(backend, capacity, seed + 1, **kw)
     # distinct buffers per field (aliased leaves break jit buffer donation)
@@ -136,11 +155,24 @@ def lookup(d: DHashState, keys: jax.Array):
 
     def fast(dd: DHashState):
         if dd.fused:
+            if dd.backend == "twochoice":
+                f, v, _ = buckets.twochoice_lookup_fused(dd.old, keys)
+                return f, v
             return buckets.linear_lookup_fused(dd.old, keys)
         f, v, _ = buckets.lookup(dd.old, keys)
         return f, v
 
     def slow(dd: DHashState):
+        if dd.fused and dd.backend == "twochoice":
+            # staged but fully kernel-backed: the 2-choice probe2 analogue is
+            # a ROADMAP open item, so the ordered check composes two fused
+            # row-gather passes around the dense hazard compare
+            f_old, v_old, _ = buckets.twochoice_lookup_fused(dd.old, keys)
+            f_hz, v_hz = _hazard_probe(dd, keys)
+            f_new, v_new, _ = buckets.twochoice_lookup_fused(dd.new, keys)
+            found = f_old | f_hz | f_new
+            val = jnp.where(f_old, v_old, jnp.where(f_hz, v_hz, v_new))
+            return found, val
         if dd.fused:
             from repro.kernels import ops
             h0_old = hashing.bucket_of(dd.old.hfn, keys, dd.old.capacity)
@@ -172,39 +204,73 @@ def lookup(d: DHashState, keys: jax.Array):
     return jax.lax.cond(d.rebuilding, slow, fast, d)
 
 
+def _ins_table(dd: DHashState, t, kk, vv, mm):
+    """Backend-dispatched insert (shared by user inserts and hazard
+    landing, so a fused state's rebuild landing runs the claim kernel)."""
+    if dd.fused and dd.backend == "twochoice":
+        return buckets.twochoice_insert_fused(t, kk, vv, mm)
+    if dd.fused:
+        return buckets.linear_insert_fused(t, kk, vv, mm)
+    return buckets.insert(t, kk, vv, mm)
+
+
 def insert(d: DHashState, keys: jax.Array, vals: jax.Array, mask: jax.Array | None = None):
     """Batched insert (set semantics: ok=False if key already present in the
     *target* table — Alg. 6). Returns (state', ok)."""
     if mask is None:
         mask = jnp.ones(keys.shape, bool)
 
-    def _ins(dd: DHashState, t, kk, vv, mm):
-        if dd.fused:
-            return buckets.linear_insert_fused(t, kk, vv, mm)
-        return buckets.insert(t, kk, vv, mm)
-
     def fast(dd: DHashState):
-        t, ok = _ins(dd, dd.old, keys, vals, mask)
+        t, ok = _ins_table(dd, dd.old, keys, vals, mask)
         return replace(dd, old=t), ok
 
     def slow(dd: DHashState):
-        t, ok = _ins(dd, dd.new, keys, vals, mask)
+        t, ok = _ins_table(dd, dd.new, keys, vals, mask)
         return replace(dd, new=t), ok
 
     return jax.lax.cond(d.rebuilding, slow, fast, d)
 
 
 def delete(d: DHashState, keys: jax.Array, mask: jax.Array | None = None):
-    """Batched delete honouring the ordered check (Alg. 5). Returns (state', ok)."""
+    """Batched delete honouring the ordered check (Alg. 5). Returns (state', ok).
+
+    With ``fused`` the write path is kernel-backed end to end: the fast
+    branch tombstones via the location-emitting probe kernel, and the linear
+    rebuild-epoch branch is ONE argsort + ONE pallas_call
+    (``ops.ordered_delete_fused`` — the probe2 kernel's slot/hazard-index
+    outputs drive the old tombstone, the hazard kill, and the new tombstone
+    in a single pass)."""
     if mask is None:
         mask = jnp.ones(keys.shape, bool)
 
+    def _del(dd: DHashState, t, kk, mm):
+        if dd.fused:
+            if dd.backend == "twochoice":
+                return buckets.twochoice_delete_fused(t, kk, mm)
+            return buckets.linear_delete_fused(t, kk, mm)
+        return buckets.delete(t, kk, mm)
+
     def fast(dd: DHashState):
-        t, ok = buckets.delete(dd.old, keys, mask)
+        t, ok = _del(dd, dd.old, keys, mask)
         return replace(dd, old=t), ok
 
+    def slow_fused_linear(dd: DHashState):
+        from repro.kernels import ops
+        winner = buckets.batch_winners(keys, mask)
+        h0_old = hashing.bucket_of(dd.old.hfn, keys, dd.old.capacity)
+        h0_new = hashing.bucket_of(dd.new.hfn, keys, dd.new.capacity)
+        os_, ns_, hl, ok = ops.ordered_delete_fused(
+            (dd.old.key, dd.old.val, dd.old.state),
+            (dd.new.key, dd.new.val, dd.new.state),
+            dd.hazard_key, dd.hazard_val, dd.hazard_live,
+            h0_old, h0_new, keys, winner, max_probes=dd.old.max_probes)
+        return replace(dd, old=replace(dd.old, state=os_),
+                       new=replace(dd.new, state=ns_), hazard_live=hl), ok
+
     def slow(dd: DHashState):
-        t_old, ok_old = buckets.delete(dd.old, keys, mask)             # (1) old
+        if dd.fused and dd.backend == "linear":
+            return slow_fused_linear(dd)
+        t_old, ok_old = _del(dd, dd.old, keys, mask)                   # (1) old
         pending = mask & ~ok_old
         # (2) hazard buffer: clear the live bit (LOGICALLY_REMOVED on the
         # in-flight node) - landing will drop it.
@@ -214,7 +280,7 @@ def delete(d: DHashState, keys: jax.Array, mask: jax.Array | None = None):
         kill = (eq & win_hz[:, None]).any(0)
         hazard_live = dd.hazard_live & ~kill
         pending2 = pending & ~hit_hz
-        t_new, ok_new = buckets.delete(dd.new, keys, pending2)         # (3) new
+        t_new, ok_new = _del(dd, dd.new, keys, pending2)               # (3) new
         ok = ok_old | win_hz | ok_new
         return replace(dd, old=t_old, new=t_new, hazard_live=hazard_live), ok
 
@@ -250,11 +316,23 @@ def rebuild_start(d: DHashState, new_table=None, *, seed: int | None = None) -> 
 def rebuild_extract(d: DHashState) -> DHashState:
     """Pull the next chunk out of the old table into the hazard buffer.
 
-    No-op unless rebuilding with an empty hazard buffer."""
+    No-op unless rebuilding with an empty hazard buffer.  With ``fused`` the
+    scan is the extract kernel (one pallas_call over the resident slab
+    window + one MIGRATED scatter; hazard entries compacted on-device)
+    instead of the jnp gather scan."""
 
     def go(dd: DHashState):
-        t, hk, hv, hl, cur = buckets.extract_chunk(dd.old, dd.cursor, dd.chunk)
-        return replace(dd, old=t, hazard_key=hk, hazard_val=hv, hazard_live=hl, cursor=cur)
+        if dd.fused and dd.backend == "linear":
+            t, hk, hv, hl, cur = buckets.linear_extract_chunk_fused(
+                dd.old, dd.cursor, dd.chunk)
+        elif dd.fused and dd.backend == "twochoice":
+            t, hk, hv, hl, cur = buckets.twochoice_extract_chunk_fused(
+                dd.old, dd.cursor, dd.chunk)
+        else:
+            t, hk, hv, hl, cur = buckets.extract_chunk(dd.old, dd.cursor,
+                                                       dd.chunk)
+        return replace(dd, old=t, hazard_key=hk, hazard_val=hv,
+                       hazard_live=hl, cursor=cur)
 
     can = d.rebuilding & ~d.hazard_live.any()
     return jax.lax.cond(can, go, lambda dd: dd, d)
@@ -263,10 +341,20 @@ def rebuild_extract(d: DHashState) -> DHashState:
 def rebuild_land(d: DHashState) -> DHashState:
     """Insert hazard entries into the new table; duplicates lose to the copy
     already in the new table (Alg. 3 lines 34-36); entries killed while in
-    hazard (delete during the hazard period) are dropped."""
+    hazard (delete during the hazard period) are dropped.
+
+    With ``fused`` the landing runs through the SAME claim kernel as user
+    inserts (``probe_insert`` / ``tc_insert``), so the whole rebuild epoch —
+    extract -> land -> swap — stays on-device inside the jitted engine
+    step."""
 
     def go(dd: DHashState):
-        t, _ok = buckets.insert(dd.new, dd.hazard_key, dd.hazard_val, dd.hazard_live)
+        if dd.fused:
+            t, _ok = _ins_table(dd, dd.new, dd.hazard_key, dd.hazard_val,
+                                dd.hazard_live)
+        else:
+            t, _ok = buckets.insert(dd.new, dd.hazard_key, dd.hazard_val,
+                                    dd.hazard_live)
         return replace(dd, new=t, hazard_live=jnp.zeros_like(dd.hazard_live))
 
     return jax.lax.cond(d.rebuilding, go, lambda dd: dd, d)

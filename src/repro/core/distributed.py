@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import buckets, dhash, hashing
+from repro.core import dhash, hashing
 
 I32 = jnp.int32
 

@@ -10,7 +10,13 @@ The steady state is **fully on-device**: the jitted step performs the op
 batch, one rebuild transition, the epoch swap (``finish_same_shape``, valid
 whenever old/new share static shapes — every default rebuild), and, in
 continuous-rebuild mode, the next rebuild start (``rebuild_autostart``, which
-reseeds the hash function on-device).  State buffers are **donated**
+reseeds the hash function on-device).  With a ``fused`` DHashState the whole
+surface inside that step is kernel-backed — lookup, insert, DELETE, the
+rebuild chunk extraction, and the hazard landing all run through the Pallas
+probe/claim/extract kernels, so a complete rebuild epoch (extract -> land ->
+swap) with interleaved reads and writes never leaves the device between
+polls ("fused reads, jnp writes" was PR 1; this is fully fused).  State
+buffers are **donated**
 (``donate_argnums``) so XLA updates tables in place instead of copying them
 every step, and the host polls ``rebuild_done`` only every ``poll_every``
 steps (default 32) — zero ``device_get`` round-trips on the other K-1 steps,

@@ -4,9 +4,16 @@
 ``ref.probe_lookup_ref`` (and of ``buckets.linear_lookup``'s inner loop);
 ``ordered_lookup_fused`` is the accelerated rebuild-epoch path (one sort +
 one pallas_call for the whole old->hazard->new ordered check);
-``probe_insert`` is the accelerated write path (claim kernel + one scatter).
+``probe_insert`` / ``probe_delete`` are the accelerated write paths (claim
+or location kernel + one scatter); ``ordered_delete_fused`` is the
+rebuild-epoch delete (the same probe2 kernel's location outputs drive the
+old/new tombstones and the hazard kill); ``extract_chunk_fused`` is the
+rebuild chunk scan; ``twochoice_lookup`` / ``twochoice_insert`` /
+``twochoice_delete`` bring the 2-choice backend onto the same
+sort + scalar-prefetch treatment (both row choices of a query expand into
+two entries of ONE sorted batch).
 
-Exactness contract shared by all three: queries whose probe window escapes
+Exactness contract shared by all of them: queries whose probe window escapes
 the VMEM-resident slab (hash skew), or whose insert claim collides across
 tiles, are recomputed by the jnp oracle fallback — which is gated behind
 ``jax.lax.cond`` so the steady state (no escapes) never pays for it.
@@ -19,11 +26,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.probe import (QT, SLAB, probe2_tiles, probe_insert_tiles,
-                                 probe_lookup_tiles)
+from repro.kernels.probe import (QT, SLAB, _tc_rowslab, extract_tiles,
+                                 probe2_tiles, probe_insert_tiles,
+                                 probe_lookup_tiles, tc_insert_tiles,
+                                 tc_lookup_tiles)
 
 I32 = jnp.int32
-LIVE = 1
+LIVE, TOMB, MIGRATED = 1, 2, 3
 
 
 def _pad_to(x: jax.Array, n: int, fill=0):
@@ -81,7 +90,7 @@ def probe_lookup(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
     tiles = qpad // QT
     slab_base = _tile_base(h0s, tiles, tk.shape[0], already_sorted=True)
 
-    found_s, val_s, complete_s = probe_lookup_tiles(
+    found_s, val_s, _loc_s, complete_s = probe_lookup_tiles(
         tk, tv, ts, h0s, qks, slab_base, max_probes=max_probes,
         interpret=interpret)
 
@@ -151,7 +160,7 @@ def ordered_lookup_fused(old_tables, new_tables, hazard_key, hazard_val,
         _tile_base(h0ns, tiles, new_p[0].shape[0], already_sorted=False),
     ])
 
-    found_s, val_s, complete_s = probe2_tiles(
+    found_s, val_s, complete_s, *_write_outs = probe2_tiles(
         old_p, new_p, hazard_key, hazard_val, hazard_live.astype(I32),
         h0os, h0ns, qks, slab2, max_probes=max_probes, interpret=interpret)
 
@@ -236,3 +245,312 @@ def probe_insert(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
 
     ok = jnp.zeros((q,), jnp.bool_).at[order].set(ok_s[:q])
     return tkey2, tval2, tstate2, ok
+
+
+@partial(jax.jit, static_argnames=("max_probes", "interpret"))
+def probe_delete(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
+                 h0: jax.Array, keys: jax.Array, mask: jax.Array, *,
+                 max_probes: int = 64, interpret: bool = True):
+    """Batched linear-probe DELETE: the location-emitting lookup kernel +
+    ONE tombstone scatter (no second probe pass).
+
+    Caller contract: ``mask`` is winner-filtered (at most one True per
+    distinct key; use ``buckets.batch_winners``), so distinct masked keys
+    occupy distinct slots and the scatter cannot conflict.  Queries whose
+    probe window escapes the resident slab fall back to the jnp oracle
+    (gated — free when nothing escapes).
+
+    Returns (tstate', ok[Q]).
+    """
+    c = tkey.shape[0]
+    q = keys.shape[0]
+    tk, tv, ts = _pad_table((tkey, tval, tstate), c, max_probes)
+
+    order = jnp.argsort(h0)
+    qpad = -(-q // QT) * QT
+    h0s, qks = _sort_pad_queries(order, qpad, h0, keys)
+    qms = _pad_to(mask[order], qpad, fill=False)
+    tiles = qpad // QT
+    slab_base = _tile_base(h0s, tiles, tk.shape[0], already_sorted=True)
+
+    found_s, _val_s, loc_s, complete_s = probe_lookup_tiles(
+        tk, tv, ts, h0s, qks, slab_base, max_probes=max_probes,
+        interpret=interpret)
+
+    # loc is in padded coordinates within [h0, h0 + max_probes); % C maps the
+    # wrapped region back onto the physical table
+    ok_s = qms & found_s
+    tstate2 = tstate.at[jnp.where(ok_s, loc_s % c, c)].set(TOMB, mode="drop")
+
+    need = qms & ~complete_s
+
+    def fallback(op):
+        s, ok = op
+        fb_s, fb_ok = ref.probe_delete_ref(tkey, tval, s, h0s, qks, need,
+                                           max_probes)
+        return fb_s, ok | fb_ok
+
+    tstate2, ok_s = jax.lax.cond(need.any(), fallback, lambda op: op,
+                                 (tstate2, ok_s))
+
+    ok = jnp.zeros((q,), jnp.bool_).at[order].set(ok_s[:q])
+    return tstate2, ok
+
+
+@partial(jax.jit, static_argnames=("max_probes", "interpret"))
+def ordered_delete_fused(old_tables, new_tables, hazard_key, hazard_val,
+                         hazard_live, h0_old, h0_new, keys, mask, *,
+                         max_probes: int = 64, interpret: bool = True):
+    """FUSED rebuild-epoch delete (paper Alg. 5): ONE argsort + ONE
+    pallas_call (the probe2 kernel's location outputs) resolve the ordered
+    check, then three scatters land the result — tombstone the old-table
+    slot, or clear the hazard live bit (LOGICALLY_REMOVED on an in-flight
+    entry; landing drops it), or tombstone the new-table slot.
+
+    Caller contract: ``mask`` is winner-filtered.  Returns
+    (old_state', new_state', hazard_live', ok[Q]).
+    """
+    c_old = old_tables[0].shape[0]
+    c_new = new_tables[0].shape[0]
+    ch = hazard_key.shape[0]
+    q = keys.shape[0]
+    old_p = _pad_table(old_tables, c_old, max_probes)
+    new_p = _pad_table(new_tables, c_new, max_probes)
+
+    order = jnp.argsort(h0_old)
+    qpad = -(-q // QT) * QT
+    h0os, h0ns, qks = _sort_pad_queries(order, qpad, h0_old, h0_new, keys)
+    qms = _pad_to(mask[order], qpad, fill=False)
+    tiles = qpad // QT
+    slab2 = jnp.stack([
+        _tile_base(h0os, tiles, old_p[0].shape[0], already_sorted=True),
+        _tile_base(h0ns, tiles, new_p[0].shape[0], already_sorted=False),
+    ])
+
+    (_found_s, _val_s, complete_s, fold_s, locold_s, hzidx_s,
+     locnew_s) = probe2_tiles(
+        old_p, new_p, hazard_key, hazard_val, hazard_live.astype(I32),
+        h0os, h0ns, qks, slab2, max_probes=max_probes, interpret=interpret)
+
+    # ordered landing: old hit > hazard hit > new hit (at most one fires)
+    f_hz = hzidx_s >= 0
+    ok_old = qms & fold_s
+    ok_hz = qms & complete_s & ~fold_s & f_hz
+    ok_new = qms & complete_s & ~fold_s & ~f_hz & (locnew_s >= 0)
+
+    old_state = old_tables[2].at[
+        jnp.where(ok_old, locold_s % c_old, c_old)].set(TOMB, mode="drop")
+    new_state = new_tables[2].at[
+        jnp.where(ok_new, locnew_s % c_new, c_new)].set(TOMB, mode="drop")
+    kill = jnp.zeros_like(hazard_live).at[
+        jnp.where(ok_hz, hzidx_s, ch)].set(True, mode="drop")
+    hz_live = hazard_live & ~kill
+    ok_s = ok_old | ok_hz | ok_new
+
+    need = qms & ~complete_s
+
+    def fallback(op):
+        os_, ns_, hl_, ok = op
+        fb_os, ok_o = ref.probe_delete_ref(old_tables[0], old_tables[1],
+                                           os_, h0os, qks, need, max_probes)
+        pend = need & ~ok_o
+        eq = (qks[:, None] == hazard_key[None, :]) & hl_[None, :]
+        hz_hit = eq.any(-1) & pend
+        kill2 = jnp.zeros_like(hl_).at[
+            jnp.where(hz_hit, jnp.argmax(eq, axis=-1), ch)].set(
+            True, mode="drop")
+        fb_ns, ok_n = ref.probe_delete_ref(new_tables[0], new_tables[1],
+                                           ns_, h0ns, qks, pend & ~hz_hit,
+                                           max_probes)
+        return fb_os, fb_ns, hl_ & ~kill2, ok | ok_o | hz_hit | ok_n
+
+    old_state, new_state, hz_live, ok_s = jax.lax.cond(
+        need.any(), fallback, lambda op: op,
+        (old_state, new_state, hz_live, ok_s))
+
+    ok = jnp.zeros((q,), jnp.bool_).at[order].set(ok_s[:q])
+    return old_state, new_state, hz_live, ok
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def extract_chunk_fused(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
+                        cursor: jax.Array, *, chunk: int,
+                        interpret: bool = True):
+    """Rebuild chunk scan via the extract kernel: ONE pallas_call reads the
+    slab window at ``cursor`` and compacts the live entries on-device; ONE
+    scatter marks them MIGRATED.  Requires ``chunk <= SLAB`` (the caller
+    gates; dhash chunks default to 256).
+
+    Returns (tstate', hkeys[chunk], hvals[chunk], hlive[chunk] bool,
+    new_cursor) — identical set contents to the jnp scan, with the hazard
+    entries compacted to the front.
+    """
+    assert chunk <= SLAB, f"chunk {chunk} exceeds slab window {SLAB}"
+    c = tkey.shape[0]
+    cpad = -(-c // SLAB) * SLAB + SLAB
+    tk, tv, ts = (_pad_to(a, cpad) for a in (tkey, tval, tstate))
+    block = jnp.minimum(cursor // SLAB, cpad // SLAB - 2).astype(I32)
+
+    hk, hv, hl, mig = extract_tiles(tk, tv, ts, block, cursor, chunk=chunk,
+                                    capacity=c, interpret=interpret)
+
+    pos = cursor + jnp.arange(chunk, dtype=I32)
+    tstate2 = tstate.at[jnp.where(mig != 0, pos, c)].set(
+        MIGRATED, mode="drop")
+    new_cursor = jnp.minimum(cursor + chunk, c).astype(I32)
+    return tstate2, hk, hv, hl != 0, new_cursor
+
+
+# ---------------------------------------------------------------------------
+# twochoice: both row choices expand into one sorted entry batch
+# ---------------------------------------------------------------------------
+
+def _tc_pad_rows(arrays, b: int, slab_r: int):
+    """Row-pad [B, W] tables to a SLAB_R multiple plus one spare block
+    (pad rows are EMPTY, so they can never satisfy a lookup or a claim)."""
+    bpad = -(-b // slab_r) * slab_r + slab_r
+    return tuple(jnp.pad(a, ((0, bpad - b), (0, 0))) for a in arrays)
+
+
+def _tc_expand_sort(rows_a, rows_b, bpad: int, slab_r: int, *arrays):
+    """Expand per-query arrays into the [2Q] entry batch (a-rows first, then
+    b-rows), apply the ONE shared row-index sort + edge pad, and derive the
+    per-tile row-block map.  Returns (order, epad, rows_sorted,
+    sorted_arrays, slab_base) — the lookup and insert paths share this so
+    their slab math can never diverge."""
+    rows = jnp.concatenate([rows_a, rows_b])
+    dup = [jnp.concatenate([a, a]) for a in arrays]
+    e = rows.shape[0]
+    order = jnp.argsort(rows)
+    epad = -(-e // QT) * QT
+    rs, *sorted_arrays = _sort_pad_queries(order, epad, rows, *dup)
+    tiles = epad // QT
+    base = rs.reshape(tiles, QT)[:, 0] // slab_r
+    slab_base = jnp.minimum(base.astype(I32), bpad // slab_r - 2)
+    return order, epad, rs, sorted_arrays, slab_base
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def twochoice_lookup(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
+                     rows_a: jax.Array, rows_b: jax.Array, qkey: jax.Array,
+                     *, interpret: bool = True):
+    """Fused twochoice lookup: the 2Q entry expansion (each query's two row
+    choices), ONE argsort keyed on the row index, ONE pallas_call of the
+    W-wide row-gather kernel, then a per-query recombine (a-row priority —
+    the same tie-break as ``buckets.twochoice_lookup``).
+
+    Returns (found[Q], val[Q], loc[Q] flat slot index or -1) — ``loc`` is
+    reused by ``twochoice_delete`` so deleting never probes twice.
+    """
+    b, w = tkey.shape
+    q = qkey.shape[0]
+    e = 2 * q
+    slab_r = _tc_rowslab(w)
+    tk, tv, ts = _tc_pad_rows((tkey, tval, tstate), b, slab_r)
+    order, epad, rs, (qks,), slab_base = _tc_expand_sort(
+        rows_a, rows_b, tk.shape[0], slab_r, qkey)
+
+    found_s, val_s, loc_s, complete_s = tc_lookup_tiles(
+        tk, tv, ts, rs, qks, slab_base, interpret=interpret)
+
+    need = ~complete_s
+
+    def fallback(fvl):
+        f0, v0, l0 = fvl
+        fb_f, fb_v, fb_l = ref.tc_row_lookup_ref(tkey, tval, tstate, rs, qks)
+        return (jnp.where(need, fb_f, f0), jnp.where(need, fb_v, v0),
+                jnp.where(need, fb_l, l0))
+
+    found_s, val_s, loc_s = jax.lax.cond(need.any(), fallback, lambda x: x,
+                                         (found_s, val_s, loc_s))
+
+    fe = jnp.zeros((e,), jnp.bool_).at[order].set(found_s[:e])
+    ve = jnp.zeros((e,), I32).at[order].set(val_s[:e])
+    le = jnp.full((e,), -1, I32).at[order].set(loc_s[:e])
+    f_a, f_b = fe[:q], fe[q:]
+    found = f_a | f_b
+    val = jnp.where(f_a, ve[:q], ve[q:])
+    loc = jnp.where(f_a, le[:q], jnp.where(f_b, le[q:], -1))
+    return found, val, loc
+
+
+@partial(jax.jit, static_argnames=("max_rounds", "interpret"))
+def twochoice_insert(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
+                     rows_a: jax.Array, rows_b: jax.Array, keys: jax.Array,
+                     vals: jax.Array, mask: jax.Array, *,
+                     max_rounds: int = 8, interpret: bool = True):
+    """Batched twochoice INSERT via the claim kernel + one scatter.
+
+    Caller contract: ``mask`` is winner-filtered.  Set semantics: ok=False
+    if the key is LIVE in either row or both rows are full.  The kernel
+    claims per row-entry; here the a-claim shadows the b-claim of the same
+    query, cross-tile slot collisions keep the first claimant (batch order),
+    and everything else — escaped windows, lost claims, locally-full rows —
+    re-runs on the jnp oracle (gated).
+
+    Returns (tkey', tval', tstate', ok[Q]).
+    """
+    b, w = tkey.shape
+    q = keys.shape[0]
+    e = 2 * q
+    nslots = b * w
+    slab_r = _tc_rowslab(w)
+    tk, ts = _tc_pad_rows((tkey, tstate), b, slab_r)
+    order, epad, rs, (qks,), slab_base = _tc_expand_sort(
+        rows_a, rows_b, tk.shape[0], slab_r, keys)
+    qms = _pad_to(jnp.concatenate([mask, mask])[order], epad, fill=False)
+
+    present_s, claim_s, complete_s = tc_insert_tiles(
+        tk, ts, rs, qks, qms.astype(I32), slab_base, interpret=interpret)
+
+    pe = jnp.zeros((e,), jnp.bool_).at[order].set(present_s[:e])
+    ce = jnp.full((e,), -1, I32).at[order].set(claim_s[:e])
+    cpl = jnp.zeros((e,), jnp.bool_).at[order].set(complete_s[:e])
+    present = pe[:q] | pe[q:]
+    compl2 = cpl[:q] & cpl[q:]     # presence known for BOTH rows
+    c_a, c_b = ce[:q], ce[q:]
+    cand = jnp.where(compl2 & ~present,
+                     jnp.where(c_a >= 0, c_a, c_b), -1)
+
+    claimed = cand >= 0
+    phys = jnp.where(claimed, cand, nslots)
+    idx = jnp.arange(q, dtype=I32)
+    first = jnp.full((nslots,), q, I32).at[phys].min(idx, mode="drop")
+    keep = claimed & (first[jnp.clip(phys, 0, nslots - 1)] == idx)
+
+    wp = jnp.where(keep, phys, nslots)
+    tkey2 = tkey.reshape(-1).at[wp].set(keys, mode="drop").reshape(b, w)
+    tval2 = tval.reshape(-1).at[wp].set(vals, mode="drop").reshape(b, w)
+    tstate2 = tstate.reshape(-1).at[wp].set(LIVE, mode="drop").reshape(b, w)
+    ok = keep
+
+    need = mask & ~keep & ~present
+
+    def fallback(op):
+        k, v, s, ok0 = op
+        fb_k, fb_v, fb_s, fb_ok = ref.tc_insert_ref(
+            k, v, s, rows_a, rows_b, keys, vals, need, max_rounds)
+        return fb_k, fb_v, fb_s, ok0 | fb_ok
+
+    tkey2, tval2, tstate2, ok = jax.lax.cond(
+        need.any(), fallback, lambda op: op, (tkey2, tval2, tstate2, ok))
+    return tkey2, tval2, tstate2, ok
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def twochoice_delete(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
+                     rows_a: jax.Array, rows_b: jax.Array, keys: jax.Array,
+                     mask: jax.Array, *, interpret: bool = True):
+    """Batched twochoice DELETE: reuses the fused lookup's location output —
+    one kernel pass, one tombstone scatter, never a second probe (the jnp
+    ``twochoice_delete`` re-gathers both rows to find the slot again).
+
+    Caller contract: ``mask`` is winner-filtered.  Returns (tstate', ok[Q]).
+    """
+    b, w = tkey.shape
+    found, _val, loc = twochoice_lookup(tkey, tval, tstate, rows_a, rows_b,
+                                        keys, interpret=interpret)
+    ok = mask & found
+    tstate2 = tstate.reshape(-1).at[jnp.where(ok, loc, b * w)].set(
+        TOMB, mode="drop").reshape(b, w)
+    return tstate2, ok

@@ -15,9 +15,12 @@ way (HashGraph-style sorted/coalesced probing):
      ``max_probes`` rounds is a vectorized compare of the query tile against
      dynamically-indexed slab lanes.
 
-Three kernels share that skeleton:
+Six kernels share that skeleton:
 
 * ``_probe_kernel``        — single-table lookup (steady state, no rebuild).
+  Emits per-query slot LOCATIONS alongside found/val, so the delete path
+  (``ops.probe_delete``) tombstones with one scatter — lookup and delete are
+  the same single pass.
 * ``_probe2_kernel``       — the fused **rebuild-epoch** lookup: ONE pass
   emits the paper's Lemma-4.1-ordered result (old table -> hazard buffer ->
   new table).  One shared query sort keyed on ``h0_old`` drives BOTH tables'
@@ -25,13 +28,33 @@ Three kernels share that skeleton:
   (row 0 = old-table slab, row 1 = new-table slab, the latter anchored at the
   tile's min ``h0_new``), and the hazard buffer is broadcast whole into VMEM
   for a dense tile-vs-chunk compare.  This replaces the unfused path's three
-  sort+pallas passes with one of each.
+  sort+pallas passes with one of each.  The same pass also emits the ordered
+  DELETE outputs — old hit flag + slot, hazard index, new slot — so
+  ``ops.ordered_delete_fused`` lands old-tombstone / hazard-kill /
+  new-tombstone without a second probe.
 * ``_probe_insert_kernel`` — batched linear-probe INSERT (claim-first-empty):
   phase 1 re-proves absence against the original slab states, phase 2 runs
   the claim loop on a local VMEM copy of the slab states (lowest in-tile
   query index wins a contested slot; claimed slots flip LIVE locally so later
   rounds skip them).  The kernel emits *claim positions*; ops.py applies them
-  with one scatter and resolves cross-tile collisions there.
+  with one scatter and resolves cross-tile collisions there.  The rebuild's
+  hazard LANDING is this same kernel (dhash routes it through the fused
+  insert), so the whole epoch stays on-device.
+* ``_extract_kernel``      — the rebuild chunk scan: reads the 2-block slab
+  window holding ``cursor``, COMPACTS the live entries of the chunk to the
+  front of the hazard outputs on-device (cumsum rank + local scatter), and
+  emits the position-aligned MIGRATED mask that ops.py lands with one
+  scatter.  Contract: ``chunk <= SLAB``; slots at/past the unpadded capacity
+  never migrate; no sort needed (the window is already contiguous).
+* ``_tc_lookup_kernel`` / ``_tc_insert_kernel`` — the ``twochoice`` backend
+  on the same treatment: each query's TWO row choices expand into two
+  entries of ONE batch sorted by row index; row blocks are ``[SLAB_R, W]``
+  with ``SLAB_R * W = SLAB`` words.  Lookup gathers each entry's resident
+  row and compares all W lanes at once (emitting flat slot locations the
+  fused twochoice delete reuses — never a second probe); insert runs the
+  same local-claim protocol as the linear kernel, one lane per round, and
+  ops.py drops b-claims shadowed by a-claims before resolving cross-tile
+  collisions.  ``chain`` stays the documented jnp reference backend.
 
 Exactness contract (all kernels): a query whose probe window escapes its
 2-block slab (hash skew), or whose new-table window misses the resident new
@@ -68,8 +91,10 @@ SLAB = 4096   # table words per block (2 consecutive blocks resident)
 def _window_probe(base_blk, h0, qk, k0, k1, v0, v1, s0, s1, max_probes: int):
     """Shared probe loop over one 2-block VMEM window.
 
-    Returns (found, val, complete); found/val are gated to False/0 for
-    incomplete queries (probe window escapes the resident window).
+    Returns (found, val, loc, complete); found/val/loc are gated to
+    False/0/-1 for incomplete queries (probe window escapes the resident
+    window).  ``loc`` is the padded-table coordinate of the LIVE hit (the
+    slot the delete path tombstones), -1 when the key was not found.
     """
     base = base_blk * SLAB
     off = h0 - base                               # [QT] offset into 2*SLAB
@@ -82,7 +107,7 @@ def _window_probe(base_blk, h0, qk, k0, k1, v0, v1, s0, s1, max_probes: int):
     safe_off = jnp.clip(off, 0, 2 * SLAB - max_probes)
 
     def body(p, carry):
-        active, found, val = carry
+        active, found, val, loc = carry
         idx = safe_off + p
         k = jnp.take(keys, idx, axis=0)
         v = jnp.take(vals, idx, axis=0)
@@ -90,27 +115,31 @@ def _window_probe(base_blk, h0, qk, k0, k1, v0, v1, s0, s1, max_probes: int):
         hit = active & (s == LIVE) & (k == qk)
         stop = active & (s == EMPTY)
         val = jnp.where(hit, v, val)
+        loc = jnp.where(hit, base + idx, loc)
         found = found | hit
         active = active & ~hit & ~stop
-        return active, found, val
+        return active, found, val, loc
 
     q = h0.shape[0]
-    init = (jnp.ones((q,), bool), jnp.zeros((q,), bool), jnp.zeros((q,), I32))
-    _, found, val = jax.lax.fori_loop(0, max_probes, body, init)
-    return found & complete, jnp.where(complete, val, 0), complete
+    init = (jnp.ones((q,), bool), jnp.zeros((q,), bool),
+            jnp.zeros((q,), I32), jnp.full((q,), -1, I32))
+    _, found, val, loc = jax.lax.fori_loop(0, max_probes, body, init)
+    return (found & complete, jnp.where(complete, val, 0),
+            jnp.where(complete, loc, -1), complete)
 
 
 def _probe_kernel(slab_ref,              # scalar-prefetch: [tiles] block index
                   h0_ref, qk_ref,        # [QT] query start slots / keys
                   tk0, tk1, tv0, tv1, ts0, ts1,   # [SLAB] table key/val/state
-                  found_ref, val_ref, complete_ref,
+                  found_ref, val_ref, loc_ref, complete_ref,
                   *, max_probes: int):
     i = pl.program_id(0)
-    found, val, complete = _window_probe(
+    found, val, loc, complete = _window_probe(
         slab_ref[i], h0_ref[...], qk_ref[...],
         tk0, tk1, tv0, tv1, ts0, ts1, max_probes)
     found_ref[...] = found
     val_ref[...] = val
+    loc_ref[...] = loc
     complete_ref[...] = complete
 
 
@@ -120,24 +149,32 @@ def _probe2_kernel(slab2_ref,            # scalar-prefetch: [2, tiles]
                    nk0, nk1, nv0, nv1, ns0, ns1,       # new table blocks
                    hk_ref, hv_ref, hl_ref,             # [CH] hazard buffer
                    found_ref, val_ref, complete_ref,
+                   fold_ref, locold_ref, hzidx_ref, locnew_ref,
                    *, max_probes: int):
     """Fused rebuild-epoch lookup: Lemma 4.1 order old -> hazard -> new in a
     single pass.  ``complete`` is refined: a query resolved by the old table
     or the hazard buffer is complete even if its new-table window escaped —
-    the answer is already determined by the ordered-check priority."""
+    the answer is already determined by the ordered-check priority.
+
+    Beyond found/val the kernel emits the WRITE-PATH outputs the ordered
+    delete needs to tombstone in the same pass: the old-table hit flag and
+    slot location, the hazard-buffer index of a live key match (-1 if none),
+    and the new-table slot location (-1 when absent or the new-table window
+    escaped)."""
     i = pl.program_id(0)
     qk = qk_ref[...]
-    f_old, v_old, c_old = _window_probe(
+    f_old, v_old, l_old, c_old = _window_probe(
         slab2_ref[0, i], h0o_ref[...], qk,
         ok0, ok1, ov0, ov1, os0, os1, max_probes)
-    f_new, v_new, c_new = _window_probe(
+    f_new, v_new, l_new, c_new = _window_probe(
         slab2_ref[1, i], h0n_ref[...], qk,
         nk0, nk1, nv0, nv1, ns0, ns1, max_probes)
 
     # hazard buffer: dense [QT, CH] compare, whole chunk resident in VMEM
     eq = (qk[:, None] == hk_ref[...][None, :]) & (hl_ref[...][None, :] != 0)
     f_hz = eq.any(-1)
-    v_hz = jnp.take(hv_ref[...], jnp.argmax(eq, axis=-1), axis=0)
+    hz_i = jnp.argmax(eq, axis=-1)
+    v_hz = jnp.take(hv_ref[...], hz_i, axis=0)
 
     found = f_old | f_hz | f_new
     val = jnp.where(f_old, v_old, jnp.where(f_hz, v_hz, v_new))
@@ -145,6 +182,10 @@ def _probe2_kernel(slab2_ref,            # scalar-prefetch: [2, tiles]
     found_ref[...] = found & complete
     val_ref[...] = jnp.where(complete, val, 0)
     complete_ref[...] = complete
+    fold_ref[...] = f_old
+    locold_ref[...] = l_old
+    hzidx_ref[...] = jnp.where(f_hz, hz_i.astype(I32), -1)
+    locnew_ref[...] = l_new   # already -1 when absent or window escaped
 
 
 def _probe_insert_kernel(slab_ref,           # scalar-prefetch: [tiles]
@@ -222,6 +263,10 @@ def probe_lookup_tiles(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
     h0_sorted/qk_sorted: [Q] sorted by h0, Q a multiple of QT.
     slab_base: [Q/QT] block index (h0_min of the tile // SLAB), clipped so
     block+1 stays in range.
+
+    Returns (found[Q], val[Q], loc[Q], complete[Q]); ``loc`` is the hit's
+    padded-table coordinate (-1 if absent) — the delete path tombstones
+    ``loc % C`` with one scatter, no second probe pass.
     """
     q = h0_sorted.shape[0]
     assert q % QT == 0 and tkey.shape[0] % SLAB == 0
@@ -244,10 +289,12 @@ def probe_lookup_tiles(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
             pl.BlockSpec((QT,), lambda i, s: (i,)),
             pl.BlockSpec((QT,), lambda i, s: (i,)),
             pl.BlockSpec((QT,), lambda i, s: (i,)),
+            pl.BlockSpec((QT,), lambda i, s: (i,)),
         ],
     )
     out_shape = [
         jax.ShapeDtypeStruct((q,), jnp.bool_),
+        jax.ShapeDtypeStruct((q,), I32),
         jax.ShapeDtypeStruct((q,), I32),
         jax.ShapeDtypeStruct((q,), jnp.bool_),
     ]
@@ -271,6 +318,9 @@ def probe2_tiles(old_padded, new_padded,
     ``probe_lookup_tiles`` (each table padded independently).
     slab2: [2, tiles] i32 — row 0 old-table block, row 1 new-table block.
     hazard_live_i32: hazard liveness as i32 (pallas-friendly).
+
+    Returns (found, val, complete, f_old, loc_old, hz_idx, loc_new); the
+    last four are the ordered-delete outputs (see ``_probe2_kernel``).
     """
     q = qk_sorted.shape[0]
     (okk, ovv, oss), (nkk, nvv, nss) = old_padded, new_padded
@@ -292,12 +342,16 @@ def probe2_tiles(old_padded, new_padded,
                   oblk0, oblk1, oblk0, oblk1, oblk0, oblk1,
                   nblk0, nblk1, nblk0, nblk1, nblk0, nblk1,
                   hspec, hspec, hspec],
-        out_specs=[qspec, qspec, qspec],
+        out_specs=[qspec] * 7,
     )
     out_shape = [
-        jax.ShapeDtypeStruct((q,), jnp.bool_),
-        jax.ShapeDtypeStruct((q,), I32),
-        jax.ShapeDtypeStruct((q,), jnp.bool_),
+        jax.ShapeDtypeStruct((q,), jnp.bool_),    # found
+        jax.ShapeDtypeStruct((q,), I32),          # val
+        jax.ShapeDtypeStruct((q,), jnp.bool_),    # complete
+        jax.ShapeDtypeStruct((q,), jnp.bool_),    # f_old
+        jax.ShapeDtypeStruct((q,), I32),          # loc_old (padded coords)
+        jax.ShapeDtypeStruct((q,), I32),          # hazard index (-1 = none)
+        jax.ShapeDtypeStruct((q,), I32),          # loc_new (padded coords)
     ]
     kernel = functools.partial(_probe2_kernel, max_probes=max_probes)
     return pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
@@ -339,4 +393,263 @@ def probe_insert_tiles(tkey: jax.Array, tstate: jax.Array,
     return pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
                           interpret=interpret)(
         slab_base, h0_sorted, qk_sorted, qm_sorted_i32,
+        tkey, tkey, tstate, tstate)
+
+
+# ---------------------------------------------------------------------------
+# rebuild chunk extraction: slab window scan + on-device compaction
+# ---------------------------------------------------------------------------
+
+def _extract_kernel(info_ref,            # scalar-prefetch: [2] (block, cursor)
+                    tk0, tk1, tv0, tv1, ts0, ts1,   # [SLAB] key/val/state
+                    hk_ref, hv_ref, hl_ref, mig_ref,
+                    *, chunk: int, capacity: int):
+    """Rebuild chunk scan: read the ``chunk`` slots at ``cursor`` from the
+    resident 2-block slab window, COMPACT the live entries to the front of
+    the hazard outputs on-device (cumsum ranking + one local scatter), and
+    emit the position-aligned MIGRATED mask ``mig`` that ops.py applies to
+    the table state with a single scatter.
+
+    Contract: ``chunk <= SLAB`` so the window always fits the two resident
+    blocks, and ``capacity`` is the UNPADDED table length (slots at or past
+    it never migrate).  Replaces the jnp gather scan in ``rebuild_extract``:
+    one pallas_call + one scatter instead of three table gathers + scatter.
+    """
+    base = info_ref[0] * SLAB
+    cur = info_ref[1]
+    keys = jnp.concatenate([tk0[...], tk1[...]])
+    vals = jnp.concatenate([tv0[...], tv1[...]])
+    stat = jnp.concatenate([ts0[...], ts1[...]])
+
+    lane = jax.lax.broadcasted_iota(I32, (chunk,), 0)
+    off = jnp.clip(cur - base, 0, 2 * SLAB - chunk) + lane
+    pos = cur + lane                               # absolute table position
+    live = (pos < capacity) & (jnp.take(stat, off, axis=0) == LIVE)
+
+    # compact: live entry j lands at rank(j) = #live entries before it
+    rank = jnp.cumsum(live.astype(I32)) - 1
+    dest = jnp.where(live, rank, chunk)
+    hk_ref[...] = jnp.zeros((chunk,), I32).at[dest].set(
+        jnp.take(keys, off, axis=0), mode="drop")
+    hv_ref[...] = jnp.zeros((chunk,), I32).at[dest].set(
+        jnp.take(vals, off, axis=0), mode="drop")
+    hl_ref[...] = (lane < live.sum()).astype(I32)
+    mig_ref[...] = live.astype(I32)
+
+
+def extract_tiles(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
+                  block: jax.Array, cursor: jax.Array, *, chunk: int,
+                  capacity: int, interpret: bool = True):
+    """Run the extract kernel once over the slab window holding ``cursor``.
+
+    tkey/tval/tstate: padded to a SLAB multiple with one spare block (pad is
+    EMPTY, so padding never migrates).  block: scalar i32 slab block index
+    (cursor // SLAB clipped so block+1 stays in range).  Returns
+    (hkeys[chunk], hvals[chunk], hlive_i32[chunk], migrated_i32[chunk]) with
+    the hazard outputs compacted and ``migrated`` aligned to slot positions.
+    """
+    assert chunk <= SLAB and tkey.shape[0] % SLAB == 0
+    info = jnp.stack([block.astype(I32), cursor.astype(I32)])
+
+    blk0 = pl.BlockSpec((SLAB,), lambda i, s: (s[0],))
+    blk1 = pl.BlockSpec((SLAB,), lambda i, s: (s[0] + 1,))
+    cspec = pl.BlockSpec((chunk,), lambda i, s: (0,))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(1,),
+        in_specs=[blk0, blk1, blk0, blk1, blk0, blk1],
+        out_specs=[cspec, cspec, cspec, cspec],
+    )
+    out_shape = [jax.ShapeDtypeStruct((chunk,), I32)] * 4
+    kernel = functools.partial(_extract_kernel, chunk=chunk,
+                               capacity=capacity)
+    return pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
+                          interpret=interpret)(
+        info, tkey, tkey, tval, tval, tstate, tstate)
+
+
+# ---------------------------------------------------------------------------
+# twochoice: W-wide two-row gather kernels over row slabs
+# ---------------------------------------------------------------------------
+#
+# The twochoice table is [B, W]; a query touches exactly rows ha(k), hb(k).
+# The fused path expands each query into TWO row-entries (entry e < Q is the
+# a-row of query e, entry e >= Q the b-row of query e - Q), applies the SAME
+# sort + scalar-prefetch slab treatment keyed on the row index — ONE argsort
+# + ONE pallas_call cover both choices — and recombines per query after the
+# unsort.  Row blocks are [SLAB_R, W] with SLAB_R * W = SLAB words, so the
+# VMEM budget matches the linear kernels.
+
+def _tc_rowslab(width: int) -> int:
+    return max(SLAB // max(width, 1), 8)
+
+
+def _tc_lookup_kernel(slab_ref,            # scalar-prefetch: [tiles]
+                      row_ref, qk_ref,     # [QT] row index / key per entry
+                      tk0, tk1, tv0, tv1, ts0, ts1,   # [SLAB_R, W] blocks
+                      found_ref, val_ref, loc_ref, complete_ref,
+                      *, width: int):
+    """W-wide two-row gather lookup: each entry reads its single resident
+    row, compares all W lanes at once, and emits (found, val, loc) with
+    ``loc`` the flat slot index row*W + lane (-1 if absent)."""
+    i = pl.program_id(0)
+    slab_r = _tc_rowslab(width)
+    base = slab_ref[i] * slab_r
+    off = row_ref[...] - base
+    qk = qk_ref[...]
+    keys = jnp.concatenate([tk0[...], tk1[...]], axis=0)   # [2*SLAB_R, W]
+    vals = jnp.concatenate([tv0[...], tv1[...]], axis=0)
+    stat = jnp.concatenate([ts0[...], ts1[...]], axis=0)
+
+    complete = (off >= 0) & (off < 2 * slab_r)
+    safe = jnp.clip(off, 0, 2 * slab_r - 1)
+    krow = jnp.take(keys, safe, axis=0)                    # [QT, W]
+    vrow = jnp.take(vals, safe, axis=0)
+    srow = jnp.take(stat, safe, axis=0)
+
+    hit = (krow == qk[:, None]) & (srow == LIVE)
+    found = hit.any(-1) & complete
+    lane = jnp.argmax(hit, axis=-1)
+    val = jnp.take_along_axis(vrow, lane[:, None], axis=-1)[:, 0]
+    found_ref[...] = found
+    val_ref[...] = jnp.where(found, val, 0)
+    loc_ref[...] = jnp.where(found, row_ref[...] * width + lane.astype(I32),
+                             -1)
+    complete_ref[...] = complete
+
+
+def _tc_insert_kernel(slab_ref,            # scalar-prefetch: [tiles]
+                      row_ref, qk_ref, qm_ref,           # [QT] (qm: i32)
+                      tk0, tk1, ts0, ts1,                # [SLAB_R, W] blocks
+                      present_ref, claim_ref, complete_ref,
+                      *, width: int):
+    """Claim-a-lane batched twochoice insert.  Each entry (one row choice of
+    one query) re-proves absence against its row, then joins a local claim
+    loop on a VMEM copy of the resident row states: per round an entry picks
+    its row's lowest non-LIVE lane, the lowest in-tile entry index wins a
+    contested lane, and winners flip the lane LIVE locally.  Emits flat slot
+    claims (row*W + lane in TABLE coordinates; -1 = none); ops.py drops
+    shadowed b-claims, resolves cross-tile collisions, and routes conflicts
+    to the jnp fallback — exact, never wrong, occasionally partial."""
+    i = pl.program_id(0)
+    slab_r = _tc_rowslab(width)
+    base = slab_ref[i] * slab_r
+    off = row_ref[...] - base
+    qk = qk_ref[...]
+    qm = qm_ref[...] != 0
+    keys = jnp.concatenate([tk0[...], tk1[...]], axis=0)
+    stat = jnp.concatenate([ts0[...], ts1[...]], axis=0)
+
+    complete = (off >= 0) & (off < 2 * slab_r)
+    safe = jnp.clip(off, 0, 2 * slab_r - 1)
+    krow = jnp.take(keys, safe, axis=0)
+    srow = jnp.take(stat, safe, axis=0)
+    present = ((krow == qk[:, None]) & (srow == LIVE)).any(-1) & complete
+
+    qn = off.shape[0]
+    qidx = jax.lax.broadcasted_iota(I32, (qn,), 0)
+    nloc = 2 * slab_r * width
+    pending0 = qm & complete & ~present
+
+    def claim_round(r, carry):
+        st, pending, claim = carry
+        srow_now = jnp.take(st, safe, axis=0)              # [QT, W]
+        free = srow_now != LIVE
+        has = pending & free.any(-1)
+        lane = jnp.argmax(free, axis=-1)
+        flat = safe * width + lane.astype(I32)             # local coords
+        tgt = jnp.where(has, flat, nloc)
+        cl = jnp.full((nloc,), qn, I32).at[tgt].min(qidx, mode="drop")
+        won = has & (jnp.take(cl, flat, axis=0) == qidx)
+        st = st.reshape(-1).at[jnp.where(won, flat, nloc)].set(
+            LIVE, mode="drop").reshape(2 * slab_r, width)
+        claim = jnp.where(won, flat, claim)
+        return st, pending & ~won, claim
+
+    _, _, claim_loc = jax.lax.fori_loop(
+        0, width, claim_round,
+        (stat, pending0, jnp.full((qn,), -1, I32)))
+
+    present_ref[...] = present
+    claim_ref[...] = jnp.where(claim_loc >= 0,
+                               base * width + claim_loc, -1)
+    complete_ref[...] = complete
+
+
+def _tc_specs(width: int):
+    """Entry-tile and row-block BlockSpecs shared by the twochoice kernels."""
+    slab_r = _tc_rowslab(width)
+    qspec = pl.BlockSpec((QT,), lambda i, s: (i,))
+    blk0 = pl.BlockSpec((slab_r, width), lambda i, s: (s[i], 0))
+    blk1 = pl.BlockSpec((slab_r, width), lambda i, s: (s[i] + 1, 0))
+    return qspec, blk0, blk1
+
+
+def tc_lookup_tiles(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
+                    row_sorted: jax.Array, qk_sorted: jax.Array,
+                    slab_base: jax.Array, *, interpret: bool = True):
+    """Run the twochoice lookup kernel over pre-sorted, pre-tiled entries.
+
+    tkey/tval/tstate: [Bpad, W] row-padded tables (Bpad a SLAB_R multiple
+    plus one spare block, pad rows EMPTY).  row_sorted/qk_sorted: [E] entry
+    rows/keys sorted by row, E a multiple of QT.  slab_base: [E/QT] row-block
+    index.  Returns (found[E], val[E], loc[E], complete[E]).
+    """
+    e = row_sorted.shape[0]
+    width = tkey.shape[1]
+    slab_r = _tc_rowslab(width)
+    assert e % QT == 0 and tkey.shape[0] % slab_r == 0
+    tiles = e // QT
+    qspec, blk0, blk1 = _tc_specs(width)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(tiles,),
+        in_specs=[qspec, qspec, blk0, blk1, blk0, blk1, blk0, blk1],
+        out_specs=[qspec] * 4,
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((e,), jnp.bool_),
+        jax.ShapeDtypeStruct((e,), I32),
+        jax.ShapeDtypeStruct((e,), I32),
+        jax.ShapeDtypeStruct((e,), jnp.bool_),
+    ]
+    kernel = functools.partial(_tc_lookup_kernel, width=width)
+    return pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
+                          interpret=interpret)(
+        slab_base, row_sorted, qk_sorted,
+        tkey, tkey, tval, tval, tstate, tstate)
+
+
+def tc_insert_tiles(tkey: jax.Array, tstate: jax.Array,
+                    row_sorted: jax.Array, qk_sorted: jax.Array,
+                    qm_sorted_i32: jax.Array, slab_base: jax.Array, *,
+                    interpret: bool = True):
+    """Claim pass of the twochoice insert over pre-sorted, pre-tiled entries.
+
+    Returns (present[E], claim[E] flat table slot or -1, complete[E]).
+    """
+    e = row_sorted.shape[0]
+    width = tkey.shape[1]
+    slab_r = _tc_rowslab(width)
+    assert e % QT == 0 and tkey.shape[0] % slab_r == 0
+    tiles = e // QT
+    qspec, blk0, blk1 = _tc_specs(width)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(tiles,),
+        in_specs=[qspec, qspec, qspec, blk0, blk1, blk0, blk1],
+        out_specs=[qspec] * 3,
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((e,), jnp.bool_),
+        jax.ShapeDtypeStruct((e,), I32),
+        jax.ShapeDtypeStruct((e,), jnp.bool_),
+    ]
+    kernel = functools.partial(_tc_insert_kernel, width=width)
+    return pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
+                          interpret=interpret)(
+        slab_base, row_sorted, qk_sorted, qm_sorted_i32,
         tkey, tkey, tstate, tstate)

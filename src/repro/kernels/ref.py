@@ -80,3 +80,104 @@ def ordered_lookup_ref(old_t, new_t, hazard_key, hazard_val, hazard_live,
     found = f_old | f_hz | f_new
     val = jnp.where(f_old, v_old, jnp.where(f_hz, v_hz, v_new))
     return found, val
+
+
+def probe_delete_ref(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
+                     h0: jax.Array, keys: jax.Array, mask: jax.Array,
+                     max_probes: int):
+    """Linear-probe delete oracle: tombstone the LIVE slot holding each
+    masked key (probe from h0, skip TOMB/MIGRATED, stop at EMPTY).
+
+    Caller contract: ``mask`` is winner-filtered (at most one True per
+    distinct key).  Returns (tstate', ok[Q]).
+    """
+    c = tkey.shape[0]
+    q = keys.shape[0]
+
+    def body(i, carry):
+        active, found, loc = carry
+        pos = (h0 + i) % c
+        st = tstate[pos]
+        hit = active & (st == LIVE) & (tkey[pos] == keys)
+        stop = active & (st == EMPTY)
+        loc = jnp.where(hit, pos, loc)
+        found = found | hit
+        active = active & ~hit & ~stop
+        return active, found, loc
+
+    init = (jnp.ones((q,), bool), jnp.zeros((q,), bool),
+            jnp.full((q,), -1, I32))
+    _, found, loc = jax.lax.fori_loop(0, max_probes, body, init)
+    ok = mask & found
+    tstate = tstate.at[jnp.where(ok, loc, c)].set(TOMB, mode="drop")
+    return tstate, ok
+
+
+def tc_row_lookup_ref(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
+                      rows: jax.Array, qkey: jax.Array):
+    """Single-row twochoice lookup oracle: gather row ``rows[e]`` and match
+    all W lanes.  Returns (found[E], val[E], loc[E] flat slot or -1)."""
+    w = tkey.shape[1]
+    krow, vrow, srow = tkey[rows], tval[rows], tstate[rows]   # [E, W]
+    hit = (krow == qkey[:, None]) & (srow == LIVE)
+    found = hit.any(-1)
+    lane = jnp.argmax(hit, axis=-1)
+    val = jnp.take_along_axis(vrow, lane[:, None], axis=-1)[:, 0]
+    return (found, jnp.where(found, val, 0),
+            jnp.where(found, rows * w + lane.astype(I32), -1))
+
+
+def tc_insert_ref(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
+                  rows_a: jax.Array, rows_b: jax.Array, keys: jax.Array,
+                  vals: jax.Array, mask: jax.Array, max_rounds: int):
+    """Twochoice insert oracle on raw [B, W] arrays: alternate the two row
+    choices per round, claim the row's first non-LIVE lane, lowest batch
+    index wins a contested lane (same linearization as
+    ``buckets.twochoice_insert``).
+
+    Caller contract: ``mask`` is winner-filtered.  Returns
+    (tkey', tval', tstate', ok[Q]).
+    """
+    b, w = tkey.shape
+    q = keys.shape[0]
+    fa, _, _ = tc_row_lookup_ref(tkey, tval, tstate, rows_a, keys)
+    fb, _, _ = tc_row_lookup_ref(tkey, tval, tstate, rows_b, keys)
+    pending0 = mask & ~(fa | fb)
+    idx = jnp.arange(q, dtype=I32)
+    nslots = b * w
+
+    def body(r, carry):
+        key, val, state, pending, done = carry
+        bkt = jnp.where(r % 2 == 0, rows_a, rows_b)
+        row_free = state[bkt] != LIVE                       # [Q, W]
+        has_free = pending & row_free.any(-1)
+        lane = jnp.argmax(row_free, axis=-1)
+        flat = bkt * w + lane.astype(I32)
+        wflat = jnp.where(has_free, flat, nslots)
+        claim = jnp.full((nslots,), q, I32).at[wflat].min(idx, mode="drop")
+        won = has_free & (claim[flat % nslots] == idx) & (wflat < nslots)
+        wp = jnp.where(won, flat, nslots)
+        key = key.reshape(-1).at[wp].set(keys, mode="drop").reshape(b, w)
+        val = val.reshape(-1).at[wp].set(vals, mode="drop").reshape(b, w)
+        state = state.reshape(-1).at[wp].set(LIVE, mode="drop").reshape(b, w)
+        return key, val, state, pending & ~won, done | won
+
+    init = (tkey, tval, tstate, pending0, jnp.zeros((q,), bool))
+    tkey, tval, tstate, _, done = jax.lax.fori_loop(0, max_rounds, body, init)
+    return tkey, tval, tstate, done
+
+
+def tc_delete_ref(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
+                  rows_a: jax.Array, rows_b: jax.Array, keys: jax.Array,
+                  mask: jax.Array):
+    """Twochoice delete oracle: tombstone the LIVE lane holding each masked
+    key in either row.  Caller contract: mask winner-filtered.  Returns
+    (tstate', ok[Q])."""
+    b, w = tkey.shape
+    fa, _, la = tc_row_lookup_ref(tkey, tval, tstate, rows_a, keys)
+    fb, _, lb = tc_row_lookup_ref(tkey, tval, tstate, rows_b, keys)
+    ok = mask & (fa | fb)
+    loc = jnp.where(fa, la, lb)
+    tstate = tstate.reshape(-1).at[jnp.where(ok, loc, b * w)].set(
+        TOMB, mode="drop").reshape(b, w)
+    return tstate, ok

@@ -26,7 +26,6 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
 from repro.data.pipeline import DataConfig, synth_batch, synth_embeds

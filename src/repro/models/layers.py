@@ -2,7 +2,6 @@
 embeddings, and memory-safe chunked cross-entropy."""
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

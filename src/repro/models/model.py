@@ -1,7 +1,6 @@
 """Loss and logits heads on top of the transformer assembly."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig

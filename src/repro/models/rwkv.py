@@ -88,7 +88,8 @@ def rwkv6_time_mix(x: jax.Array, p: dict, *, n_heads: int, head_size: int,
                    chunk: int = 0, tp_state: bool = False):
     b, s, d = x.shape
     xs = _token_shift(x, prev_token)
-    mix = lambda m: x + (xs - x) * m.astype(x.dtype)      # lerp toward shifted
+    def mix(m):   # lerp toward shifted
+        return x + (xs - x) * m.astype(x.dtype)
     xr, xk, xv, xg, xw = (mix(p[f"mu_{n}"]) for n in ("r", "k", "v", "g", "w"))
     if "w_rkvg" in p:
         # §Perf rwkv6 fused projections: ONE matmul (stacked [4,d,d] weight,
@@ -149,7 +150,8 @@ def rwkv6_channel_mix(x: jax.Array, p: dict, prev_token=None):
 def rwkv6_init(key, d_model: int, d_ff: int, *, n_heads: int, head_size: int,
                lora_r: int = 64, dtype=jnp.bfloat16, fused_rkvg: bool = False) -> dict:
     ks = jax.random.split(key, 10)
-    init = lambda k, sh, s: (jax.random.normal(k, sh, F32) * s).astype(dtype)
+    def init(k, sh, s):
+        return (jax.random.normal(k, sh, F32) * s).astype(dtype)
     d = d_model
     p = {f"mu_{n}": jnp.full((d,), 0.5, F32) for n in ("r", "k", "v", "g", "w")}
     p |= {"cmu_k": jnp.full((d,), 0.5, F32), "cmu_r": jnp.full((d,), 0.5, F32)}

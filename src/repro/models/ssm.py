@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.layers import rms_norm
 
@@ -130,7 +129,8 @@ def mamba2_init(key, d_model: int, *, d_inner: int, n_heads: int,
     convdim = 2 * d_inner + 2 * d_state  # x + B + C widths: d_inner + 2*ds... see below
     convdim = d_inner + 2 * d_state
     proj_out = 2 * d_inner + 2 * d_state + n_heads
-    init = lambda k, sh, s: (jax.random.normal(k, sh, F32) * s).astype(dtype)
+    def init(k, sh, s):
+        return (jax.random.normal(k, sh, F32) * s).astype(dtype)
     return {
         "in_proj": init(ks[0], (d_model, proj_out), d_model ** -0.5),
         "conv_w": init(ks[1], (conv_k, convdim), conv_k ** -0.5),

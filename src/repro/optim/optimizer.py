@@ -10,8 +10,7 @@ bf16; quality impact is regression-tested in tests/test_optim.py.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -48,7 +47,8 @@ def lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
 
 
 def init_opt_state(params: Any, cfg: OptConfig) -> dict:
-    zeros = lambda p: jnp.zeros(p.shape, F32)
+    def zeros(p):
+        return jnp.zeros(p.shape, F32)
     state = {
         "m": jax.tree_util.tree_map(zeros, params),
         "v": jax.tree_util.tree_map(zeros, params),
@@ -98,8 +98,9 @@ def apply_updates(params: Any, grads: Any, state: dict, cfg: OptConfig):
         return (p.astype(F32) - lr * u).astype(p.dtype), m, v
 
     out = jax.tree_util.tree_map(upd, params, grads, state["m"], state["v"])
-    leaf3 = lambda i: jax.tree_util.tree_map(
-        lambda t: t[i], out, is_leaf=lambda x: isinstance(x, tuple))
+    def leaf3(i):
+        return jax.tree_util.tree_map(
+            lambda t: t[i], out, is_leaf=lambda x: isinstance(x, tuple))
     new_params, m, v = leaf3(0), leaf3(1), leaf3(2)
     new_state = {"m": m, "v": v, "step": step}
     if cfg.grad_compression:

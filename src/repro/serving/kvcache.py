@@ -13,7 +13,6 @@ KV, so the memory roofline term stays at one pass over the live pages.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

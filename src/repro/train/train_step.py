@@ -9,8 +9,6 @@ exercised in the training loop itself).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,7 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
-from repro.core import buckets, dhash
+from repro.core import dhash
 
 Q = 8            # fixed batch width (padded with mask) to avoid recompiles
 KEYS = list(range(1, 33))

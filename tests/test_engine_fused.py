@@ -5,7 +5,6 @@ on-device epoch swap + continuous-rebuild autostart, and the fused
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dhash
@@ -115,6 +114,72 @@ def test_fused_engine_matches_dict_oracle():
     oracle: dict[int, int] = {}
     universe = np.arange(1, 200)
     for step in range(24):
+        ins = rng.choice(universe, 6, replace=False)
+        ins = np.array([k for k in ins if k not in oracle] or [0], I32)
+        dels = np.array([k for k in rng.choice(list(oracle) or [0], 3)
+                         if k in oracle] or [0], I32)
+        dels = np.unique(dels)
+        look = rng.choice(universe, 16, replace=False).astype(I32)
+        pre = dict(oracle)
+        found, vals, ok_i, ok_d = eng.step(look, ins, ins * 3, dels,
+                                           ins_mask=ins > 0,
+                                           del_mask=dels > 0)
+        for k in ins[ins > 0]:
+            oracle[int(k)] = int(k) * 3
+        for k in dels[dels > 0]:
+            oracle.pop(int(k), None)
+        fn, vn = np.asarray(found), np.asarray(vals)
+        for i, k in enumerate(look):
+            assert fn[i] == (int(k) in pre), (step, k)
+            if int(k) in pre:
+                assert vn[i] == pre[int(k)]
+    assert eng.count() == len(oracle)
+
+
+def test_zero_host_sync_full_fused_write_epoch(monkeypatch):
+    """Acceptance (PR 2): a FUSED state driving complete rebuild epochs —
+    extract kernel -> landing via the claim kernel -> on-device swap — with
+    interleaved lookup/insert/DELETE batches performs ZERO host syncs
+    between poll intervals: exactly one batched device_get per poll_every
+    steps, while at least one full epoch completes entirely on-device."""
+    eng = DHashEngine(dhash.make("linear", capacity=256, chunk=64, seed=9,
+                                 fused=True),
+                      continuous_rebuild=True, poll_every=8)
+    rng = np.random.default_rng(0)
+    keys = rng.choice(50_000, 128, replace=False).astype(I32)
+    eng.step(keys, keys, keys * 2, _z1(), del_mask=np.zeros(1, bool))
+
+    calls = {"n": 0}
+    orig = jax.device_get
+
+    def counting(x):
+        calls["n"] += 1
+        return orig(x)
+
+    monkeypatch.setattr(jax, "device_get", counting)
+    for i in range(24):
+        # mixed traffic: lookups + fresh inserts + deletes of earlier keys
+        ins = rng.integers(100_000, 200_000, 8).astype(I32)
+        dels = keys[(i * 4) % 128:][:4]
+        eng.step(keys[:32], ins, ins * 2, dels)
+    monkeypatch.undo()
+    # steps 2..25 -> polls at steps 8, 16, 24 only
+    assert calls["n"] == 3, calls
+    # the epochs cycled on-device while the host stayed silent
+    assert eng.stats.rebuilds_completed >= 1
+
+
+def test_fused_twochoice_engine_matches_dict_oracle():
+    """The twochoice backend on the fused kernels, driven end-to-end in a
+    continuous-rebuild engine against a dict oracle (PR 2 brings twochoice
+    onto the fused path; chain remains the jnp reference)."""
+    rng = np.random.default_rng(6)
+    eng = DHashEngine(dhash.make("twochoice", capacity=256, chunk=32, seed=4,
+                                 fused=True),
+                      continuous_rebuild=True, poll_every=8)
+    oracle: dict[int, int] = {}
+    universe = np.arange(1, 200)
+    for step in range(16):
         ins = rng.choice(universe, 6, replace=False)
         ins = np.array([k for k in ins if k not in oracle] or [0], I32)
         dels = np.array([k for k in rng.choice(list(oracle) or [0], 3)

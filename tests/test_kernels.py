@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from benchmarks.common import count_primitives as _count_primitives
-from repro.core import buckets, hashing
+from repro.core import buckets, dhash, hashing
 from repro.kernels import ops, ref
 
 
@@ -225,3 +225,260 @@ def test_ordered_lookup_fused_matches_ref():
     f_k, v_k = ops.ordered_lookup(*args, max_probes=32)
     np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_ref))
     np.testing.assert_allclose(np.asarray(v_k), np.asarray(v_ref))
+
+
+# ---------------------------------------------------------------------------
+# write-path kernels: delete / extract / land (PR 2)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("capacity,n_items,n_del", [
+    (1 << 10, 500, 333),          # small, non-tile-aligned delete count
+    (1 << 14, 9_000, 4_097),      # multi-tile, odd count
+])
+def test_probe_delete_matches_jnp(capacity, n_items, n_del):
+    """Fused delete == jnp delete on every observable: ok flags, final
+    states, membership — batch mixes present keys, absent keys, duplicates,
+    and masked-out entries; batch size is not a tile multiple."""
+    t, keys, _ = _table(capacity, n_items, seed=capacity % 89)
+    rng = np.random.default_rng(2)
+    absent = jnp.asarray(rng.integers(20_000_000, 2**31 - 1, n_del // 3)
+                         .astype(np.int32))
+    batch = jnp.concatenate([keys[:n_del], absent, keys[:64]])[:n_del]
+    mask = jnp.ones(batch.shape, bool).at[-17:].set(False)
+    t_j, ok_j = jax.jit(buckets.linear_delete)(t, batch, mask)
+    t_k, ok_k = jax.jit(buckets.linear_delete_fused)(t, batch, mask)
+    np.testing.assert_array_equal(np.asarray(ok_k), np.asarray(ok_j))
+    np.testing.assert_array_equal(np.asarray(t_k.state), np.asarray(t_j.state))
+    f_j, _, _ = buckets.linear_lookup(t_j, keys)
+    f_k, _, _ = buckets.linear_lookup(t_k, keys)
+    np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_j))
+
+
+def test_probe_delete_tombstone_reuse():
+    """Slots freed by the fused delete are reclaimed by the fused insert:
+    live count conserved, and every re-inserted key readable."""
+    t = buckets.linear_make(256, hashing.fresh("mix32", 0), max_probes=32)
+    k = jnp.arange(1, 181, dtype=jnp.int32)
+    t, _ = jax.jit(buckets.linear_insert)(t, k, k * 2, jnp.ones(180, bool))
+    t, ok_d = jax.jit(buckets.linear_delete_fused)(t, k[:90],
+                                                   jnp.ones(90, bool))
+    assert bool(ok_d.all())
+    assert int((t.state == 2).sum()) == 90          # TOMB
+    k2 = jnp.arange(1000, 1090, dtype=jnp.int32)
+    t, ok_i = jax.jit(buckets.linear_insert_fused)(t, k2, k2 * 3,
+                                                   jnp.ones(90, bool))
+    assert bool(ok_i.all())                          # tombstones reused
+    assert int(buckets.linear_count_live(t)) == 180
+    f, v, _ = buckets.linear_lookup(t, k2)
+    assert bool(f.all()) and bool((v == k2 * 3).all())
+
+
+def test_write_kernels_budget():
+    """Budget: each new write-path op is ONE argsort + ONE pallas_call
+    (extract needs no sort at all — the chunk window is already
+    contiguous)."""
+    t, keys, _ = _table(1 << 12, 1_000, seed=13)
+    h0 = hashing.bucket_of(t.hfn, keys, t.capacity)
+    mask = jnp.ones(keys.shape, bool)
+
+    jx = jax.make_jaxpr(
+        lambda *a: ops.probe_delete(*a, max_probes=32))(
+        t.key, t.val, t.state, h0, keys, mask)
+    assert _count_primitives(jx, ("sort", "pallas_call")) == \
+        {"sort": 1, "pallas_call": 1}
+
+    args = _ordered_args(n_q=2_048)
+    jx = jax.make_jaxpr(
+        lambda *a: ops.ordered_delete_fused(*a, max_probes=32))(
+        *args, jnp.ones(args[-1].shape, bool))
+    assert _count_primitives(jx, ("sort", "pallas_call")) == \
+        {"sort": 1, "pallas_call": 1}
+
+    jx = jax.make_jaxpr(
+        lambda k, v, s, c: ops.extract_chunk_fused(k, v, s, c, chunk=256))(
+        t.key, t.val, t.state, jnp.asarray(0, jnp.int32))
+    assert _count_primitives(jx, ("sort", "pallas_call")) == \
+        {"sort": 0, "pallas_call": 1}
+
+    tc = buckets.twochoice_make(1 << 9, hashing.fresh("mix32", 1),
+                                hashing.fresh("mix32", 2), width=8)
+    ba, bb = buckets._tc_rows(tc, keys)
+    jx = jax.make_jaxpr(ops.twochoice_lookup)(
+        tc.key, tc.val, tc.state, ba, bb, keys)
+    assert _count_primitives(jx, ("sort", "pallas_call")) == \
+        {"sort": 1, "pallas_call": 1}
+
+    jx = jax.make_jaxpr(
+        lambda *a: ops.twochoice_insert(*a, max_rounds=8))(
+        tc.key, tc.val, tc.state, ba, bb, keys, keys * 2, mask)
+    assert _count_primitives(jx, ("sort", "pallas_call")) == \
+        {"sort": 1, "pallas_call": 1}
+
+
+@pytest.mark.parametrize("cursor", [0, 100, 4_000, 4_090, 8_100])
+def test_extract_chunk_fused_matches_jnp(cursor):
+    """Fused extract == jnp extract as a SET (the fused hazard buffer is
+    compacted on-device), with identical MIGRATED markings and cursor
+    advance — cursor positions cover the slab seam and the table edge."""
+    t, keys, _ = _table(1 << 13, 4_000, seed=5, deletes=500)
+    cur = jnp.asarray(cursor, jnp.int32)
+    t_j, hk_j, hv_j, hl_j, cur_j = jax.jit(
+        lambda t, c: buckets.linear_extract_chunk(t, c, 256))(t, cur)
+    t_k, hk_k, hv_k, hl_k, cur_k = jax.jit(
+        lambda t, c: buckets.linear_extract_chunk_fused(t, c, 256))(t, cur)
+    np.testing.assert_array_equal(np.asarray(t_k.state),
+                                  np.asarray(t_j.state))
+    assert int(cur_j) == int(cur_k)
+    lj, lk = np.asarray(hl_j), np.asarray(hl_k)
+    set_j = set(zip(np.asarray(hk_j)[lj].tolist(),
+                    np.asarray(hv_j)[lj].tolist()))
+    set_k = set(zip(np.asarray(hk_k)[lk].tolist(),
+                    np.asarray(hv_k)[lk].tolist()))
+    assert set_j == set_k
+    # compaction: live entries are a prefix
+    assert (np.flatnonzero(lk) == np.arange(lk.sum())).all()
+
+
+def test_ordered_delete_fused_matches_staged():
+    """Mid-rebuild fused delete (ONE probe2 pass) == the staged jnp ordered
+    delete on ok flags, remaining membership, and item counts — the batch
+    hits old-table keys, hazard keys, new-table keys, and absent keys."""
+    rng = np.random.default_rng(8)
+    d_j = dhash.make("linear", capacity=1024, chunk=128, seed=5, fused=False)
+    d_k = dhash.make("linear", capacity=1024, chunk=128, seed=5, fused=True)
+    keys = jnp.asarray(rng.choice(100_000, 800, replace=False)
+                       .astype(np.int32))
+    ins = jax.jit(dhash.insert)
+    d_j, _ = ins(d_j, keys, keys * 2)
+    d_k, _ = ins(d_k, keys, keys * 2)
+    d_j = dhash.rebuild_start(d_j, seed=9)
+    d_k = dhash.rebuild_start(d_k, seed=9)
+    step = jax.jit(dhash.rebuild_step)
+    for _ in range(3):   # extract, land, extract -> populated hazard window
+        d_j, d_k = step(d_j), step(d_k)
+    assert bool(d_k.hazard_live.any())
+    batch = jnp.concatenate([
+        keys[::3], jnp.asarray(rng.integers(200_000, 300_000, 101)
+                               .astype(np.int32))])
+    dl = jax.jit(dhash.delete)
+    d_j2, ok_j = dl(d_j, batch)
+    d_k2, ok_k = dl(d_k, batch)
+    np.testing.assert_array_equal(np.asarray(ok_k), np.asarray(ok_j))
+    assert int(dhash.count_items(d_j2)) == int(dhash.count_items(d_k2))
+    look = jax.jit(dhash.lookup)
+    f_j, v_j = look(d_j2, keys)
+    f_k, v_k = look(d_k2, keys)
+    np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_j))
+    fm = np.asarray(f_j)
+    np.testing.assert_array_equal(np.asarray(v_k)[fm], np.asarray(v_j)[fm])
+
+
+@pytest.mark.parametrize("backend,fused", [
+    ("linear", True), ("twochoice", True), ("chain", False),
+])
+def test_delete_extract_land_parity_all_backends(backend, fused):
+    """The full write surface (delete + extract + land + swap) against a
+    dict oracle for every backend — linear/twochoice on the fused kernels,
+    chain as the documented jnp reference."""
+    rng = np.random.default_rng(3)
+    d = dhash.make(backend, capacity=512, chunk=64, seed=7, fused=fused)
+    oracle: dict[int, int] = {}
+    keys = rng.choice(100_000, 301, replace=False).astype(np.int32)  # odd N
+    d, ok = jax.jit(dhash.insert)(d, jnp.asarray(keys), jnp.asarray(keys * 2))
+    assert bool(ok.all())
+    oracle.update({int(k): int(k) * 2 for k in keys})
+    d = dhash.rebuild_start(d, seed=31)
+    step = jax.jit(dhash.rebuild_step)
+    dl = jax.jit(dhash.delete)
+    look = jax.jit(dhash.lookup)
+    i = 0
+    while bool(jax.device_get(d.rebuilding)) and i < 64:
+        d = step(d)                       # extract or land
+        dels = keys[i::16][:5]            # delete during the hazard window
+        d, ok_d = dl(d, jnp.asarray(dels))
+        expect = np.array([int(k) in oracle for k in dels])
+        np.testing.assert_array_equal(np.asarray(ok_d), expect)
+        for k in dels:
+            oracle.pop(int(k), None)
+        if bool(jax.device_get(dhash.rebuild_done(d))):
+            d = dhash.rebuild_finish(d)
+        i += 1
+    assert int(d.epoch) == 1, "rebuild did not complete"
+    assert int(dhash.count_items(d)) == len(oracle)
+    f, v = look(d, jnp.asarray(keys))
+    expect_f = np.array([int(k) in oracle for k in keys])
+    np.testing.assert_array_equal(np.asarray(f), expect_f)
+    np.testing.assert_array_equal(np.asarray(v)[expect_f],
+                                  np.array([oracle[int(k)] for k in keys
+                                            if int(k) in oracle]))
+
+
+def test_tc_lookup_fused_matches_jnp():
+    """Fused twochoice lookup == jnp on found/loc everywhere and val where
+    found (the jnp path leaves val undefined for misses); odd batch size."""
+    rng = np.random.default_rng(4)
+    tc = buckets.twochoice_make(1 << 9, hashing.fresh("mix32", 1),
+                                hashing.fresh("mix32", 2), width=8)
+    k = jnp.asarray(rng.choice(1_000_000, 1_500, replace=False)
+                    .astype(np.int32))
+    tc, _ = jax.jit(buckets.twochoice_insert)(tc, k, k * 5,
+                                              jnp.ones(1_500, bool))
+    qs = jnp.concatenate([k, jnp.asarray(
+        rng.integers(2_000_000, 3_000_000, 501).astype(np.int32))])
+    f_j, v_j, l_j = jax.jit(buckets.twochoice_lookup)(tc, qs)
+    f_k, v_k, l_k = jax.jit(buckets.twochoice_lookup_fused)(tc, qs)
+    fm = np.asarray(f_j)
+    np.testing.assert_array_equal(np.asarray(f_k), fm)
+    np.testing.assert_array_equal(np.asarray(v_k)[fm], np.asarray(v_j)[fm])
+    np.testing.assert_array_equal(np.asarray(l_k)[fm], np.asarray(l_j)[fm])
+    assert (np.asarray(l_k)[~fm] == -1).all()
+
+
+def test_tc_insert_delete_fused_matches_jnp():
+    """Fused twochoice insert/delete == jnp on ok flags, live counts, and
+    membership, with duplicate keys, re-inserts, and masked-out entries;
+    the fused delete reuses the lookup kernel's loc output (no re-probe)."""
+    rng = np.random.default_rng(9)
+    tc = buckets.twochoice_make(1 << 9, hashing.fresh("mix32", 1),
+                                hashing.fresh("mix32", 2), width=8)
+    base = jnp.asarray(rng.choice(1_000_000, 900, replace=False)
+                       .astype(np.int32))
+    tc, _ = jax.jit(buckets.twochoice_insert)(tc, base, base * 5,
+                                              jnp.ones(900, bool))
+    fresh = jnp.asarray(rng.choice(np.arange(2_000_000, 3_000_000), 400,
+                                   replace=False).astype(np.int32))
+    batch = jnp.concatenate([fresh, fresh[:100], base[:100]])
+    mask = jnp.ones(batch.shape, bool).at[-30:].set(False)
+    t_j, ok_j = jax.jit(buckets.twochoice_insert)(tc, batch, batch * 7, mask)
+    t_k, ok_k = jax.jit(buckets.twochoice_insert_fused)(tc, batch,
+                                                        batch * 7, mask)
+    np.testing.assert_array_equal(np.asarray(ok_k), np.asarray(ok_j))
+    assert int(buckets.twochoice_count_live(t_k)) == \
+        int(buckets.twochoice_count_live(t_j))
+    probe = jnp.concatenate([base, fresh])
+    f_j, v_j, _ = buckets.twochoice_lookup(t_j, probe)
+    f_k, v_k, _ = buckets.twochoice_lookup(t_k, probe)
+    fm = np.asarray(f_j)
+    np.testing.assert_array_equal(np.asarray(f_k), fm)
+    np.testing.assert_array_equal(np.asarray(v_k)[fm], np.asarray(v_j)[fm])
+
+    dels = jnp.concatenate([base[:300], jnp.asarray(
+        rng.integers(4_000_000, 5_000_000, 101).astype(np.int32))])
+    dm = jnp.ones(dels.shape, bool)
+    td_j, okd_j = jax.jit(buckets.twochoice_delete)(t_j, dels, dm)
+    td_k, okd_k = jax.jit(buckets.twochoice_delete_fused)(t_k, dels, dm)
+    np.testing.assert_array_equal(np.asarray(okd_k), np.asarray(okd_j))
+    assert int(buckets.twochoice_count_live(td_k)) == \
+        int(buckets.twochoice_count_live(td_j))
+
+
+def test_land_fused_uses_insert_kernel():
+    """rebuild_land on a fused state routes through the claim kernel: the
+    landed epoch conserves membership, and the jaxpr of the fused landing
+    contains a pallas_call (the jnp landing has none)."""
+    d = dhash.make("linear", capacity=512, chunk=64, seed=2, fused=True)
+    d_j = dhash.make("linear", capacity=512, chunk=64, seed=2, fused=False)
+    jx_f = jax.make_jaxpr(dhash.rebuild_land)(d)
+    jx_j = jax.make_jaxpr(dhash.rebuild_land)(d_j)
+    assert _count_primitives(jx_f, ("pallas_call",))["pallas_call"] >= 1
+    assert _count_primitives(jx_j, ("pallas_call",))["pallas_call"] == 0

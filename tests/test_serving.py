@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import ArchConfig
-from repro.core import buckets, dhash
+from repro.core import dhash
 from repro.models import model, transformer
 from repro.serving import kvcache, prefix_cache
 from repro.serving.engine import ServeConfig, ServingEngine

@@ -25,13 +25,13 @@ def _quadratic_fit(cfg, steps=200):
     def step(params, state):
         def loss(p):
             return jnp.sum((p["w"] - target) ** 2)
-        l, g = jax.value_and_grad(loss)(params)
+        lv, g = jax.value_and_grad(loss)(params)
         params, state, m = opt_lib.apply_updates(params, g, state, cfg)
-        return params, state, l
+        return params, state, lv
 
     for _ in range(steps):
-        params, state, l = step(params, state)
-    return float(jnp.max(jnp.abs(params["w"] - target))), float(l)
+        params, state, l_last = step(params, state)
+    return float(jnp.max(jnp.abs(params["w"] - target))), float(l_last)
 
 
 def test_adamw_converges():

@@ -4,7 +4,6 @@ trains, hash-router rebalance runs live."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
