@@ -15,11 +15,21 @@ Gate semantics, per leaf key:
 * **pass ratios** (``pass_ratio``) must not drop by more than
   ``--ratio-tolerance`` (default 15%): the fused-vs-jnp advantage is the
   acceptance criterion of the kernels.
+* **escape rates** (``escape_rate``) are lower-is-better fractions of
+  rebuild-epoch queries overflowing to the jnp fallback (the growth-escape
+  bench); they must not exceed the baseline by more than
+  ``--rate-tolerance`` ABSOLUTE (default 0.02 — a 0.00 baseline allows up
+  to 0.02, so benign hash-seed jitter passes but a coverage regression in
+  the two-level tile map fails).
 * **timings** (``wall_us``) must not grow by more than
-  ``--time-tolerance`` (default 15%).  Committed baselines are produced on
-  the dev container, so cross-machine CI runs should pass a wider band
-  (the workflow uses 3.0: interpret-mode wall clock varies wildly across
-  runners, but a >4x blowup still means something is pathologically wrong).
+  ``--time-tolerance`` (default 0.15).  The committed baselines are
+  produced by a CI-runner-class container (same pinned deps, CPU
+  interpret mode), so the workflow passes a CALIBRATED cross-runner band
+  of 2.0: measured jitter of the interpreted kernels is <1.3x run-to-run
+  on an idle machine and up to ~2.6x worst-case under scheduler
+  contention, so a genuine slowdown past 3x fails while runner noise does
+  not.  (The band was 3.0 — a >4x allowance — before the baselines were
+  regenerated on runner-class hardware.)
 
 Exit status: 0 clean, 1 regression(s) found, 2 usage/setup error.
 """
@@ -33,10 +43,11 @@ import sys
 STRUCTURAL = ("sort", "pallas_call", "passes")
 RATIOS = ("pass_ratio",)
 TIMINGS = ("wall_us",)
+RATES = ("escape_rate",)
 
 
 def _compare(base, cur, path: str, failures: list[str], *,
-             time_tol: float, ratio_tol: float) -> None:
+             time_tol: float, ratio_tol: float, rate_tol: float) -> None:
     if isinstance(base, dict):
         if not isinstance(cur, dict):
             failures.append(f"{path}: expected object, got {type(cur).__name__}")
@@ -46,7 +57,8 @@ def _compare(base, cur, path: str, failures: list[str], *,
                 failures.append(f"{path}/{k}: missing from current run")
                 continue
             _compare(v, cur[k], f"{path}/{k}", failures,
-                     time_tol=time_tol, ratio_tol=ratio_tol)
+                     time_tol=time_tol, ratio_tol=ratio_tol,
+                     rate_tol=rate_tol)
         return
     if isinstance(base, bool) or not isinstance(base, (int, float)):
         return  # strings/bools are descriptive, not gated
@@ -60,6 +72,11 @@ def _compare(base, cur, path: str, failures: list[str], *,
             failures.append(
                 f"{path}: ratio regressed {base:.2f} -> {cur:.2f} "
                 f"(tolerance {ratio_tol:.0%})")
+    elif key in RATES:
+        if cur > base + rate_tol:
+            failures.append(
+                f"{path}: escape rate regressed {base:.4f} -> {cur:.4f} "
+                f"(absolute tolerance {rate_tol})")
     elif key in TIMINGS:
         if cur > base * (1 + time_tol):
             failures.append(
@@ -77,6 +94,9 @@ def main(argv=None) -> int:
                     help="allowed relative wall-clock growth (default 0.15)")
     ap.add_argument("--ratio-tolerance", type=float, default=0.15,
                     help="allowed relative pass-ratio drop (default 0.15)")
+    ap.add_argument("--rate-tolerance", type=float, default=0.02,
+                    help="allowed ABSOLUTE escape-rate increase "
+                         "(default 0.02)")
     args = ap.parse_args(argv)
 
     baseline_dir = pathlib.Path(args.baseline_dir)
@@ -98,7 +118,8 @@ def main(argv=None) -> int:
         cur = json.loads(cur_path.read_text())
         _compare(base, cur, base_path.stem, failures,
                  time_tol=args.time_tolerance,
-                 ratio_tol=args.ratio_tolerance)
+                 ratio_tol=args.ratio_tolerance,
+                 rate_tol=args.rate_tolerance)
         print(f"checked {base_path.name}")
 
     if failures:

@@ -94,19 +94,30 @@ def fused_writes():
          f"{r['pass_ratio']:.2f}x_fewer_passes")
 
 
+def growth_escape():
+    from benchmarks.bench_rebuild import run_growth_escape
+    r = run_growth_escape(batch=4096, n_items=3_000, quiet=True)
+    for g in (1, 4, 16):
+        row = r[f"growth_{g}x"]
+        _row(f"growth_escape/{g}x/q{r['batch']}", row["wall_us"],
+             f"{row['escape_rate']:.4f}_escape_rate")
+
+
 TABLES = [fig2_throughput, fig3_rebuild, fig4_portability, s62_oversubscribe,
-          s1_attack, moe_router, kvcache_rehash, fused_probe, fused_writes]
+          s1_attack, moe_router, kvcache_rehash, fused_probe, fused_writes,
+          growth_escape]
 
 
 def quick() -> None:
     """CI smoke mode: exercises the perf harness end-to-end in minutes —
-    the fused-probe and fused-writes acceptance checks (pass counts +
-    BENCH_fused_probe.json / BENCH_fused_writes.json) plus a tiny fig3
-    rebuild sweep so perf code can't silently rot."""
+    the fused-probe, fused-writes, and growth-escape acceptance checks
+    (pass counts + escape rates + their BENCH_*.json artifacts) plus a tiny
+    fig3 rebuild sweep so perf code can't silently rot."""
     print("name,us_per_call,derived")
     t0 = time.time()
     fused_probe()
     fused_writes()
+    growth_escape()
     from benchmarks.bench_rebuild import run as rebuild_run
     for name, n, dt in rebuild_run(ns=(2_000,), quiet=True):
         _row(f"fig3/{name}/n{n}", dt * 1e6, f"{dt*1e3:.1f}ms_full_rebuild")

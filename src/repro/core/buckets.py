@@ -419,6 +419,50 @@ def twochoice_delete_fused(t: TwoChoiceTable, keys: jax.Array,
                           hfn_b=t.hfn_b, key=t.key, val=t.val, state=state), ok
 
 
+def twochoice_ordered_lookup_fused(t_old: TwoChoiceTable,
+                                   t_new: TwoChoiceTable,
+                                   hazard_key: jax.Array,
+                                   hazard_val: jax.Array,
+                                   hazard_live: jax.Array,
+                                   keys: jax.Array, *,
+                                   interpret: bool = True):
+    """Kernel-backed twochoice rebuild-epoch lookup: the whole ordered check
+    (old -> hazard -> new, Lemma 4.1) in ONE argsort + ONE probe2-style
+    pallas_call — previously two composed fused single-table passes.
+    Returns (found, vals)."""
+    from repro.kernels import ops
+    ba_o, bb_o = _tc_rows(t_old, keys)
+    ba_n, bb_n = _tc_rows(t_new, keys)
+    return ops.twochoice_ordered_lookup(
+        (t_old.key, t_old.val, t_old.state),
+        (t_new.key, t_new.val, t_new.state),
+        hazard_key, hazard_val, hazard_live,
+        ba_o, bb_o, ba_n, bb_n, keys, interpret=interpret)
+
+
+def twochoice_ordered_delete_fused(t_old: TwoChoiceTable,
+                                   t_new: TwoChoiceTable,
+                                   hazard_key: jax.Array,
+                                   hazard_val: jax.Array,
+                                   hazard_live: jax.Array,
+                                   keys: jax.Array, mask: jax.Array, *,
+                                   interpret: bool = True):
+    """Kernel-backed twochoice rebuild-epoch delete (paper Alg. 5): the SAME
+    single tc_probe2 pass resolves old-slot / hazard-index / new-slot;
+    three scatters land the result.  Returns the raw
+    (old_state', new_state', hazard_live', ok[Q]) — the dhash layer
+    reassembles its pytrees."""
+    from repro.kernels import ops
+    winner = batch_winners(keys, mask)
+    ba_o, bb_o = _tc_rows(t_old, keys)
+    ba_n, bb_n = _tc_rows(t_new, keys)
+    return ops.twochoice_ordered_delete(
+        (t_old.key, t_old.val, t_old.state),
+        (t_new.key, t_new.val, t_new.state),
+        hazard_key, hazard_val, hazard_live,
+        ba_o, bb_o, ba_n, bb_n, keys, winner, interpret=interpret)
+
+
 def twochoice_extract_chunk_fused(t: TwoChoiceTable, cursor: jax.Array,
                                   n: int, *, interpret: bool = True):
     """Kernel-backed 2-choice rebuild chunk scan: the extract kernel runs on

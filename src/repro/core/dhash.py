@@ -61,9 +61,11 @@ class DHashState:
     fused: bool                 # linear/twochoice: route the FULL op surface
                                 # (lookup/insert/delete + rebuild extract and
                                 # land) through the Pallas kernels
-                                # (kernels/ops.py); the linear rebuild-epoch
-                                # lookup AND delete are each ONE sort + ONE
-                                # pallas_call (old+hazard+new in one pass)
+                                # (kernels/ops.py); BOTH backends' rebuild-
+                                # epoch lookup AND delete are each ONE sort +
+                                # ONE pallas_call (old+hazard+new in one
+                                # pass, two-level tile map for grown new
+                                # tables)
     old: Any                    # active table (backend pytree)
     new: Any                    # target table; meaningful only while rebuilding
     hazard_key: jax.Array       # [chunk] i32
@@ -149,9 +151,11 @@ def _hazard_probe(d: DHashState, keys: jax.Array):
 def lookup(d: DHashState, keys: jax.Array):
     """Batched lookup honouring the rebuild protocol. Returns (found, vals).
 
-    With ``fused`` (linear backend) both branches run on the Pallas kernels;
-    the rebuild-epoch branch is the fused probe2 kernel: ONE argsort + ONE
-    pallas_call cover the whole old -> hazard -> new ordered check."""
+    With ``fused`` both branches run on the Pallas kernels; the
+    rebuild-epoch branch is the fused probe2 kernel (linear) or its
+    twochoice analogue: ONE argsort + ONE pallas_call cover the whole
+    old -> hazard -> new ordered check, with a two-level tile map keeping
+    grown new tables resident."""
 
     def fast(dd: DHashState):
         if dd.fused:
@@ -164,15 +168,12 @@ def lookup(d: DHashState, keys: jax.Array):
 
     def slow(dd: DHashState):
         if dd.fused and dd.backend == "twochoice":
-            # staged but fully kernel-backed: the 2-choice probe2 analogue is
-            # a ROADMAP open item, so the ordered check composes two fused
-            # row-gather passes around the dense hazard compare
-            f_old, v_old, _ = buckets.twochoice_lookup_fused(dd.old, keys)
-            f_hz, v_hz = _hazard_probe(dd, keys)
-            f_new, v_new, _ = buckets.twochoice_lookup_fused(dd.new, keys)
-            found = f_old | f_hz | f_new
-            val = jnp.where(f_old, v_old, jnp.where(f_hz, v_hz, v_new))
-            return found, val
+            # single-pass probe2 analogue: one sort + one tc_probe2
+            # pallas_call for the whole ordered check (was two composed
+            # fused row-gather passes around a separate hazard compare)
+            return buckets.twochoice_ordered_lookup_fused(
+                dd.old, dd.new, dd.hazard_key, dd.hazard_val,
+                dd.hazard_live, keys)
         if dd.fused:
             from repro.kernels import ops
             h0_old = hashing.bucket_of(dd.old.hfn, keys, dd.old.capacity)
@@ -235,11 +236,12 @@ def delete(d: DHashState, keys: jax.Array, mask: jax.Array | None = None):
     """Batched delete honouring the ordered check (Alg. 5). Returns (state', ok).
 
     With ``fused`` the write path is kernel-backed end to end: the fast
-    branch tombstones via the location-emitting probe kernel, and the linear
-    rebuild-epoch branch is ONE argsort + ONE pallas_call
-    (``ops.ordered_delete_fused`` — the probe2 kernel's slot/hazard-index
-    outputs drive the old tombstone, the hazard kill, and the new tombstone
-    in a single pass)."""
+    branch tombstones via the location-emitting probe kernel, and BOTH
+    fused backends' rebuild-epoch branches are ONE argsort + ONE
+    pallas_call (``ops.ordered_delete_fused`` for linear,
+    ``ops.twochoice_ordered_delete`` for twochoice — the probe2 kernels'
+    slot/hazard-index outputs drive the old tombstone, the hazard kill, and
+    the new tombstone in a single pass)."""
     if mask is None:
         mask = jnp.ones(keys.shape, bool)
 
@@ -267,9 +269,18 @@ def delete(d: DHashState, keys: jax.Array, mask: jax.Array | None = None):
         return replace(dd, old=replace(dd.old, state=os_),
                        new=replace(dd.new, state=ns_), hazard_live=hl), ok
 
+    def slow_fused_twochoice(dd: DHashState):
+        os_, ns_, hl, ok = buckets.twochoice_ordered_delete_fused(
+            dd.old, dd.new, dd.hazard_key, dd.hazard_val, dd.hazard_live,
+            keys, mask)
+        return replace(dd, old=replace(dd.old, state=os_),
+                       new=replace(dd.new, state=ns_), hazard_live=hl), ok
+
     def slow(dd: DHashState):
         if dd.fused and dd.backend == "linear":
             return slow_fused_linear(dd)
+        if dd.fused and dd.backend == "twochoice":
+            return slow_fused_twochoice(dd)
         t_old, ok_old = _del(dd, dd.old, keys, mask)                   # (1) old
         pending = mask & ~ok_old
         # (2) hazard buffer: clear the live bit (LOGICALLY_REMOVED on the

@@ -15,7 +15,12 @@ surface inside that step is kernel-backed — lookup, insert, DELETE, the
 rebuild chunk extraction, and the hazard landing all run through the Pallas
 probe/claim/extract kernels, so a complete rebuild epoch (extract -> land ->
 swap) with interleaved reads and writes never leaves the device between
-polls ("fused reads, jnp writes" was PR 1; this is fully fused).  State
+polls ("fused reads, jnp writes" was PR 1; this is fully fused).  The
+rebuild-epoch ordered lookup/delete are single-pass for BOTH fused backends
+(linear probe2 and its twochoice analogue), and the two-level tile map
+keeps them single-pass even when the rebuild target is a grown table — so
+a capacity-increasing rehash sustains the same step rate as a same-size
+one (see docs/KERNELS.md).  State
 buffers are **donated**
 (``donate_argnums``) so XLA updates tables in place instead of copying them
 every step, and the host polls ``rebuild_done`` only every ``poll_every``

@@ -11,7 +11,17 @@ old/new tombstones and the hazard kill); ``extract_chunk_fused`` is the
 rebuild chunk scan; ``twochoice_lookup`` / ``twochoice_insert`` /
 ``twochoice_delete`` bring the 2-choice backend onto the same
 sort + scalar-prefetch treatment (both row choices of a query expand into
-two entries of ONE sorted batch).
+two entries of ONE sorted batch), and ``twochoice_ordered_lookup`` /
+``twochoice_ordered_delete`` are its rebuild-epoch single-pass analogues
+(one sort + one tc_probe2 pallas_call for old -> hazard -> new).
+
+The rebuild-epoch ops cover arbitrarily grown new tables via a **two-level
+tile map**: a first-level jnp pass (``_resident_blockmap`` — histogram +
+top_k, no extra sort) picks up to ``NRES_CAP`` resident new-table blocks
+per query tile, and the probe2 kernels reduce over them on a
+``(tiles, nres)`` grid.  ``rebuild_escape_rate`` reports the fraction of
+queries that still overflow to the fallback (the growth-escape benchmark
+gates it).
 
 Exactness contract shared by all of them: queries whose probe window escapes
 the VMEM-resident slab (hash skew), or whose insert claim collides across
@@ -29,10 +39,17 @@ from repro.kernels import ref
 from repro.kernels.probe import (QT, SLAB, _tc_rowslab, extract_tiles,
                                  probe2_tiles, probe_insert_tiles,
                                  probe_lookup_tiles, tc_insert_tiles,
-                                 tc_lookup_tiles)
+                                 tc_lookup_tiles, tc_probe2_tiles)
 
 I32 = jnp.int32
 LIVE, TOMB, MIGRATED = 1, 2, 3
+
+# Resident new-table blocks per query tile in the rebuild-epoch probe (the
+# second level of the two-level tile map).  16 block pairs cover a new table
+# of up to ~16 SLABs (64K slots) COMPLETELY — a 16x growth rebuild of the
+# default benchmark tables stays fully fused; beyond that, the least-
+# populated blocks of a tile overflow to the gated jnp fallback.
+NRES_CAP = 16
 
 
 def _pad_to(x: jax.Array, n: int, fill=0):
@@ -60,12 +77,30 @@ def _sort_pad_queries(order, qpad, *arrays):
                  for a in arrays)
 
 
-def _tile_base(h0_sorted: jax.Array, tiles: int, cpad: int, *,
-               already_sorted: bool) -> jax.Array:
-    """Per-tile slab block index, clipped so block s+1 stays in range."""
-    t = h0_sorted.reshape(tiles, QT)
-    base = (t[:, 0] if already_sorted else t.min(axis=1)) // SLAB
+def _tile_base(h0_sorted: jax.Array, tiles: int, cpad: int) -> jax.Array:
+    """Per-tile slab block index of a SORTED start-slot array (the tile's
+    first element is its min), clipped so block s+1 stays in range."""
+    base = h0_sorted.reshape(tiles, QT)[:, 0] // SLAB
     return jnp.minimum(base.astype(I32), cpad // SLAB - 2)
+
+
+def _resident_blockmap(blk_sorted: jax.Array, tiles: int, nblocks: int,
+                       nres: int) -> jax.Array:
+    """First level of the two-level tile map: per tile, the ``nres``
+    most-populated target blocks of the tile's queries (a vectorized
+    histogram + ``top_k`` — no sort primitive, so the 1-sort/1-pallas_call
+    budget is untouched).  ``blk_sorted`` is each query's target block index
+    in the sorted batch order.  A query whose block is not among its tile's
+    residents keeps ``complete=False`` in the kernel and is recovered by the
+    gated jnp fallback.  Entries are clipped to ``nblocks - 2`` so the
+    resident pair ``(b, b+1)`` stays in range; a window anchored at the
+    query's own block always covers it (``max_probes <= SLAB``).
+    Returns [nres, tiles]."""
+    blk = blk_sorted.reshape(tiles, QT)
+    hist = jnp.zeros((tiles, nblocks), I32).at[
+        jnp.arange(tiles, dtype=I32)[:, None], blk].add(1)
+    _, top = jax.lax.top_k(hist, nres)
+    return jnp.minimum(top.astype(I32), nblocks - 2).T
 
 
 @partial(jax.jit, static_argnames=("max_probes", "interpret"))
@@ -88,7 +123,7 @@ def probe_lookup(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
     qpad = -(-q // QT) * QT
     h0s, qks = _sort_pad_queries(order, qpad, h0, qkey)
     tiles = qpad // QT
-    slab_base = _tile_base(h0s, tiles, tk.shape[0], already_sorted=True)
+    slab_base = _tile_base(h0s, tiles, tk.shape[0])
 
     found_s, val_s, _loc_s, complete_s = probe_lookup_tiles(
         tk, tv, ts, h0s, qks, slab_base, max_probes=max_probes,
@@ -134,35 +169,51 @@ def ordered_lookup(old_tables, new_tables, hazard_key, hazard_val, hazard_live,
     return found, val
 
 
+def _probe2_run(old_tables, new_tables, hazard_key, hazard_val, hazard_live,
+                h0_old, h0_new, keys, max_probes: int, interpret: bool):
+    """Shared prep + launch for the fused rebuild-epoch ops: the ONE argsort
+    (keyed on the old table's start slot), the two-level new-table tile map
+    (per-tile resident blocks, no second sort), and the ONE probe2
+    pallas_call.  Returns (order, (h0os, h0ns, qks), kernel outputs)."""
+    c_old = old_tables[0].shape[0]
+    c_new = new_tables[0].shape[0]
+    q = keys.shape[0]
+    old_p = _pad_table(old_tables, c_old, max_probes)
+    new_p = _pad_table(new_tables, c_new, max_probes)
+
+    order = jnp.argsort(h0_old)
+    qpad = -(-q // QT) * QT
+    h0os, h0ns, qks = _sort_pad_queries(order, qpad, h0_old, h0_new, keys)
+    tiles = qpad // QT
+    nblocks_new = new_p[0].shape[0] // SLAB
+    nres = min(NRES_CAP, nblocks_new - 1)
+    slab2 = jnp.concatenate([
+        _tile_base(h0os, tiles, old_p[0].shape[0])[None],
+        _resident_blockmap(h0ns // SLAB, tiles, nblocks_new, nres)])
+
+    outs = probe2_tiles(
+        old_p, new_p, hazard_key, hazard_val, hazard_live.astype(I32),
+        h0os, h0ns, qks, slab2, max_probes=max_probes, interpret=interpret)
+    return order, (h0os, h0ns, qks), outs
+
+
 @partial(jax.jit, static_argnames=("max_probes", "interpret"))
 def ordered_lookup_fused(old_tables, new_tables, hazard_key, hazard_val,
                          hazard_live, h0_old, h0_new, qkey, *,
                          max_probes: int = 64, interpret: bool = True):
     """FUSED rebuild-epoch lookup: ONE argsort (keyed on h0_old) and ONE
     pallas_call emit the Lemma-4.1-ordered result for both tables plus the
-    hazard buffer.  The new-table slab is anchored per tile at the tile's min
-    h0_new; queries whose new-table window escapes it AND that the old table
-    / hazard buffer did not resolve fall back to the jnp oracle (gated —
-    free when nothing escapes)."""
-    c_old = old_tables[0].shape[0]
-    c_new = new_tables[0].shape[0]
+    hazard buffer.  New-table residency is the two-level tile map: each
+    tile's windows are bucketed into up to ``NRES_CAP`` resident blocks by a
+    cheap jnp histogram pass, so growth-heavy rebuilds stay fused; a query
+    whose block overflows the residents AND that the old table / hazard
+    buffer did not resolve falls back to the jnp oracle (gated — free when
+    nothing escapes)."""
     q = qkey.shape[0]
-    old_p = _pad_table(old_tables, c_old, max_probes)
-    new_p = _pad_table(new_tables, c_new, max_probes)
-
-    # the ONE shared sort, keyed on the old table's start slot
-    order = jnp.argsort(h0_old)
-    qpad = -(-q // QT) * QT
-    h0os, h0ns, qks = _sort_pad_queries(order, qpad, h0_old, h0_new, qkey)
-    tiles = qpad // QT
-    slab2 = jnp.stack([
-        _tile_base(h0os, tiles, old_p[0].shape[0], already_sorted=True),
-        _tile_base(h0ns, tiles, new_p[0].shape[0], already_sorted=False),
-    ])
-
-    found_s, val_s, complete_s, *_write_outs = probe2_tiles(
-        old_p, new_p, hazard_key, hazard_val, hazard_live.astype(I32),
-        h0os, h0ns, qks, slab2, max_probes=max_probes, interpret=interpret)
+    order, (h0os, h0ns, qks), outs = _probe2_run(
+        old_tables, new_tables, hazard_key, hazard_val, hazard_live,
+        h0_old, h0_new, qkey, max_probes, interpret)
+    found_s, val_s, complete_s = outs[0], outs[1], outs[2]
 
     need = ~complete_s
 
@@ -179,6 +230,24 @@ def ordered_lookup_fused(old_tables, new_tables, hazard_key, hazard_val,
     found = jnp.zeros((q,), jnp.bool_).at[order].set(found_s[:q])
     val = jnp.zeros((q,), I32).at[order].set(val_s[:q])
     return found, val
+
+
+@partial(jax.jit, static_argnames=("max_probes", "interpret"))
+def rebuild_escape_rate(old_tables, new_tables, hazard_key, hazard_val,
+                        hazard_live, h0_old, h0_new, qkey, *,
+                        max_probes: int = 64, interpret: bool = True):
+    """Diagnostic for the growth-escape benchmark: the fraction of
+    rebuild-epoch queries the fused probe2 pass could NOT resolve in-kernel
+    (``complete=False`` — the gated jnp oracle recomputes exactly these).
+    Runs the identical prep + kernel as ``ordered_lookup_fused``, so the
+    rate it reports is the rate the fused path actually pays."""
+    q = qkey.shape[0]
+    order, _sorted, outs = _probe2_run(
+        old_tables, new_tables, hazard_key, hazard_val, hazard_live,
+        h0_old, h0_new, qkey, max_probes, interpret)
+    complete_s = outs[2]
+    escaped = jnp.zeros((q,), jnp.bool_).at[order].set((~complete_s)[:q])
+    return escaped.mean()
 
 
 @partial(jax.jit, static_argnames=("max_probes", "interpret"))
@@ -210,7 +279,7 @@ def probe_insert(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
     h0s, qks, qvs = _sort_pad_queries(order, qpad, h0, keys, vals)
     qms = _pad_to(mask[order], qpad, fill=False)
     tiles = qpad // QT
-    slab_base = _tile_base(h0s, tiles, tk.shape[0], already_sorted=True)
+    slab_base = _tile_base(h0s, tiles, tk.shape[0])
 
     present_s, claim_s, complete_s = probe_insert_tiles(
         tk, ts, h0s, qks, qms.astype(I32), slab_base,
@@ -271,7 +340,7 @@ def probe_delete(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
     h0s, qks = _sort_pad_queries(order, qpad, h0, keys)
     qms = _pad_to(mask[order], qpad, fill=False)
     tiles = qpad // QT
-    slab_base = _tile_base(h0s, tiles, tk.shape[0], already_sorted=True)
+    slab_base = _tile_base(h0s, tiles, tk.shape[0])
 
     found_s, _val_s, loc_s, complete_s = probe_lookup_tiles(
         tk, tv, ts, h0s, qks, slab_base, max_probes=max_probes,
@@ -314,23 +383,13 @@ def ordered_delete_fused(old_tables, new_tables, hazard_key, hazard_val,
     c_new = new_tables[0].shape[0]
     ch = hazard_key.shape[0]
     q = keys.shape[0]
-    old_p = _pad_table(old_tables, c_old, max_probes)
-    new_p = _pad_table(new_tables, c_new, max_probes)
-
-    order = jnp.argsort(h0_old)
     qpad = -(-q // QT) * QT
-    h0os, h0ns, qks = _sort_pad_queries(order, qpad, h0_old, h0_new, keys)
-    qms = _pad_to(mask[order], qpad, fill=False)
-    tiles = qpad // QT
-    slab2 = jnp.stack([
-        _tile_base(h0os, tiles, old_p[0].shape[0], already_sorted=True),
-        _tile_base(h0ns, tiles, new_p[0].shape[0], already_sorted=False),
-    ])
-
+    order, (h0os, h0ns, qks), outs = _probe2_run(
+        old_tables, new_tables, hazard_key, hazard_val, hazard_live,
+        h0_old, h0_new, keys, max_probes, interpret)
     (_found_s, _val_s, complete_s, fold_s, locold_s, hzidx_s,
-     locnew_s) = probe2_tiles(
-        old_p, new_p, hazard_key, hazard_val, hazard_live.astype(I32),
-        h0os, h0ns, qks, slab2, max_probes=max_probes, interpret=interpret)
+     locnew_s, _cold_s) = outs
+    qms = _pad_to(mask[order], qpad, fill=False)
 
     # ordered landing: old hit > hazard hit > new hit (at most one fires)
     f_hz = hzidx_s >= 0
@@ -554,3 +613,175 @@ def twochoice_delete(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
     tstate2 = tstate.reshape(-1).at[jnp.where(ok, loc, b * w)].set(
         TOMB, mode="drop").reshape(b, w)
     return tstate2, ok
+
+
+# ---------------------------------------------------------------------------
+# twochoice rebuild-epoch ops: ONE sort + ONE probe2-style pallas_call
+# ---------------------------------------------------------------------------
+
+def _tc_probe2_run(old_t, new_t, hazard_key, hazard_val, hazard_live,
+                   rows_a_old, rows_b_old, rows_a_new, rows_b_new, keys,
+                   interpret: bool):
+    """Shared prep + launch for the fused twochoice rebuild-epoch ops: the
+    2Q entry expansion (each query's two row choices, paired old/new), ONE
+    argsort keyed on the OLD row, the two-level resident map for the new
+    table's row-blocks, and ONE ``tc_probe2`` pallas_call.  Returns the
+    per-entry kernel outputs unsorted back to entry order."""
+    b_old, w = old_t[0].shape
+    b_new = new_t[0].shape[0]
+    slab_r = _tc_rowslab(w)
+    old_p = _tc_pad_rows(old_t, b_old, slab_r)
+    new_p = _tc_pad_rows(new_t, b_new, slab_r)
+
+    orow = jnp.concatenate([rows_a_old, rows_b_old])
+    nrow = jnp.concatenate([rows_a_new, rows_b_new])
+    qk2 = jnp.concatenate([keys, keys])
+    e = orow.shape[0]
+    order = jnp.argsort(orow)
+    epad = -(-e // QT) * QT
+    ors, nrs, qks = _sort_pad_queries(order, epad, orow, nrow, qk2)
+    tiles = epad // QT
+    obase = jnp.minimum(
+        (ors.reshape(tiles, QT)[:, 0] // slab_r).astype(I32),
+        old_p[0].shape[0] // slab_r - 2)
+    nblocks_new = new_p[0].shape[0] // slab_r
+    nres = min(NRES_CAP, nblocks_new - 1)
+    slab2 = jnp.concatenate([
+        obase[None], _resident_blockmap(nrs // slab_r, tiles, nblocks_new,
+                                        nres)])
+
+    outs = tc_probe2_tiles(old_p, new_p, hazard_key, hazard_val,
+                           hazard_live.astype(I32), ors, nrs, qks, slab2,
+                           interpret=interpret)
+    unsorted = tuple(jnp.zeros((e,), o.dtype).at[order].set(o[:e])
+                     for o in outs)
+    return unsorted
+
+
+def _tc_ordered_combine(outs, hazard_key, hazard_val, q: int):
+    """Recombine the per-entry probe2 components into per-query ordered
+    results (a-row priority within each table, old > hazard > new across
+    them).  Returns (f_old, v_old, l_old, f_hz, hz_idx, v_hz, f_new, v_new,
+    l_new, complete)."""
+    f_o, v_o, l_o, c_o, hz, f_n, v_n, l_n, c_n = outs
+    fo = f_o[:q] | f_o[q:]
+    vo = jnp.where(f_o[:q], v_o[:q], v_o[q:])
+    lo = jnp.where(f_o[:q], l_o[:q], l_o[q:])
+    co = c_o[:q] & c_o[q:]              # absence needs BOTH rows covered
+    hzq = hz[:q]                        # both entries carry the same key
+    f_hz = hzq >= 0
+    v_hz = jnp.take(hazard_val, jnp.clip(hzq, 0, hazard_key.shape[0] - 1))
+    fn = f_n[:q] | f_n[q:]
+    vn = jnp.where(f_n[:q], v_n[:q], v_n[q:])
+    ln = jnp.where(f_n[:q], l_n[:q], l_n[q:])
+    cn = c_n[:q] & c_n[q:]
+    complete = co & (fo | f_hz | cn)
+    return fo, vo, lo, f_hz, hzq, v_hz, fn, vn, ln, complete
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def twochoice_ordered_lookup(old_t, new_t, hazard_key, hazard_val,
+                             hazard_live, rows_a_old, rows_b_old,
+                             rows_a_new, rows_b_new, qkey, *,
+                             interpret: bool = True):
+    """FUSED twochoice rebuild-epoch lookup: ONE argsort (the 2Q entry batch
+    keyed on the old table's row index) + ONE pallas_call emit the
+    Lemma-4.1-ordered result — previously this composed TWO fused
+    single-table passes around a separate hazard compare.  Queries the
+    kernel could not determine (either row's window escaped) fall back to
+    the jnp oracle (gated — free when nothing escapes).
+
+    Returns (found[Q], val[Q])."""
+    q = qkey.shape[0]
+    outs = _tc_probe2_run(old_t, new_t, hazard_key, hazard_val, hazard_live,
+                          rows_a_old, rows_b_old, rows_a_new, rows_b_new,
+                          qkey, interpret)
+    (fo, vo, _lo, f_hz, _hzq, v_hz, fn, vn, _ln,
+     complete) = _tc_ordered_combine(outs, hazard_key, hazard_val, q)
+    found = (fo | f_hz | fn) & complete
+    val = jnp.where(
+        complete,
+        jnp.where(fo, vo, jnp.where(f_hz, v_hz, jnp.where(fn, vn, 0))), 0)
+
+    need = ~complete
+
+    def fallback(fv):
+        f0, v0 = fv
+        fa, va, _ = ref.tc_row_lookup_ref(*old_t, rows_a_old, qkey)
+        fb, vb, _ = ref.tc_row_lookup_ref(*old_t, rows_b_old, qkey)
+        f_oldr, v_oldr = fa | fb, jnp.where(fa, va, vb)
+        eq = (qkey[:, None] == hazard_key[None, :]) & hazard_live[None, :]
+        fh = eq.any(-1)
+        vh = jnp.take(hazard_val, jnp.argmax(eq, axis=-1))
+        fna, vna, _ = ref.tc_row_lookup_ref(*new_t, rows_a_new, qkey)
+        fnb, vnb, _ = ref.tc_row_lookup_ref(*new_t, rows_b_new, qkey)
+        f_newr, v_newr = fna | fnb, jnp.where(fna, vna, vnb)
+        fb_f = f_oldr | fh | f_newr
+        fb_v = jnp.where(f_oldr, v_oldr,
+                         jnp.where(fh, vh, jnp.where(f_newr, v_newr, 0)))
+        return jnp.where(need, fb_f, f0), jnp.where(need, fb_v, v0)
+
+    return jax.lax.cond(need.any(), fallback, lambda fv: fv, (found, val))
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def twochoice_ordered_delete(old_t, new_t, hazard_key, hazard_val,
+                             hazard_live, rows_a_old, rows_b_old,
+                             rows_a_new, rows_b_new, keys, mask, *,
+                             interpret: bool = True):
+    """FUSED twochoice rebuild-epoch delete (paper Alg. 5): the SAME single
+    probe2-style pass as the ordered lookup resolves old-slot / hazard-index
+    / new-slot, then three scatters land the tombstones and the hazard kill.
+
+    Caller contract: ``mask`` is winner-filtered.  Returns
+    (old_state', new_state', hazard_live', ok[Q])."""
+    b_old, w = old_t[0].shape
+    b_new = new_t[0].shape[0]
+    ch = hazard_key.shape[0]
+    q = keys.shape[0]
+    outs = _tc_probe2_run(old_t, new_t, hazard_key, hazard_val, hazard_live,
+                          rows_a_old, rows_b_old, rows_a_new, rows_b_new,
+                          keys, interpret)
+    (fo, _vo, lo, f_hz, hzq, _vhz, fn, _vn, ln,
+     complete) = _tc_ordered_combine(outs, hazard_key, hazard_val, q)
+
+    # ordered landing: old hit > hazard hit > new hit.  An old hit is
+    # trusted even when ``complete`` is False (priority already determined);
+    # such queries are excluded from the fallback so they cannot double-
+    # delete a second instance downstream.
+    ok_old = mask & fo
+    ok_hz = mask & complete & ~fo & f_hz
+    ok_new = mask & complete & ~fo & ~f_hz & fn
+
+    old_state = old_t[2].reshape(-1).at[
+        jnp.where(ok_old, lo, b_old * w)].set(TOMB, mode="drop").reshape(
+        b_old, w)
+    new_state = new_t[2].reshape(-1).at[
+        jnp.where(ok_new, ln, b_new * w)].set(TOMB, mode="drop").reshape(
+        b_new, w)
+    kill = jnp.zeros_like(hazard_live).at[
+        jnp.where(ok_hz, hzq, ch)].set(True, mode="drop")
+    hz_live = hazard_live & ~kill
+    ok = ok_old | ok_hz | ok_new
+
+    need = mask & ~fo & ~complete
+
+    def fallback(op):
+        os_, ns_, hl_, ok0 = op
+        fb_os, ok_o = ref.tc_delete_ref(old_t[0], old_t[1], os_,
+                                        rows_a_old, rows_b_old, keys, need)
+        pend = need & ~ok_o
+        eq = (keys[:, None] == hazard_key[None, :]) & hl_[None, :]
+        hz_hit = eq.any(-1) & pend
+        kill2 = jnp.zeros_like(hl_).at[
+            jnp.where(hz_hit, jnp.argmax(eq, axis=-1), ch)].set(
+            True, mode="drop")
+        fb_ns, ok_n = ref.tc_delete_ref(new_t[0], new_t[1], ns_,
+                                        rows_a_new, rows_b_new, keys,
+                                        pend & ~hz_hit)
+        return fb_os, fb_ns, hl_ & ~kill2, ok0 | ok_o | hz_hit | ok_n
+
+    old_state, new_state, hz_live, ok = jax.lax.cond(
+        need.any(), fallback, lambda op: op,
+        (old_state, new_state, hz_live, ok))
+    return old_state, new_state, hz_live, ok

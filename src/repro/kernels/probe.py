@@ -15,7 +15,7 @@ way (HashGraph-style sorted/coalesced probing):
      ``max_probes`` rounds is a vectorized compare of the query tile against
      dynamically-indexed slab lanes.
 
-Six kernels share that skeleton:
+Seven kernels share that skeleton:
 
 * ``_probe_kernel``        — single-table lookup (steady state, no rebuild).
   Emits per-query slot LOCATIONS alongside found/val, so the delete path
@@ -23,15 +23,29 @@ Six kernels share that skeleton:
   the same single pass.
 * ``_probe2_kernel``       — the fused **rebuild-epoch** lookup: ONE pass
   emits the paper's Lemma-4.1-ordered result (old table -> hazard buffer ->
-  new table).  One shared query sort keyed on ``h0_old`` drives BOTH tables'
-  slab selection: the scalar-prefetch operand is a ``[2, tiles]`` block map
-  (row 0 = old-table slab, row 1 = new-table slab, the latter anchored at the
-  tile's min ``h0_new``), and the hazard buffer is broadcast whole into VMEM
-  for a dense tile-vs-chunk compare.  This replaces the unfused path's three
-  sort+pallas passes with one of each.  The same pass also emits the ordered
-  DELETE outputs — old hit flag + slot, hazard index, new slot — so
-  ``ops.ordered_delete_fused`` lands old-tombstone / hazard-kill /
-  new-tombstone without a second probe.
+  new table).  One shared query sort keyed on ``h0_old`` drives the
+  old-table slab selection; the new table gets a **two-level tile map**
+  instead of a second sort: a first-level jnp pass (ops.py) buckets each
+  tile's new-table windows into ``nres`` resident blocks (per-tile
+  histogram + top_k — no extra sort), the scalar-prefetch operand becomes a
+  ``[1 + nres, tiles]`` block map (row 0 = old-table slab, rows 1.. = the
+  tile's resident new-table blocks), and the kernel grid is
+  ``(tiles, nres)``: iteration ``(i, r)`` probes tile ``i`` against resident
+  new block ``r`` and REDUCES hits into the revisited output block
+  (``r == 0`` initialises old + hazard + first new window, ``r > 0`` merges
+  further new windows).  Growth-heavy rebuilds (new table many slabs long)
+  therefore stay fused instead of escaping to the jnp fallback.  The hazard
+  buffer is broadcast whole into VMEM for a dense tile-vs-chunk compare.
+  The same pass also emits the ordered DELETE outputs — old hit flag +
+  slot, hazard index, new slot — so ``ops.ordered_delete_fused`` lands
+  old-tombstone / hazard-kill / new-tombstone without a second probe.
+* ``_tc_probe2_kernel``    — the same treatment for ``twochoice``: each
+  query's two row choices expand into two entries of ONE batch sorted by the
+  OLD table's row index; iteration ``(i, r)`` gathers each entry's resident
+  old row, runs the dense hazard compare, and merges the entry's new-table
+  row from the tile's ``nres`` resident new row-blocks — the whole
+  rebuild-epoch ordered lookup/delete for twochoice is one sort + one
+  pallas_call (it previously composed two fused single-table passes).
 * ``_probe_insert_kernel`` — batched linear-probe INSERT (claim-first-empty):
   phase 1 re-proves absence against the original slab states, phase 2 runs
   the claim loop on a local VMEM copy of the slab states (lowest in-tile
@@ -57,10 +71,11 @@ Six kernels share that skeleton:
   collisions.  ``chain`` stays the documented jnp reference backend.
 
 Exactness contract (all kernels): a query whose probe window escapes its
-2-block slab (hash skew), or whose new-table window misses the resident new
-slab, or whose claimed slot collides across tiles, raises ``complete=False``
-/ a conflict flag and is re-run by the jnp fallback in ops.py — the kernels
-are exact, never wrong, occasionally partial.
+2-block slab (hash skew), or whose new-table window misses ALL of its
+tile's resident blocks (new table grown past the tile map's ``nres``
+coverage), or whose claimed slot collides across tiles, raises
+``complete=False`` / a conflict flag and is re-run by the jnp fallback in
+ops.py — the kernels are exact, never wrong, occasionally partial.
 
 VMEM budget (v5e ~16 MiB/core): query tile QT=1024 (8x128 vregs, 3 x 4 KiB),
 slab block SLAB=4096 i32 words.  Single-table lookup holds 2 blocks x 3
@@ -68,7 +83,9 @@ arrays x 16 KiB = 96 KiB.  The fused probe2 doubles the table residency
 (old + new = 192 KiB) and adds the hazard buffer (3 x chunk x 4 B; 48 KiB at
 chunk=4096) plus the dense compare intermediate QT x chunk bools (4 MiB at
 chunk=4096 before vreg tiling) — keep ``chunk <= 4096`` to stay well inside
-VMEM.  Insert holds 2 key blocks + 2 state blocks + a 2*SLAB local state
+VMEM.  The two-level tile map does NOT grow residency: only one resident
+new-table block pair is in VMEM per ``(tile, r)`` grid step; the ``nres``
+axis trades grid steps (and VPU probe rounds) for coverage.  Insert holds 2 key blocks + 2 state blocks + a 2*SLAB local state
 copy = 96 KiB.  The MXU is idle throughout (VPU/memory kernels), so the
 matmul pipeline of a co-scheduled layer is undisturbed.
 """
@@ -143,49 +160,70 @@ def _probe_kernel(slab_ref,              # scalar-prefetch: [tiles] block index
     complete_ref[...] = complete
 
 
-def _probe2_kernel(slab2_ref,            # scalar-prefetch: [2, tiles]
+def _probe2_kernel(slab2_ref,            # scalar-prefetch: [1 + nres, tiles]
                    h0o_ref, h0n_ref, qk_ref,           # [QT]
                    ok0, ok1, ov0, ov1, os0, os1,       # old table blocks
-                   nk0, nk1, nv0, nv1, ns0, ns1,       # new table blocks
+                   nk0, nk1, nv0, nv1, ns0, ns1,       # new resident blocks
                    hk_ref, hv_ref, hl_ref,             # [CH] hazard buffer
                    found_ref, val_ref, complete_ref,
-                   fold_ref, locold_ref, hzidx_ref, locnew_ref,
+                   fold_ref, locold_ref, hzidx_ref, locnew_ref, cold_ref,
                    *, max_probes: int):
     """Fused rebuild-epoch lookup: Lemma 4.1 order old -> hazard -> new in a
     single pass.  ``complete`` is refined: a query resolved by the old table
     or the hazard buffer is complete even if its new-table window escaped —
     the answer is already determined by the ordered-check priority.
 
+    Grid is ``(tiles, nres)``: the second axis walks the tile's resident
+    new-table blocks (two-level tile map, rows 1.. of ``slab2``).  The
+    output block index depends only on the tile, so iterations ``r > 0``
+    revisit the same output block and REDUCE into it: ``r == 0`` computes
+    the old-table probe, the hazard compare, and the first new window;
+    later iterations merge further new windows (a query's window matches at
+    most one distinct resident block, so OR/max/where merges are exact).
+    ``c_old`` is emitted so the merge rounds (and ops.py) can extend
+    ``complete`` without re-probing the old table.
+
     Beyond found/val the kernel emits the WRITE-PATH outputs the ordered
     delete needs to tombstone in the same pass: the old-table hit flag and
     slot location, the hazard-buffer index of a live key match (-1 if none),
     and the new-table slot location (-1 when absent or the new-table window
-    escaped)."""
+    escaped).  found/val are NOT gated by ``complete`` here — ops.py's gated
+    fallback overwrites every incomplete query anyway."""
     i = pl.program_id(0)
+    r = pl.program_id(1)
     qk = qk_ref[...]
-    f_old, v_old, l_old, c_old = _window_probe(
-        slab2_ref[0, i], h0o_ref[...], qk,
-        ok0, ok1, ov0, ov1, os0, os1, max_probes)
     f_new, v_new, l_new, c_new = _window_probe(
-        slab2_ref[1, i], h0n_ref[...], qk,
+        slab2_ref[1 + r, i], h0n_ref[...], qk,
         nk0, nk1, nv0, nv1, ns0, ns1, max_probes)
 
-    # hazard buffer: dense [QT, CH] compare, whole chunk resident in VMEM
-    eq = (qk[:, None] == hk_ref[...][None, :]) & (hl_ref[...][None, :] != 0)
-    f_hz = eq.any(-1)
-    hz_i = jnp.argmax(eq, axis=-1)
-    v_hz = jnp.take(hv_ref[...], hz_i, axis=0)
+    @pl.when(r == 0)
+    def _init():
+        f_old, v_old, l_old, c_old = _window_probe(
+            slab2_ref[0, i], h0o_ref[...], qk,
+            ok0, ok1, ov0, ov1, os0, os1, max_probes)
+        # hazard buffer: dense [QT, CH] compare, whole chunk resident in VMEM
+        eq = (qk[:, None] == hk_ref[...][None, :]) & (hl_ref[...][None, :] != 0)
+        f_hz = eq.any(-1)
+        hz_i = jnp.argmax(eq, axis=-1)
+        v_hz = jnp.take(hv_ref[...], hz_i, axis=0)
 
-    found = f_old | f_hz | f_new
-    val = jnp.where(f_old, v_old, jnp.where(f_hz, v_hz, v_new))
-    complete = c_old & (f_old | f_hz | c_new)
-    found_ref[...] = found & complete
-    val_ref[...] = jnp.where(complete, val, 0)
-    complete_ref[...] = complete
-    fold_ref[...] = f_old
-    locold_ref[...] = l_old
-    hzidx_ref[...] = jnp.where(f_hz, hz_i.astype(I32), -1)
-    locnew_ref[...] = l_new   # already -1 when absent or window escaped
+        found_ref[...] = f_old | f_hz | f_new
+        val_ref[...] = jnp.where(
+            f_old, v_old, jnp.where(f_hz, v_hz, jnp.where(f_new, v_new, 0)))
+        complete_ref[...] = c_old & (f_old | f_hz | c_new)
+        fold_ref[...] = f_old
+        locold_ref[...] = l_old
+        hzidx_ref[...] = jnp.where(f_hz, hz_i.astype(I32), -1)
+        locnew_ref[...] = l_new   # already -1 when absent or window escaped
+        cold_ref[...] = c_old
+
+    @pl.when(r > 0)
+    def _merge():
+        resolved = found_ref[...]
+        found_ref[...] = resolved | f_new
+        val_ref[...] = jnp.where(f_new & ~resolved, v_new, val_ref[...])
+        complete_ref[...] = complete_ref[...] | (cold_ref[...] & c_new)
+        locnew_ref[...] = jnp.maximum(locnew_ref[...], l_new)
 
 
 def _probe_insert_kernel(slab_ref,           # scalar-prefetch: [tiles]
@@ -316,33 +354,39 @@ def probe2_tiles(old_padded, new_padded,
 
     old_padded/new_padded: (key, val, state) triples padded as in
     ``probe_lookup_tiles`` (each table padded independently).
-    slab2: [2, tiles] i32 — row 0 old-table block, row 1 new-table block.
-    hazard_live_i32: hazard liveness as i32 (pallas-friendly).
+    slab2: [1 + nres, tiles] i32 — row 0 old-table block, rows 1.. the
+    tile's resident new-table blocks (two-level tile map; repeat the last
+    entry to pad).  hazard_live_i32: hazard liveness as i32
+    (pallas-friendly).
 
-    Returns (found, val, complete, f_old, loc_old, hz_idx, loc_new); the
-    last four are the ordered-delete outputs (see ``_probe2_kernel``).
+    Returns (found, val, complete, f_old, loc_old, hz_idx, loc_new, c_old);
+    f_old/loc_old/hz_idx/loc_new are the ordered-delete outputs (see
+    ``_probe2_kernel``).  found/val are ungated — mask with ``complete``
+    (the gated fallback in ops.py does this implicitly).
     """
     q = qk_sorted.shape[0]
     (okk, ovv, oss), (nkk, nvv, nss) = old_padded, new_padded
     assert q % QT == 0 and okk.shape[0] % SLAB == 0 and nkk.shape[0] % SLAB == 0
     tiles = q // QT
+    nres = slab2.shape[0] - 1
+    assert nres >= 1
     ch = hazard_key.shape[0]
 
-    qspec = pl.BlockSpec((QT,), lambda i, s: (i,))
-    oblk0 = pl.BlockSpec((SLAB,), lambda i, s: (s[0, i],))
-    oblk1 = pl.BlockSpec((SLAB,), lambda i, s: (s[0, i] + 1,))
-    nblk0 = pl.BlockSpec((SLAB,), lambda i, s: (s[1, i],))
-    nblk1 = pl.BlockSpec((SLAB,), lambda i, s: (s[1, i] + 1,))
-    hspec = pl.BlockSpec((ch,), lambda i, s: (0,))
+    qspec = pl.BlockSpec((QT,), lambda i, r, s: (i,))
+    oblk0 = pl.BlockSpec((SLAB,), lambda i, r, s: (s[0, i],))
+    oblk1 = pl.BlockSpec((SLAB,), lambda i, r, s: (s[0, i] + 1,))
+    nblk0 = pl.BlockSpec((SLAB,), lambda i, r, s: (s[1 + r, i],))
+    nblk1 = pl.BlockSpec((SLAB,), lambda i, r, s: (s[1 + r, i] + 1,))
+    hspec = pl.BlockSpec((ch,), lambda i, r, s: (0,))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(tiles,),
+        grid=(tiles, nres),
         in_specs=[qspec, qspec, qspec,
                   oblk0, oblk1, oblk0, oblk1, oblk0, oblk1,
                   nblk0, nblk1, nblk0, nblk1, nblk0, nblk1,
                   hspec, hspec, hspec],
-        out_specs=[qspec] * 7,
+        out_specs=[qspec] * 8,
     )
     out_shape = [
         jax.ShapeDtypeStruct((q,), jnp.bool_),    # found
@@ -352,6 +396,7 @@ def probe2_tiles(old_padded, new_padded,
         jax.ShapeDtypeStruct((q,), I32),          # loc_old (padded coords)
         jax.ShapeDtypeStruct((q,), I32),          # hazard index (-1 = none)
         jax.ShapeDtypeStruct((q,), I32),          # loc_new (padded coords)
+        jax.ShapeDtypeStruct((q,), jnp.bool_),    # c_old (old window covered)
     ]
     kernel = functools.partial(_probe2_kernel, max_probes=max_probes)
     return pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
@@ -485,22 +530,17 @@ def _tc_rowslab(width: int) -> int:
     return max(SLAB // max(width, 1), 8)
 
 
-def _tc_lookup_kernel(slab_ref,            # scalar-prefetch: [tiles]
-                      row_ref, qk_ref,     # [QT] row index / key per entry
-                      tk0, tk1, tv0, tv1, ts0, ts1,   # [SLAB_R, W] blocks
-                      found_ref, val_ref, loc_ref, complete_ref,
-                      *, width: int):
-    """W-wide two-row gather lookup: each entry reads its single resident
-    row, compares all W lanes at once, and emits (found, val, loc) with
-    ``loc`` the flat slot index row*W + lane (-1 if absent)."""
-    i = pl.program_id(0)
+def _tc_row_probe(base_blk, row, qk, k0, k1, v0, v1, s0, s1, width: int):
+    """Shared W-wide row probe over one 2-row-block VMEM window.
+
+    Returns (found, val, loc, complete); ``loc`` is the flat TABLE slot
+    index row*W + lane of the LIVE hit (-1 when absent or the row escaped
+    the resident window)."""
     slab_r = _tc_rowslab(width)
-    base = slab_ref[i] * slab_r
-    off = row_ref[...] - base
-    qk = qk_ref[...]
-    keys = jnp.concatenate([tk0[...], tk1[...]], axis=0)   # [2*SLAB_R, W]
-    vals = jnp.concatenate([tv0[...], tv1[...]], axis=0)
-    stat = jnp.concatenate([ts0[...], ts1[...]], axis=0)
+    off = row - base_blk * slab_r
+    keys = jnp.concatenate([k0[...], k1[...]], axis=0)     # [2*SLAB_R, W]
+    vals = jnp.concatenate([v0[...], v1[...]], axis=0)
+    stat = jnp.concatenate([s0[...], s1[...]], axis=0)
 
     complete = (off >= 0) & (off < 2 * slab_r)
     safe = jnp.clip(off, 0, 2 * slab_r - 1)
@@ -512,10 +552,25 @@ def _tc_lookup_kernel(slab_ref,            # scalar-prefetch: [tiles]
     found = hit.any(-1) & complete
     lane = jnp.argmax(hit, axis=-1)
     val = jnp.take_along_axis(vrow, lane[:, None], axis=-1)[:, 0]
+    return (found, jnp.where(found, val, 0),
+            jnp.where(found, row * width + lane.astype(I32), -1), complete)
+
+
+def _tc_lookup_kernel(slab_ref,            # scalar-prefetch: [tiles]
+                      row_ref, qk_ref,     # [QT] row index / key per entry
+                      tk0, tk1, tv0, tv1, ts0, ts1,   # [SLAB_R, W] blocks
+                      found_ref, val_ref, loc_ref, complete_ref,
+                      *, width: int):
+    """W-wide two-row gather lookup: each entry reads its single resident
+    row, compares all W lanes at once, and emits (found, val, loc) with
+    ``loc`` the flat slot index row*W + lane (-1 if absent)."""
+    i = pl.program_id(0)
+    found, val, loc, complete = _tc_row_probe(
+        slab_ref[i], row_ref[...], qk_ref[...],
+        tk0, tk1, tv0, tv1, ts0, ts1, width)
     found_ref[...] = found
-    val_ref[...] = jnp.where(found, val, 0)
-    loc_ref[...] = jnp.where(found, row_ref[...] * width + lane.astype(I32),
-                             -1)
+    val_ref[...] = val
+    loc_ref[...] = loc
     complete_ref[...] = complete
 
 
@@ -653,3 +708,125 @@ def tc_insert_tiles(tkey: jax.Array, tstate: jax.Array,
                           interpret=interpret)(
         slab_base, row_sorted, qk_sorted, qm_sorted_i32,
         tkey, tkey, tstate, tstate)
+
+
+# ---------------------------------------------------------------------------
+# twochoice rebuild-epoch probe2: old row + hazard + new row in ONE pass
+# ---------------------------------------------------------------------------
+
+def _tc_probe2_kernel(slab2_ref,           # scalar-prefetch: [1 + nres, tiles]
+                      orow_ref, nrow_ref, qk_ref,        # [QT] per entry
+                      ok0, ok1, ov0, ov1, os0, os1,      # old row blocks
+                      nk0, nk1, nv0, nv1, ns0, ns1,      # new resident blocks
+                      hk_ref, hv_ref, hl_ref,            # [CH] hazard buffer
+                      fold_ref, vold_ref, lold_ref, cold_ref, hzidx_ref,
+                      fnew_ref, vnew_ref, lnew_ref, cnew_ref,
+                      *, width: int):
+    """Fused twochoice rebuild-epoch probe: per entry (one row choice of one
+    query) the OLD row gather, the dense hazard compare, and the NEW row
+    gather land in a single pass — the same ``(tiles, nres)`` reduction grid
+    as ``_probe2_kernel`` (row 0 of ``slab2`` anchors the sorted old
+    row-blocks; rows 1.. are the tile's resident new row-blocks, and
+    iterations ``r > 0`` merge further new windows into the revisited
+    outputs).  The kernel emits per-entry COMPONENTS (old hit/val/flat
+    slot/coverage, hazard index, new hit/val/flat slot/coverage); ops.py
+    recombines the two entries of each query with a-row priority and applies
+    the Lemma-4.1 ordering — so the same outputs serve both the ordered
+    lookup and the ordered delete."""
+    i = pl.program_id(0)
+    r = pl.program_id(1)
+    qk = qk_ref[...]
+    f_n, v_n, l_n, c_n = _tc_row_probe(
+        slab2_ref[1 + r, i], nrow_ref[...], qk,
+        nk0, nk1, nv0, nv1, ns0, ns1, width)
+
+    @pl.when(r == 0)
+    def _init():
+        f_o, v_o, l_o, c_o = _tc_row_probe(
+            slab2_ref[0, i], orow_ref[...], qk,
+            ok0, ok1, ov0, ov1, os0, os1, width)
+        eq = (qk[:, None] == hk_ref[...][None, :]) & (hl_ref[...][None, :] != 0)
+        f_hz = eq.any(-1)
+        hz_i = jnp.argmax(eq, axis=-1)
+        fold_ref[...] = f_o
+        vold_ref[...] = v_o
+        lold_ref[...] = l_o
+        cold_ref[...] = c_o
+        hzidx_ref[...] = jnp.where(f_hz, hz_i.astype(I32), -1)
+        fnew_ref[...] = f_n
+        vnew_ref[...] = v_n
+        lnew_ref[...] = l_n
+        cnew_ref[...] = c_n
+
+    @pl.when(r > 0)
+    def _merge():
+        seen = fnew_ref[...]
+        fnew_ref[...] = seen | f_n
+        vnew_ref[...] = jnp.where(f_n & ~seen, v_n, vnew_ref[...])
+        lnew_ref[...] = jnp.maximum(lnew_ref[...], l_n)
+        cnew_ref[...] = cnew_ref[...] | c_n
+
+
+def tc_probe2_tiles(old_padded, new_padded,
+                    hazard_key: jax.Array, hazard_val: jax.Array,
+                    hazard_live_i32: jax.Array,
+                    orow_sorted: jax.Array, nrow_sorted: jax.Array,
+                    qk_sorted: jax.Array, slab2: jax.Array, *,
+                    interpret: bool = True):
+    """Run the twochoice rebuild-epoch kernel over pre-sorted entries.
+
+    old_padded/new_padded: (key, val, state) triples of row-padded [Bpad, W]
+    tables (pad rows EMPTY; widths must match).  orow_sorted/nrow_sorted/
+    qk_sorted: [E] entry old-rows / new-rows / keys sorted by OLD row, E a
+    QT multiple.  slab2: [1 + nres, tiles] row-block map (row 0 old, rows
+    1.. resident new blocks).
+
+    Returns (f_old, v_old, loc_old, c_old, hz_idx, f_new, v_new, loc_new,
+    c_new) per entry; locations are flat table slots (-1 = none).
+    """
+    e = orow_sorted.shape[0]
+    (okk, ovv, oss), (nkk, nvv, nss) = old_padded, new_padded
+    width = okk.shape[1]
+    assert nkk.shape[1] == width, "old/new twochoice widths must match"
+    slab_r = _tc_rowslab(width)
+    assert e % QT == 0 and okk.shape[0] % slab_r == 0 and \
+        nkk.shape[0] % slab_r == 0
+    tiles = e // QT
+    nres = slab2.shape[0] - 1
+    assert nres >= 1
+    ch = hazard_key.shape[0]
+
+    qspec = pl.BlockSpec((QT,), lambda i, r, s: (i,))
+    oblk0 = pl.BlockSpec((slab_r, width), lambda i, r, s: (s[0, i], 0))
+    oblk1 = pl.BlockSpec((slab_r, width), lambda i, r, s: (s[0, i] + 1, 0))
+    nblk0 = pl.BlockSpec((slab_r, width), lambda i, r, s: (s[1 + r, i], 0))
+    nblk1 = pl.BlockSpec((slab_r, width), lambda i, r, s: (s[1 + r, i] + 1, 0))
+    hspec = pl.BlockSpec((ch,), lambda i, r, s: (0,))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(tiles, nres),
+        in_specs=[qspec, qspec, qspec,
+                  oblk0, oblk1, oblk0, oblk1, oblk0, oblk1,
+                  nblk0, nblk1, nblk0, nblk1, nblk0, nblk1,
+                  hspec, hspec, hspec],
+        out_specs=[qspec] * 9,
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((e,), jnp.bool_),    # f_old
+        jax.ShapeDtypeStruct((e,), I32),          # v_old
+        jax.ShapeDtypeStruct((e,), I32),          # loc_old (flat slot)
+        jax.ShapeDtypeStruct((e,), jnp.bool_),    # c_old
+        jax.ShapeDtypeStruct((e,), I32),          # hazard index (-1 = none)
+        jax.ShapeDtypeStruct((e,), jnp.bool_),    # f_new
+        jax.ShapeDtypeStruct((e,), I32),          # v_new
+        jax.ShapeDtypeStruct((e,), I32),          # loc_new (flat slot)
+        jax.ShapeDtypeStruct((e,), jnp.bool_),    # c_new
+    ]
+    kernel = functools.partial(_tc_probe2_kernel, width=width)
+    return pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
+                          interpret=interpret)(
+        slab2, orow_sorted, nrow_sorted, qk_sorted,
+        okk, okk, ovv, ovv, oss, oss,
+        nkk, nkk, nvv, nvv, nss, nss,
+        hazard_key, hazard_val, hazard_live_i32)

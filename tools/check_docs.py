@@ -1,0 +1,117 @@
+"""Docs gate: markdown link check + README snippet smoke runs.
+
+Two checks, both stdlib-only:
+
+1. **Link check** — every RELATIVE link target in every tracked ``*.md``
+   (root and ``docs/``) must exist on disk.  External (``http(s)://``,
+   ``mailto:``) and pure-anchor (``#...``) links are skipped; a relative
+   link's own ``#fragment`` is stripped before the existence check.
+
+2. **Snippet smoke** — every fenced ``bash``/``sh``/``python`` block in
+   ``README.md`` is EXECUTED from the repo root (bash via ``bash -c``,
+   python via the current interpreter) and must exit 0, so the quickstart
+   can never rot.  A block immediately preceded by the HTML comment
+   ``<!-- docs-smoke: skip (reason) -->`` is not executed — reserved for
+   commands another CI job already runs end-to-end (e.g. the full tier-1
+   suite, which IS the test job), never for convenience.
+
+Exit status: 0 clean, 1 failure(s).  Run from the repo root:
+
+    PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import re
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(
+    r"(?P<prefix>(?:<!--\s*docs-smoke:\s*skip[^>]*-->\s*\n)?)"
+    r"```(?P<lang>bash|sh|python)\n(?P<body>.*?)```",
+    re.DOTALL)
+SKIP_DIRS = {".git", "__pycache__", ".ruff_cache", ".pytest_cache", "node_modules"}
+SNIPPET_TIMEOUT_S = 1800
+
+
+def iter_markdown():
+    for root, dirs, files in os.walk(REPO):
+        dirs[:] = [d for d in dirs if d not in SKIP_DIRS]
+        for f in files:
+            if f.endswith(".md"):
+                yield pathlib.Path(root) / f
+
+
+def check_links(failures: list[str]) -> int:
+    checked = 0
+    for md in iter_markdown():
+        text = md.read_text()
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            checked += 1
+            if not (md.parent / rel).exists():
+                failures.append(
+                    f"{md.relative_to(REPO)}: broken link -> {target}")
+    return checked
+
+
+def run_snippets(failures: list[str]) -> int:
+    readme = REPO / "README.md"
+    if not readme.exists():
+        failures.append("README.md missing")
+        return 0
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"src{os.pathsep}" + env.get("PYTHONPATH", "")
+    ran = 0
+    for m in FENCE_RE.finditer(readme.read_text()):
+        lang, body = m.group("lang"), m.group("body")
+        head = body.strip().splitlines()[0] if body.strip() else "<empty>"
+        if m.group("prefix"):
+            print(f"  skip  [{lang}] {head}")
+            continue
+        ran += 1
+        if lang in ("bash", "sh"):
+            cmd = ["bash", "-euo", "pipefail", "-c", body]
+        else:
+            cmd = [sys.executable, "-c", body]
+        print(f"  run   [{lang}] {head}")
+        try:
+            proc = subprocess.run(cmd, cwd=REPO, env=env,
+                                  capture_output=True, text=True,
+                                  timeout=SNIPPET_TIMEOUT_S)
+        except subprocess.TimeoutExpired:
+            failures.append(f"README.md snippet timed out: {head}")
+            continue
+        if proc.returncode != 0:
+            tail = (proc.stderr or proc.stdout).strip().splitlines()[-8:]
+            failures.append(
+                f"README.md snippet failed (rc={proc.returncode}): {head}\n"
+                + "\n".join(f"      {ln}" for ln in tail))
+    return ran
+
+
+def main() -> int:
+    failures: list[str] = []
+    nlinks = check_links(failures)
+    print(f"link check: {nlinks} relative links checked")
+    nsnips = run_snippets(failures)
+    print(f"snippet smoke: {nsnips} snippet(s) executed")
+    if failures:
+        print(f"\nDOCS CHECK FAILED: {len(failures)} problem(s)",
+              file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("docs check clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
