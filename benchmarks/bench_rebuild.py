@@ -46,7 +46,7 @@ def run(ns=(2_000, 8_000, 32_000), alpha=20, *, quiet=False):
     return rows
 
 
-def run_fused_probe(batch=4096, n_items=3_000, *, iters=3, quiet=False,
+def run_fused_probe(batch=4096, n_items=3_000, *, iters=5, quiet=False,
                     out_path=None):
     """fused=on|off rebuild-epoch lookup comparison for the linear backend.
 
@@ -117,7 +117,7 @@ def run_fused_probe(batch=4096, n_items=3_000, *, iters=3, quiet=False,
 
 
 def run_growth_escape(batch=4096, n_items=3_000, growths=(1, 4, 16), *,
-                      iters=3, quiet=False, out_path=None):
+                      iters=5, quiet=False, out_path=None):
     """Fallback-escape rate of the fused rebuild-epoch probe vs new-table
     GROWTH factor — the two-level tile-map acceptance.
 
@@ -253,7 +253,7 @@ def _count_passes(closed_jaxpr):
     return rec(closed_jaxpr.jaxpr)
 
 
-def run_fused_writes(batch=4096, n_items=3_000, *, iters=3, quiet=False,
+def run_fused_writes(batch=4096, n_items=3_000, *, iters=5, quiet=False,
                      out_path=None):
     """fused=on vs jnp write-path comparison on the delete+rebuild mixed
     workload (PR 2 acceptance).
@@ -404,20 +404,214 @@ def run_fused_writes(batch=4096, n_items=3_000, *, iters=3, quiet=False,
     return result
 
 
+def run_chain_fused(batch=4096, n_items=3_000, *, iters=5, quiet=False,
+                    out_path=None):
+    """Arena-sorted chain backend, fused vs the pointer-chasing reference,
+    on the mid-rebuild mixed workload (the PR 4 tentpole acceptance: the
+    LAST backend onto the fused path).
+
+    One mid-rebuild step = ordered lookup + ordered DELETE + insert (new
+    table) + rebuild chunk EXTRACT + hazard LANDING.  The fused arm runs
+    the chain kernels (``chain_ordered_lookup`` / ``chain_ordered_delete``
+    / ``chain_insert_fused`` / ``extract_chunk_fused``) over the
+    bucket-sorted arena; the jnp arm is the reference-oracle composition
+    the unfused path executes (``ref.chain_*_ref`` — each pointer hop is a
+    dependent arena gather, which is exactly what ``_count_passes`` charges
+    for).  The acceptance metric is the serialized table-pass reduction
+    (>= 1.5x gated); the per-op 1-sort/1-pallas_call budget is asserted as
+    exact structural counts over the whole step (4 sorts + 5 pallas_calls:
+    extract needs no sort).  Results land in BENCH_chain_fused.json;
+    exactness of the fused arm is cross-checked against the jnp arm in-run.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import buckets, dhash, hashing
+    from repro.core.struct_utils import replace
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(0)
+    d = dhash.make("chain", capacity=int(n_items * 1.5), chunk=256, seed=1,
+                   fused=True)
+    present = rng.choice(UNIVERSE, size=n_items, replace=False).astype(np.int32)
+    keys = jnp.asarray(present)
+    ins = jax.jit(dhash.insert)
+    for i in range(0, n_items, 4096):
+        d, _ = ins(d, keys[i:i + 4096], keys[i:i + 4096])
+    d = dhash.rebuild_start(d, seed=9)   # compacts the old arena
+    d = jax.jit(dhash.rebuild_chunk)(d)
+    d = jax.jit(dhash.rebuild_extract)(d)   # populated hazard window
+
+    mc = d.old.max_chain
+    ch = d.chunk
+    nb_new = d.new.nbuckets
+    arena_old = d.old.arena
+    hfn_new = d.new.hfn
+    qs = jnp.asarray(np.concatenate([
+        rng.choice(present, batch // 2),
+        rng.integers(1, UNIVERSE, batch - batch // 2)]).astype(np.int32))
+    dk = jnp.asarray(np.concatenate([
+        rng.choice(present, batch // 8),
+        rng.integers(1, UNIVERSE, batch // 8)]).astype(np.int32))
+    ik = jnp.asarray(rng.choice(
+        np.arange(UNIVERSE, UNIVERSE + 10 * batch), batch // 4,
+        replace=False).astype(np.int32))
+    iv = ik * 3
+    win_d = buckets.batch_winners(dk, jnp.ones(dk.shape, bool))
+    win_i = buckets.batch_winners(ik, jnp.ones(ik.shape, bool))
+    bqo_q = hashing.bucket_of(d.old.hfn, qs, d.old.nbuckets)
+    bqn_q = hashing.bucket_of(hfn_new, qs, nb_new)
+    bqo_d = hashing.bucket_of(d.old.hfn, dk, d.old.nbuckets)
+    bqn_d = hashing.bucket_of(hfn_new, dk, nb_new)
+    bqn_i = hashing.bucket_of(hfn_new, ik, nb_new)
+
+    def fused_step(told, tnew, hk, hv, hl, cursor):
+        po, pn = buckets._chain_parts(told), buckets._chain_parts(tnew)
+        f, v = ops.chain_ordered_lookup(*po, *pn, hk, hv, hl, bqo_q, bqn_q,
+                                        qs, max_chain=mc)
+        os_, ns_, hl, ok_d = ops.chain_ordered_delete(
+            *po, *pn, hk, hv, hl, bqo_d, bqn_d, dk, win_d, max_chain=mc)
+        told = replace(told, astate=os_)
+        tnew = replace(tnew, astate=ns_)
+        pn = buckets._chain_parts(tnew)
+        ak, av, ast, an, hd, ft, ok_i = ops.chain_insert_fused(
+            pn[0], pn[1], pn[2], tnew.free_stack, tnew.free_top, bqn_i,
+            ik, iv, win_i, max_chain=mc)
+        tnew = replace(tnew, akey=ak, aval=av, astate=ast, anext=an,
+                       heads=hd, free_top=ft)
+        os2, hk2, hv2, hl2, cur2 = ops.extract_chunk_fused(
+            told.akey, told.aval, told.astate, cursor, chunk=ch)
+        told = replace(told, astate=os2)
+        bq_h = hashing.bucket_of(hfn_new, hk2, nb_new)
+        pn = buckets._chain_parts(tnew)
+        ak, av, ast, an, hd, ft, _ = ops.chain_insert_fused(
+            pn[0], pn[1], pn[2], tnew.free_stack, tnew.free_top, bq_h,
+            hk2, hv2, hl2, max_chain=mc)
+        tnew = replace(tnew, akey=ak, aval=av, astate=ast, anext=an,
+                       heads=hd, free_top=ft)
+        return f, v, ok_d, ok_i, told, tnew, cur2
+
+    def jnp_step(told, tnew, hk, hv, hl, cursor):
+        ol = (told.akey, told.aval, told.astate)
+        olk = (told.anext, told.heads)
+        nl = (tnew.akey, tnew.aval, tnew.astate)
+        nlk = (tnew.anext, tnew.heads)
+        f, v = ref.chain_ordered_lookup_ref(ol, olk, nl, nlk, hk, hv, hl,
+                                            bqo_q, bqn_q, qs, mc)
+        os_, ok_o = ref.chain_delete_ref(told.akey, told.aval, told.astate,
+                                         told.anext, told.heads, bqo_d, dk,
+                                         win_d, mc)
+        pend = win_d & ~ok_o
+        eq = (dk[:, None] == hk[None, :]) & hl[None, :]
+        hz_hit = eq.any(-1) & pend
+        kill = jnp.zeros_like(hl).at[
+            jnp.where(hz_hit, jnp.argmax(eq, axis=-1), ch)].set(
+            True, mode="drop")
+        hl = hl & ~kill
+        ns_, ok_n = ref.chain_delete_ref(tnew.akey, tnew.aval, tnew.astate,
+                                         tnew.anext, tnew.heads, bqn_d, dk,
+                                         pend & ~hz_hit, mc)
+        ok_d = ok_o | hz_hit | ok_n
+        ak, av, ast, an, hd, ft, ok_i = ref.chain_insert_ref(
+            tnew.akey, tnew.aval, ns_, tnew.anext, tnew.heads,
+            tnew.free_stack, tnew.free_top, bqn_i, ik, iv, win_i, mc)
+        # extract (the jnp gather scan of chain_extract_chunk)
+        pos = cursor + jnp.arange(ch, dtype=jnp.int32)
+        valid = pos < arena_old
+        cpos = jnp.where(valid, pos, 0)
+        live = valid & (os_[cpos] == 1)
+        hk2 = jnp.where(live, told.akey[cpos], 0)
+        hv2 = jnp.where(live, told.aval[cpos], 0)
+        os2 = os_.at[jnp.where(live, cpos, arena_old)].set(3, mode="drop")
+        cur2 = jnp.minimum(cursor + ch, arena_old)
+        told = replace(told, astate=os2)
+        bq_h = hashing.bucket_of(hfn_new, hk2, nb_new)
+        ak, av, ast, an, hd, ft, _ = ref.chain_insert_ref(
+            ak, av, ast, an, hd, tnew.free_stack, ft, bq_h, hk2, hv2,
+            live, mc)
+        tnew = replace(tnew, akey=ak, aval=av, astate=ast, anext=an,
+                       heads=hd, free_top=ft)
+        return f, v, ok_d, ok_i, told, tnew, cur2
+
+    args = (d.old, d.new, d.hazard_key, d.hazard_val, d.hazard_live,
+            d.cursor)
+    passes, walls, counts = {}, {}, {}
+    for name, fn in (("fused", fused_step), ("jnp", jnp_step)):
+        jx = jax.make_jaxpr(fn)(*args)
+        passes[name] = _count_passes(jx)
+        counts[name] = count_primitives(jx, ("sort", "pallas_call"))
+        walls[name] = timeit(jax.jit(fn), *args, warmup=1, iters=iters) * 1e6
+        if not quiet:
+            print(f"chain_fused/{name:5s} Q={batch} passes={passes[name]:4d} "
+                  f"{walls[name]:9.0f} us")
+
+    # structural budget over the whole fused step: one sort + one
+    # pallas_call per batch op (lookup, delete, insert, land), extract is
+    # sort-free — 4 sorts + 5 pallas_calls, pinned exactly by the perf gate
+    assert counts["fused"] == {"sort": 4, "pallas_call": 5}, counts["fused"]
+    assert counts["jnp"]["pallas_call"] == 0
+
+    # exactness cross-check: both arms agree on every per-query observable
+    # and on the surviving membership (arena layouts differ only in the
+    # landing order of the compacted vs position-aligned hazard chunk)
+    out_f = jax.jit(fused_step)(*args)
+    out_j = jax.jit(jnp_step)(*args)
+    assert bool((out_f[0] == out_j[0]).all())            # lookup found
+    assert bool((out_f[1] == out_j[1]).all())            # lookup vals
+    assert bool((out_f[2] == out_j[2]).all())            # delete ok
+    assert bool((out_f[3] == out_j[3]).all())            # insert ok
+    assert bool((out_f[4].astate == out_j[4].astate).all())   # old arena
+    assert int(out_f[6]) == int(out_j[6])                # cursor
+    assert int(buckets.chain_count_live(out_f[5])) == \
+        int(buckets.chain_count_live(out_j[5]))
+    probe = jnp.concatenate([ik, qs[:512]])
+    bq_p = hashing.bucket_of(hfn_new, probe, nb_new)
+
+    def new_membership(tn):
+        return ref.chain_lookup_ref(tn.akey, tn.aval, tn.astate, tn.anext,
+                                    tn.heads, bq_p, probe, mc)
+
+    f_f, v_f, _ = new_membership(out_f[5])
+    f_j, v_j, _ = new_membership(out_j[5])
+    np.testing.assert_array_equal(np.asarray(f_f), np.asarray(f_j))
+    fm = np.asarray(f_j)
+    np.testing.assert_array_equal(np.asarray(v_f)[fm], np.asarray(v_j)[fm])
+
+    ratio = passes["jnp"] / passes["fused"]
+    result = {"batch": batch, "n_items": n_items, "chunk": ch,
+              "interpret": True,
+              "workload": "lookup+insert+delete+extract+land (mid-rebuild, "
+                          "chain backend)",
+              "fused": {"passes": passes["fused"],
+                        "wall_us": walls["fused"], **counts["fused"]},
+              "jnp": {"passes": passes["jnp"], "wall_us": walls["jnp"]},
+              "pass_ratio": ratio}
+    assert ratio >= 1.5, f"chain fused pass reduction regressed: {ratio:.2f}x"
+    out = (pathlib.Path(out_path) if out_path
+           else _REPO_ROOT / "BENCH_chain_fused.json")
+    out.write_text(json.dumps(result, indent=2) + "\n")
+    if not quiet:
+        print(f"[summary] chain fused pass reduction {ratio:.2f}x "
+              f"(>=1.5x required) -> {out}")
+    return result
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--ns", type=int, nargs="*", default=[2_000, 8_000, 32_000])
     ap.add_argument("--alpha", type=int, default=20)
     ap.add_argument("--fused", action="store_true",
                     help="also run the fused=on|off rebuild-epoch probe, "
-                         "write-path, and growth-escape comparisons (writes "
-                         "BENCH_fused_probe.json + BENCH_fused_writes.json "
+                         "write-path, chain-backend, and growth-escape "
+                         "comparisons (writes BENCH_fused_probe.json + "
+                         "BENCH_fused_writes.json + BENCH_chain_fused.json "
                          "+ BENCH_growth_escape.json)")
     args = ap.parse_args(argv)
     rows = run(tuple(args.ns), args.alpha)
     if args.fused:
         run_fused_probe()
         run_fused_writes()
+        run_chain_fused()
         run_growth_escape()
     return rows
 

@@ -1,10 +1,10 @@
 """CI perf-regression gate: fresh BENCH_*.json vs the committed baselines.
 
 Every benchmark that writes a ``BENCH_*.json`` artifact (bench_rebuild's
-fused-probe and fused-writes comparisons today) commits its result at the
-repo root; CI snapshots those committed files, re-runs
-``benchmarks.run --quick``, and calls this script to diff the fresh
-artifacts against the snapshot.
+fused-probe, fused-writes, chain-fused, and growth-escape comparisons
+today) commits its result at the repo root; CI snapshots those committed
+files, re-runs ``benchmarks.run --quick``, and calls this script to diff
+the fresh artifacts against the snapshot.
 
 Gate semantics, per leaf key:
 
@@ -22,14 +22,19 @@ Gate semantics, per leaf key:
   to 0.02, so benign hash-seed jitter passes but a coverage regression in
   the two-level tile map fails).
 * **timings** (``wall_us``) must not grow by more than
-  ``--time-tolerance`` (default 0.15).  The committed baselines are
+  ``--time-tolerance`` (default 0.15).  All wall clocks follow the
+  MIN-OF-5 protocol (``common.timeit``: five individually-synced repeats,
+  minimum reported) — contention only ever adds time, so the min is the
+  noise-robust estimator and the committed baselines carry far less
+  run-to-run jitter than the old mean-of-N numbers.  The baselines are
   produced by a CI-runner-class container (same pinned deps, CPU
-  interpret mode), so the workflow passes a CALIBRATED cross-runner band
+  interpret mode), and the workflow passes a CALIBRATED cross-runner band
   of 2.0: measured jitter of the interpreted kernels is <1.3x run-to-run
   on an idle machine and up to ~2.6x worst-case under scheduler
   contention, so a genuine slowdown past 3x fails while runner noise does
   not.  (The band was 3.0 — a >4x allowance — before the baselines were
-  regenerated on runner-class hardware.)
+  regenerated on runner-class hardware; min-of-5 is the ROADMAP's
+  tightening step on top.)
 
 Exit status: 0 clean, 1 regression(s) found, 2 usage/setup error.
 """

@@ -103,20 +103,32 @@ def growth_escape():
              f"{row['escape_rate']:.4f}_escape_rate")
 
 
+def chain_fused():
+    from benchmarks.bench_rebuild import run_chain_fused
+    r = run_chain_fused(batch=4096, n_items=3_000, quiet=True)
+    for name in ("fused", "jnp"):
+        _row(f"chain_fused/{name}/q{r['batch']}", r[name]["wall_us"],
+             f"{r[name]['passes']}passes")
+    _row("chain_fused/pass_ratio", 0.0,
+         f"{r['pass_ratio']:.2f}x_fewer_passes")
+
+
 TABLES = [fig2_throughput, fig3_rebuild, fig4_portability, s62_oversubscribe,
           s1_attack, moe_router, kvcache_rehash, fused_probe, fused_writes,
-          growth_escape]
+          chain_fused, growth_escape]
 
 
 def quick() -> None:
     """CI smoke mode: exercises the perf harness end-to-end in minutes —
-    the fused-probe, fused-writes, and growth-escape acceptance checks
-    (pass counts + escape rates + their BENCH_*.json artifacts) plus a tiny
-    fig3 rebuild sweep so perf code can't silently rot."""
+    the fused-probe, fused-writes, chain-fused, and growth-escape
+    acceptance checks (pass counts + escape rates + their BENCH_*.json
+    artifacts) plus a tiny fig3 rebuild sweep so perf code can't silently
+    rot."""
     print("name,us_per_call,derived")
     t0 = time.time()
     fused_probe()
     fused_writes()
+    chain_fused()
     growth_escape()
     from benchmarks.bench_rebuild import run as rebuild_run
     for name, n, dt in rebuild_run(ns=(2_000,), quiet=True):

@@ -11,8 +11,13 @@ observable set semantics:
 * ``chain``     — arena-based chained buckets: the faithful analogue of the
                   paper's Michael-list buckets (insert-at-head, logical
                   deletion via state tags, deferred physical reclamation).
-                  Traversal is lock-step across the query batch: one gather
-                  per hop, bounded by ``max_chain``.
+                  jnp traversal is lock-step across the query batch: one
+                  gather per hop, bounded by ``max_chain``.  The FUSED path
+                  never chases pointers: the arena is kept bucket-sorted
+                  and tombstone-compacted (``chain_compact_fused``), so
+                  probes are per-bucket ``(start, len)`` segment windows —
+                  the same slab reductions as the other backends — with a
+                  dense-window dirty tail for post-compaction inserts.
 
 Slot/node states mirror the paper's two flag bits:
   LIVE                ~ reachable node
@@ -41,7 +46,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import hashing
-from repro.core.struct_utils import pytree_dataclass
+from repro.core.struct_utils import pytree_dataclass, replace
 
 I32 = jnp.int32
 EMPTY, LIVE, TOMB, MIGRATED = I32(0), I32(1), I32(2), I32(3)
@@ -497,16 +502,37 @@ class ChainTable:
     heads: jax.Array  # [B] i32 (-1 empty)
     free_stack: jax.Array  # [N] i32 - free node indices live at [0, free_top)
     free_top: jax.Array    # scalar i32
+    # arena-sorted layout metadata (the fused path's view of the same arena):
+    # [0, sorted_upto) holds the bucket-sorted, tombstone-compacted segments
+    # (bucket b's nodes at [bstart[b], bstart[b]+blen[b])), and nodes
+    # allocated SINCE the last compaction occupy the contiguous "dirty" tail
+    # [sorted_upto, arena - free_top).  ``chain_dirty(t)`` derives the dirty
+    # count; ``chain_compact_fused`` restores dirty == 0.
+    bstart: jax.Array      # [B] i32 - sorted-segment start per bucket
+    blen: jax.Array        # [B] i32 - sorted-segment length per bucket
+    sorted_upto: jax.Array # scalar i32 - arena prefix in bucket-sorted order
 
 
 def chain_make(nbuckets: int, arena: int, hfn: hashing.HashFn, max_chain: int = 64) -> ChainTable:
     n = arena
+    # free_stack is DESCENDING so pops allocate ascending positions: the
+    # allocated region is always the contiguous prefix [0, n - free_top),
+    # which is what keeps the fused path's dirty tail a dense window.
     return ChainTable(
         nbuckets=nbuckets, arena=n, max_chain=max_chain, hfn=hfn,
         akey=jnp.zeros((n,), I32), aval=jnp.zeros((n,), I32),
         anext=jnp.full((n,), -1, I32), astate=jnp.zeros((n,), I32),
         heads=jnp.full((nbuckets,), -1, I32),
-        free_stack=jnp.arange(n, dtype=I32), free_top=jnp.asarray(n, I32))
+        free_stack=n - 1 - jnp.arange(n, dtype=I32),
+        free_top=jnp.asarray(n, I32),
+        bstart=jnp.zeros((nbuckets,), I32), blen=jnp.zeros((nbuckets,), I32),
+        sorted_upto=jnp.asarray(0, I32))
+
+
+def chain_dirty(t: ChainTable) -> jax.Array:
+    """Scalar i32: nodes allocated since the last compaction (they live at
+    [sorted_upto, arena - free_top) — allocation is always a prefix)."""
+    return t.arena - t.free_top - t.sorted_upto
 
 
 def chain_lookup(t: ChainTable, keys: jax.Array, bucket: jax.Array | None = None):
@@ -572,14 +598,12 @@ def chain_insert(t: ChainTable, keys: jax.Array, vals: jax.Array, mask: jax.Arra
     akey = t.akey.at[wnode].set(keys, mode="drop")
     aval = t.aval.at[wnode].set(vals, mode="drop")
     astate = t.astate.at[wnode].set(LIVE, mode="drop")
-    t1 = ChainTable(nbuckets=t.nbuckets, arena=n, max_chain=t.max_chain, hfn=t.hfn,
-                    akey=akey, aval=aval, anext=t.anext, astate=astate,
-                    heads=t.heads, free_stack=t.free_stack, free_top=t.free_top)
+    t1 = replace(t, akey=akey, aval=aval, astate=astate)
     anext, heads = _chain_link(t1, keys, node, can, bucket)
     free_used = jnp.sum(can.astype(I32))
-    t2 = ChainTable(nbuckets=t.nbuckets, arena=n, max_chain=t.max_chain, hfn=t.hfn,
-                    akey=akey, aval=aval, anext=anext, astate=astate,
-                    heads=heads, free_stack=t.free_stack, free_top=t.free_top - free_used)
+    # new nodes extend the dirty tail; the sorted segments are untouched
+    t2 = replace(t1, anext=anext, heads=heads,
+                 free_top=t.free_top - free_used)
     return t2, can
 
 
@@ -590,9 +614,7 @@ def chain_delete(t: ChainTable, keys: jax.Array, mask: jax.Array,
     ok = winner & found
     wloc = jnp.where(ok, loc, t.arena)
     astate = t.astate.at[wloc].set(TOMB, mode="drop")
-    return ChainTable(nbuckets=t.nbuckets, arena=t.arena, max_chain=t.max_chain, hfn=t.hfn,
-                      akey=t.akey, aval=t.aval, anext=t.anext, astate=astate,
-                      heads=t.heads, free_stack=t.free_stack, free_top=t.free_top), ok
+    return replace(t, astate=astate), ok
 
 
 def chain_extract_chunk(t: ChainTable, cursor: jax.Array, n: int):
@@ -604,10 +626,7 @@ def chain_extract_chunk(t: ChainTable, cursor: jax.Array, n: int):
     hvals = jnp.where(live, t.aval[cpos], 0)
     astate = t.astate.at[jnp.where(live, cpos, t.arena)].set(MIGRATED, mode="drop")
     new_cursor = jnp.minimum(cursor + n, t.arena)
-    t = ChainTable(nbuckets=t.nbuckets, arena=t.arena, max_chain=t.max_chain, hfn=t.hfn,
-                   akey=t.akey, aval=t.aval, anext=t.anext, astate=astate,
-                   heads=t.heads, free_stack=t.free_stack, free_top=t.free_top)
-    return t, hkeys, hvals, live, new_cursor
+    return replace(t, astate=astate), hkeys, hvals, live, new_cursor
 
 
 def chain_compact(t: ChainTable) -> ChainTable:
@@ -628,12 +647,148 @@ def chain_count_live(t: ChainTable):
 
 def chain_clear(t: ChainTable) -> ChainTable:
     n = t.arena
-    return ChainTable(
-        nbuckets=t.nbuckets, arena=n, max_chain=t.max_chain, hfn=t.hfn,
-        akey=jnp.zeros((n,), I32), aval=jnp.zeros((n,), I32),
+    return replace(
+        t, akey=jnp.zeros((n,), I32), aval=jnp.zeros((n,), I32),
         anext=jnp.full((n,), -1, I32), astate=jnp.zeros((n,), I32),
         heads=jnp.full((t.nbuckets,), -1, I32),
-        free_stack=jnp.arange(n, dtype=I32), free_top=jnp.asarray(n, I32))
+        free_stack=n - 1 - jnp.arange(n, dtype=I32),
+        free_top=jnp.asarray(n, I32),
+        bstart=jnp.zeros((t.nbuckets,), I32),
+        blen=jnp.zeros((t.nbuckets,), I32),
+        sorted_upto=jnp.asarray(0, I32))
+
+
+# -- Pallas-accelerated chain paths (kernels/ops.py): the arena is kept in
+# bucket-sorted, tombstone-compacted order (per-bucket (start, len) segments
+# replace head/next pointer chasing on the read path), so chain probes are
+# the same slab-window reductions the other backends use.  Nodes inserted
+# since the last compaction live in the contiguous dirty tail and are
+# resolved by a dense window compare (the hazard-buffer treatment); when the
+# tail outgrows ops.DIRTY_CAP the ops escape to the pointer-chasing jnp
+# reference via the gated fallback ---------------------------------------
+
+def _chain_parts(t: ChainTable):
+    """The raw-array views the chain ops consume: arena triple, link pair
+    (for the pointer-chasing fallback), segment quad."""
+    return ((t.akey, t.aval, t.astate), (t.anext, t.heads),
+            (t.bstart, t.blen, t.sorted_upto, chain_dirty(t)))
+
+
+def chain_lookup_fused(t: ChainTable, keys: jax.Array, *,
+                       interpret: bool = True):
+    """Kernel-backed chain lookup over the arena-sorted layout.  Returns
+    (found, vals, loc) — ``loc`` is the arena node index (-1 if absent), so
+    the fused delete never probes twice."""
+    from repro.kernels import ops
+    b = hashing.bucket_of(t.hfn, keys, t.nbuckets)
+    return ops.chain_lookup_fused(*_chain_parts(t), b, keys,
+                                  max_chain=t.max_chain, interpret=interpret)
+
+
+def chain_insert_fused(t: ChainTable, keys: jax.Array, vals: jax.Array,
+                       mask: jax.Array, *, interpret: bool = True):
+    """Kernel-backed chain insert: batch_winners dedup, ONE sort keyed on
+    the bucket (it orders both the presence-probe tiles AND the head
+    linking), one presence pallas_call, then vectorized tail allocation +
+    segmented head relink — no pointer chasing.  New nodes extend the dirty
+    tail; call ``chain_maybe_compact`` to restore the sorted invariant."""
+    from repro.kernels import ops
+    winner = batch_winners(keys, mask)
+    b = hashing.bucket_of(t.hfn, keys, t.nbuckets)
+    arena_t, links, seg = _chain_parts(t)
+    akey, aval, astate, anext, heads, free_top, ok = ops.chain_insert_fused(
+        arena_t, links, seg, t.free_stack, t.free_top, b, keys, vals, winner,
+        max_chain=t.max_chain, interpret=interpret)
+    return replace(t, akey=akey, aval=aval, astate=astate, anext=anext,
+                   heads=heads, free_top=free_top), ok
+
+
+def chain_delete_fused(t: ChainTable, keys: jax.Array, mask: jax.Array, *,
+                       interpret: bool = True):
+    """Kernel-backed chain delete: the location-emitting probe (sorted
+    segment window + dirty-tail compare) tombstones in ONE pass."""
+    from repro.kernels import ops
+    winner = batch_winners(keys, mask)
+    b = hashing.bucket_of(t.hfn, keys, t.nbuckets)
+    astate, ok = ops.chain_delete_fused(*_chain_parts(t), b, keys, winner,
+                                        max_chain=t.max_chain,
+                                        interpret=interpret)
+    return replace(t, astate=astate), ok
+
+
+def chain_ordered_lookup_fused(t_old: ChainTable, t_new: ChainTable,
+                               hazard_key: jax.Array, hazard_val: jax.Array,
+                               hazard_live: jax.Array, keys: jax.Array, *,
+                               interpret: bool = True):
+    """Kernel-backed chain rebuild-epoch lookup: the whole ordered check
+    (old -> hazard -> new, Lemma 4.1) in ONE sort + ONE chain_probe2
+    pallas_call, with the PR 3 two-level tile map covering grown new
+    arenas.  Returns (found, vals)."""
+    from repro.kernels import ops
+    b_old = hashing.bucket_of(t_old.hfn, keys, t_old.nbuckets)
+    b_new = hashing.bucket_of(t_new.hfn, keys, t_new.nbuckets)
+    return ops.chain_ordered_lookup(
+        *_chain_parts(t_old), *_chain_parts(t_new),
+        hazard_key, hazard_val, hazard_live, b_old, b_new, keys,
+        max_chain=max(t_old.max_chain, t_new.max_chain), interpret=interpret)
+
+
+def chain_ordered_delete_fused(t_old: ChainTable, t_new: ChainTable,
+                               hazard_key: jax.Array, hazard_val: jax.Array,
+                               hazard_live: jax.Array, keys: jax.Array,
+                               mask: jax.Array, *, interpret: bool = True):
+    """Kernel-backed chain rebuild-epoch delete (paper Alg. 5): the SAME
+    single chain_probe2 pass resolves old-node / hazard-index / new-node;
+    three scatters land the result.  Returns the raw
+    (old_astate', new_astate', hazard_live', ok[Q])."""
+    from repro.kernels import ops
+    winner = batch_winners(keys, mask)
+    b_old = hashing.bucket_of(t_old.hfn, keys, t_old.nbuckets)
+    b_new = hashing.bucket_of(t_new.hfn, keys, t_new.nbuckets)
+    return ops.chain_ordered_delete(
+        *_chain_parts(t_old), *_chain_parts(t_new),
+        hazard_key, hazard_val, hazard_live, b_old, b_new, keys, winner,
+        max_chain=max(t_old.max_chain, t_new.max_chain), interpret=interpret)
+
+
+def chain_extract_chunk_fused(t: ChainTable, cursor: jax.Array, n: int, *,
+                              interpret: bool = True):
+    """Kernel-backed rebuild chunk scan: the arena is a flat array, so the
+    extract kernel runs verbatim (positions are scan order)."""
+    from repro.kernels import ops
+    if n > ops.SLAB:   # window contract; fall back to the jnp scan
+        return chain_extract_chunk(t, cursor, n)
+    astate, hk, hv, hl, cur = ops.extract_chunk_fused(
+        t.akey, t.aval, t.astate, cursor, chunk=n, interpret=interpret)
+    return replace(t, astate=astate), hk, hv, hl, cur
+
+
+def chain_compact_fused(t: ChainTable) -> ChainTable:
+    """Restore the arena-sorted invariant: ONE segmented sort keyed on
+    (bucket, arena index) with dead nodes pushed to the end, the compaction
+    gather, per-bucket (start, len) offsets, and a vectorized pointer
+    rebuild (node i chains to i+1 within its bucket).  Physically reclaims
+    tombstones/migrated nodes; dirty count drops to 0."""
+    from repro.kernels import ops
+    b = hashing.bucket_of(t.hfn, t.akey, t.nbuckets)
+    (akey, aval, astate, anext, heads, free_stack, free_top, bstart, blen,
+     sorted_upto) = ops.chain_compact_fused(t.akey, t.aval, t.astate, b,
+                                            nbuckets=t.nbuckets)
+    return replace(t, akey=akey, aval=aval, astate=astate, anext=anext,
+                   heads=heads, free_stack=free_stack, free_top=free_top,
+                   bstart=bstart, blen=blen, sorted_upto=sorted_upto)
+
+
+def chain_maybe_compact(t: ChainTable, *,
+                        threshold: int | None = None) -> ChainTable:
+    """Compaction trigger: re-sort the arena iff the dirty tail has outgrown
+    the dense-window coverage (``ops.DIRTY_CAP`` by default) — the gate that
+    keeps the fused chain ops on the kernel path.  cond-gated, so the clean
+    steady state never pays the sort."""
+    from repro.kernels import ops
+    thresh = ops.DIRTY_CAP if threshold is None else threshold
+    return jax.lax.cond(chain_dirty(t) > thresh, chain_compact_fused,
+                        lambda tt: tt, t)
 
 
 # ---------------------------------------------------------------------------

@@ -58,14 +58,16 @@ class DHashState:
     chunk: int                  # hazard buffer capacity (entries per rebuild chunk)
     fwd_hazard: bool            # linear backend: resolve hazard hits via
                                 # MIGRATED-slot forwarding (zero extra passes)
-    fused: bool                 # linear/twochoice: route the FULL op surface
-                                # (lookup/insert/delete + rebuild extract and
-                                # land) through the Pallas kernels
-                                # (kernels/ops.py); BOTH backends' rebuild-
-                                # epoch lookup AND delete are each ONE sort +
-                                # ONE pallas_call (old+hazard+new in one
-                                # pass, two-level tile map for grown new
-                                # tables)
+    fused: bool                 # route the FULL op surface (lookup/insert/
+                                # delete + rebuild extract and land) through
+                                # the Pallas kernels (kernels/ops.py) for
+                                # ALL THREE backends; every backend's
+                                # rebuild-epoch lookup AND delete is ONE
+                                # sort + ONE pallas_call (old+hazard+new in
+                                # one pass, two-level tile map for grown new
+                                # tables; chain probes its arena-sorted
+                                # segments and compacts when the dirty tail
+                                # outgrows the dense window)
     old: Any                    # active table (backend pytree)
     new: Any                    # target table; meaningful only while rebuilding
     hazard_key: jax.Array       # [chunk] i32
@@ -102,7 +104,7 @@ def _next_pow2(x: int) -> int:
     return 1 << (int(x) - 1).bit_length()
 
 
-FUSED_BACKENDS = ("linear", "twochoice")
+FUSED_BACKENDS = ("linear", "twochoice", "chain")
 
 
 def _fused_default(backend: str) -> bool:
@@ -122,9 +124,8 @@ def make(backend: str = "linear", capacity: int = 1024, *, chunk: int = 256,
         # env default must not silently shadow it with the fused branch
         fused = _fused_default(backend) and not fwd_hazard
     if fused and backend not in FUSED_BACKENDS:
-        raise ValueError("fused kernels are implemented for the linear and "
-                         "twochoice backends only (chain is the documented "
-                         "jnp reference; see ROADMAP open items)")
+        raise ValueError(f"fused kernels are not implemented for backend "
+                         f"{backend!r}; choose from {FUSED_BACKENDS}")
     old = _make_table(backend, capacity, seed, **kw)
     new = _make_table(backend, capacity, seed + 1, **kw)
     # distinct buffers per field (aliased leaves break jit buffer donation)
@@ -162,11 +163,21 @@ def lookup(d: DHashState, keys: jax.Array):
             if dd.backend == "twochoice":
                 f, v, _ = buckets.twochoice_lookup_fused(dd.old, keys)
                 return f, v
+            if dd.backend == "chain":
+                f, v, _ = buckets.chain_lookup_fused(dd.old, keys)
+                return f, v
             return buckets.linear_lookup_fused(dd.old, keys)
         f, v, _ = buckets.lookup(dd.old, keys)
         return f, v
 
     def slow(dd: DHashState):
+        if dd.fused and dd.backend == "chain":
+            # single-pass chain_probe2 over the arena-sorted segments: one
+            # sort + one pallas_call for the whole ordered check, dirty
+            # tails of both arenas resolved by dense windows
+            return buckets.chain_ordered_lookup_fused(
+                dd.old, dd.new, dd.hazard_key, dd.hazard_val,
+                dd.hazard_live, keys)
         if dd.fused and dd.backend == "twochoice":
             # single-pass probe2 analogue: one sort + one tc_probe2
             # pallas_call for the whole ordered check (was two composed
@@ -207,9 +218,17 @@ def lookup(d: DHashState, keys: jax.Array):
 
 def _ins_table(dd: DHashState, t, kk, vv, mm):
     """Backend-dispatched insert (shared by user inserts and hazard
-    landing, so a fused state's rebuild landing runs the claim kernel)."""
+    landing, so a fused state's rebuild landing runs the claim kernel).
+    A fused chain table additionally re-sorts its arena when the insert
+    pushes the dirty tail past the dense-window coverage
+    (``chain_maybe_compact`` — cond-gated, free on the clean steady state),
+    which is what keeps chain landings and user inserts on the kernel
+    path."""
     if dd.fused and dd.backend == "twochoice":
         return buckets.twochoice_insert_fused(t, kk, vv, mm)
+    if dd.fused and dd.backend == "chain":
+        t2, ok = buckets.chain_insert_fused(t, kk, vv, mm)
+        return buckets.chain_maybe_compact(t2), ok
     if dd.fused:
         return buckets.linear_insert_fused(t, kk, vv, mm)
     return buckets.insert(t, kk, vv, mm)
@@ -249,6 +268,8 @@ def delete(d: DHashState, keys: jax.Array, mask: jax.Array | None = None):
         if dd.fused:
             if dd.backend == "twochoice":
                 return buckets.twochoice_delete_fused(t, kk, mm)
+            if dd.backend == "chain":
+                return buckets.chain_delete_fused(t, kk, mm)
             return buckets.linear_delete_fused(t, kk, mm)
         return buckets.delete(t, kk, mm)
 
@@ -276,11 +297,20 @@ def delete(d: DHashState, keys: jax.Array, mask: jax.Array | None = None):
         return replace(dd, old=replace(dd.old, state=os_),
                        new=replace(dd.new, state=ns_), hazard_live=hl), ok
 
+    def slow_fused_chain(dd: DHashState):
+        os_, ns_, hl, ok = buckets.chain_ordered_delete_fused(
+            dd.old, dd.new, dd.hazard_key, dd.hazard_val, dd.hazard_live,
+            keys, mask)
+        return replace(dd, old=replace(dd.old, astate=os_),
+                       new=replace(dd.new, astate=ns_), hazard_live=hl), ok
+
     def slow(dd: DHashState):
         if dd.fused and dd.backend == "linear":
             return slow_fused_linear(dd)
         if dd.fused and dd.backend == "twochoice":
             return slow_fused_twochoice(dd)
+        if dd.fused and dd.backend == "chain":
+            return slow_fused_chain(dd)
         t_old, ok_old = _del(dd, dd.old, keys, mask)                   # (1) old
         pending = mask & ~ok_old
         # (2) hazard buffer: clear the live bit (LOGICALLY_REMOVED on the
@@ -320,6 +350,13 @@ def rebuild_start(d: DHashState, new_table=None, *, seed: int | None = None) -> 
         else:
             new_table = buckets.chain_make(d.old.nbuckets, d.old.arena,
                                            hashing.fresh("mix32", seed), d.old.max_chain)
+    if d.fused and d.backend == "chain":
+        # freeze the old arena fully sorted (and tombstone-reclaimed) before
+        # the cursor scan starts: the old side stays dirt-free for the whole
+        # epoch (inserts target the new table), so every rebuild-epoch probe
+        # keeps its segments kernel-resident.  Safe exactly here — the
+        # cursor resets to 0, so node movement cannot skip the scan.
+        d = replace(d, old=buckets.chain_compact_fused(d.old))
     return replace(d, new=new_table, cursor=jnp.asarray(0, I32),
                    rebuilding=jnp.asarray(True))
 
@@ -338,6 +375,9 @@ def rebuild_extract(d: DHashState) -> DHashState:
                 dd.old, dd.cursor, dd.chunk)
         elif dd.fused and dd.backend == "twochoice":
             t, hk, hv, hl, cur = buckets.twochoice_extract_chunk_fused(
+                dd.old, dd.cursor, dd.chunk)
+        elif dd.fused and dd.backend == "chain":
+            t, hk, hv, hl, cur = buckets.chain_extract_chunk_fused(
                 dd.old, dd.cursor, dd.chunk)
         else:
             t, hk, hv, hl, cur = buckets.extract_chunk(dd.old, dd.cursor,
@@ -435,7 +475,12 @@ def rebuild_autostart(d: DHashState) -> DHashState:
     def go(dd: DHashState):
         new = buckets.clear(dd.new)
         new = _reseed_table(new, dd.epoch + 1)
-        return replace(dd, new=new, cursor=jnp.asarray(0, I32),
+        old = dd.old
+        if dd.fused and dd.backend == "chain":
+            # same old-arena freeze as the host-level rebuild_start: sort +
+            # reclaim once per epoch, before the cursor scan begins
+            old = buckets.chain_compact_fused(old)
+        return replace(dd, old=old, new=new, cursor=jnp.asarray(0, I32),
                        rebuilding=jnp.asarray(True))
 
     return jax.lax.cond(d.rebuilding, lambda dd: dd, go, d)

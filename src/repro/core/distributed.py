@@ -28,6 +28,15 @@ from repro.core import dhash, hashing
 I32 = jnp.int32
 
 
+def _axis_size(axis) -> int:
+    """Static mesh-axis size, tolerant of the jax API move: ``lax.axis_size``
+    arrived after 0.5; on older releases ``psum(1, axis)`` constant-folds to
+    the same Python int."""
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis)
+    return lax.psum(1, axis)
+
+
 def _route(keys: jax.Array, owner: jax.Array, nshards: int,
            cap: int | None = None):
     """Group keys by owner shard into a [S, cap] send buffer.
@@ -68,7 +77,7 @@ def _unroute(resp_local: jax.Array, order, so, rank, kept, q, fill=0):
 def routed_lookup(d: dhash.DHashState, keys: jax.Array, axis: str,
                   owner_hfn: hashing.HashFn, cap: int | None = None):
     """DHash lookup across shards. Call inside shard_map."""
-    s = lax.axis_size(axis)
+    s = _axis_size(axis)
     q = keys.shape[0]
     owner = (hashing.hash_u32(owner_hfn, keys) % jnp.uint32(s)).astype(I32)
     send, smask, order, so, rank, kept = _route(keys, owner, s, cap)
@@ -87,7 +96,7 @@ def routed_update(d: dhash.DHashState, keys: jax.Array, vals: jax.Array,
                   mask: jax.Array, axis: str, owner_hfn: hashing.HashFn,
                   op: Callable = dhash.insert, cap: int | None = None):
     """DHash insert/delete across shards. Returns (d', ok). Call inside shard_map."""
-    s = lax.axis_size(axis)
+    s = _axis_size(axis)
     q = keys.shape[0]
     owner = (hashing.hash_u32(owner_hfn, keys) % jnp.uint32(s)).astype(I32)
     send, smask, order, so, rank, kept = _route(keys, owner, s, cap)
@@ -146,7 +155,7 @@ def routed_service_step(d: dhash.DHashState, lookup_keys: jax.Array,
 
     cap_factor > 0 bounds the routing buffers at cap = cap_factor * Q / S
     (§Perf lever: S x fewer wire bytes and S x smaller remote batches)."""
-    s = lax.axis_size(axis)
+    s = _axis_size(axis)
     capof = (lambda q: max(int(cap_factor * q / s), 1)) if cap_factor > 0 \
         else (lambda q: None)
     found, vals = routed_lookup(d, lookup_keys, axis, owner_hfn,

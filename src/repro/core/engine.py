@@ -16,11 +16,16 @@ rebuild chunk extraction, and the hazard landing all run through the Pallas
 probe/claim/extract kernels, so a complete rebuild epoch (extract -> land ->
 swap) with interleaved reads and writes never leaves the device between
 polls ("fused reads, jnp writes" was PR 1; this is fully fused).  The
-rebuild-epoch ordered lookup/delete are single-pass for BOTH fused backends
-(linear probe2 and its twochoice analogue), and the two-level tile map
-keeps them single-pass even when the rebuild target is a grown table — so
-a capacity-increasing rehash sustains the same step rate as a same-size
-one (see docs/KERNELS.md).  State
+rebuild-epoch ordered lookup/delete are single-pass for ALL THREE fused
+backends (linear probe2, its twochoice analogue, and the chain backend's
+arena-sorted chain_probe2), and the two-level tile map keeps them
+single-pass even when the rebuild target is a grown table — so a
+capacity-increasing rehash sustains the same step rate as a same-size one
+(see docs/KERNELS.md).  A fused chain state folds its arena maintenance
+into the same loop: inserts and hazard landings re-sort the arena
+(cond-gated ``chain_maybe_compact``) only when the dirty tail outgrows the
+dense window, and each epoch's ``rebuild_autostart`` freezes the old arena
+fully sorted before the cursor scan.  State
 buffers are **donated**
 (``donate_argnums``) so XLA updates tables in place instead of copying them
 every step, and the host polls ``rebuild_done`` only every ``poll_every``

@@ -13,7 +13,10 @@ rebuild chunk scan; ``twochoice_lookup`` / ``twochoice_insert`` /
 sort + scalar-prefetch treatment (both row choices of a query expand into
 two entries of ONE sorted batch), and ``twochoice_ordered_lookup`` /
 ``twochoice_ordered_delete`` are its rebuild-epoch single-pass analogues
-(one sort + one tc_probe2 pallas_call for old -> hazard -> new).
+(one sort + one tc_probe2 pallas_call for old -> hazard -> new); the
+``chain_*`` family brings the last backend onto the same treatment via the
+arena-sorted node layout (``chain_compact_fused`` + per-bucket segment
+windows + dirty-tail dense compare — see the chain section below).
 
 The rebuild-epoch ops cover arbitrarily grown new tables via a **two-level
 tile map**: a first-level jnp pass (``_resident_blockmap`` — histogram +
@@ -36,13 +39,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.probe import (QT, SLAB, _tc_rowslab, extract_tiles,
+from repro.kernels.probe import (QT, SLAB, _tc_rowslab, chain_probe2_tiles,
+                                 chain_probe_tiles, extract_tiles,
                                  probe2_tiles, probe_insert_tiles,
                                  probe_lookup_tiles, tc_insert_tiles,
                                  tc_lookup_tiles, tc_probe2_tiles)
 
 I32 = jnp.int32
-LIVE, TOMB, MIGRATED = 1, 2, 3
+EMPTY, LIVE, TOMB, MIGRATED = 0, 1, 2, 3
 
 # Resident new-table blocks per query tile in the rebuild-epoch probe (the
 # second level of the two-level tile map).  16 block pairs cover a new table
@@ -50,6 +54,14 @@ LIVE, TOMB, MIGRATED = 1, 2, 3
 # default benchmark tables stays fully fused; beyond that, the least-
 # populated blocks of a tile overflow to the gated jnp fallback.
 NRES_CAP = 16
+
+# Dirty-tail window of the arena-sorted chain backend: nodes inserted since
+# the last compaction live in a contiguous tail, resolved by a dense window
+# compare (the hazard-buffer treatment).  A tail grown past DIRTY_CAP is no
+# longer fully visible to the window, so the fused chain ops escape to the
+# pointer-chasing jnp reference — ``buckets.chain_maybe_compact`` re-sorts
+# the arena at exactly this threshold to keep the steady state on-kernel.
+DIRTY_CAP = 512
 
 
 def _pad_to(x: jax.Array, n: int, fill=0):
@@ -784,4 +796,410 @@ def twochoice_ordered_delete(old_t, new_t, hazard_key, hazard_val,
     old_state, new_state, hz_live, ok = jax.lax.cond(
         need.any(), fallback, lambda op: op,
         (old_state, new_state, hz_live, ok))
+    return old_state, new_state, hz_live, ok
+
+
+# ---------------------------------------------------------------------------
+# chain: segment-window ops over the arena-sorted node layout
+# ---------------------------------------------------------------------------
+#
+# The chain arena is kept bucket-sorted and tombstone-compacted by
+# ``chain_compact_fused``: bucket b's nodes occupy [bstart[b],
+# bstart[b]+blen[b]), so a chain probe is the same slab-window reduction as
+# a linear probe with h0 = bstart[b] and the segment length as the
+# termination bound.  Nodes inserted since the last compaction form a
+# contiguous DIRTY tail resolved by a dense window compare (static
+# ``DIRTY_CAP`` window — the hazard-buffer treatment); a tail grown past the
+# window escapes to the pointer-chasing jnp reference (``ref.chain_*_ref``)
+# via the same gated-fallback pattern as every other fused op.  Argument
+# convention: ``arena = (akey, aval, astate)``, ``links = (anext, heads)``
+# (consumed only by the fallback), ``seg = (bstart, blen, sorted_upto,
+# dirty)``.
+
+def _chain_dirty_window(arena, sorted_upto, dirty, qkey):
+    """Dense compare of the query batch against the arena's dirty tail.
+
+    The window is the static-size slice [base, base + size) with
+    ``base = min(sorted_upto, N - size)`` — clamping keeps the slice in
+    bounds while still covering the whole tail whenever ``dirty`` fits.
+    Positions below ``sorted_upto`` (clamp overlap with the sorted region)
+    are excluded; the kernel owns those.  Returns (found, val, loc_abs,
+    covered) with ``covered`` a scalar: False iff the tail outgrew the
+    window and absence can no longer be proven here.
+    """
+    akey, aval, astate = arena
+    n = akey.shape[0]
+    size = min(DIRTY_CAP, n)
+    base = jnp.minimum(sorted_upto, n - size).astype(I32)
+    wk = jax.lax.dynamic_slice(akey, (base,), (size,))
+    wv = jax.lax.dynamic_slice(aval, (base,), (size,))
+    ws = jax.lax.dynamic_slice(astate, (base,), (size,))
+    pos = base + jnp.arange(size, dtype=I32)
+    valid = (ws == LIVE) & (pos >= sorted_upto)
+    eq = (qkey[:, None] == wk[None, :]) & valid[None, :]
+    hit = eq.any(-1)
+    i = jnp.argmax(eq, axis=-1).astype(I32)
+    val = jnp.where(hit, jnp.take(wv, i), 0)
+    loc = jnp.where(hit, base + i, -1)
+    covered = sorted_upto + dirty <= base + size
+    return hit, val, loc, covered
+
+
+def _chain_run(arena, seg, bq, qkey, max_chain: int, interpret: bool):
+    """Shared prep + launch for the single-arena chain ops: the ONE sort
+    (stable argsort on the bucket — ``bstart`` is nondecreasing in the
+    bucket, so segment starts sort with it, and the insert path reuses the
+    same order for its head relink), the ONE chain-probe pallas_call, and
+    the dirty-tail window merge.  Returns (order, sorted (keys, buckets),
+    (found, val, loc_physical, need)) — all in sorted coordinates."""
+    bstart, blen, sorted_upto, dirty = seg
+    n = arena[0].shape[0]
+    q = qkey.shape[0]
+    h0 = bstart[bq]
+    qlen = blen[bq]
+    tk, tv, ts = _pad_table(arena, n, max_chain)
+
+    order = jnp.argsort(bq)
+    qpad = -(-q // QT) * QT
+    h0s, qls, qks, bqs = _sort_pad_queries(order, qpad, h0, qlen, qkey, bq)
+    tiles = qpad // QT
+    slab_base = _tile_base(h0s, tiles, tk.shape[0])
+
+    f_s, v_s, l_s, c_s = chain_probe_tiles(
+        tk, tv, ts, h0s, qls, qks, slab_base, max_probes=max_chain,
+        interpret=interpret)
+
+    fw, vw, lw, covered = _chain_dirty_window(arena, sorted_upto, dirty, qks)
+    found_s = f_s | fw
+    val_s = jnp.where(f_s, v_s, vw)
+    loc_s = jnp.where(f_s, l_s % n, lw)   # physical node index (-1 = absent)
+    # unresolved: not found anywhere AND absence not proven (segment window
+    # escaped / segment longer than max_chain / dirty tail past the window)
+    need_s = ~found_s & (~c_s | ~covered)
+    return order, (qks, bqs), (found_s, val_s, loc_s, need_s)
+
+
+@partial(jax.jit, static_argnames=("max_chain", "interpret"))
+def chain_lookup_fused(arena, links, seg, bq, qkey, *, max_chain: int = 64,
+                       interpret: bool = True):
+    """Fused chain lookup: ONE argsort + ONE chain-probe pallas_call over
+    the bucket-sorted segments, a dense dirty-tail window, and the
+    pointer-chasing jnp reference as the gated fallback for unresolved
+    queries.  Returns (found[Q], val[Q], loc[Q] node index or -1) — ``loc``
+    is reused by the fused delete so deleting never probes twice."""
+    q = qkey.shape[0]
+    order, (qks, bqs), (found_s, val_s, loc_s, need_s) = _chain_run(
+        arena, seg, bq, qkey, max_chain, interpret)
+
+    def fallback(fvl):
+        f0, v0, l0 = fvl
+        fb_f, fb_v, fb_l = ref.chain_lookup_ref(*arena, *links, bqs, qks,
+                                                max_chain)
+        return (jnp.where(need_s, fb_f, f0), jnp.where(need_s, fb_v, v0),
+                jnp.where(need_s, fb_l, l0))
+
+    found_s, val_s, loc_s = jax.lax.cond(need_s.any(), fallback, lambda x: x,
+                                         (found_s, val_s, loc_s))
+
+    found = jnp.zeros((q,), jnp.bool_).at[order].set(found_s[:q])
+    val = jnp.zeros((q,), I32).at[order].set(val_s[:q])
+    loc = jnp.full((q,), -1, I32).at[order].set(loc_s[:q])
+    return found, val, loc
+
+
+@partial(jax.jit, static_argnames=("max_chain", "interpret"))
+def chain_delete_fused(arena, links, seg, bq, keys, mask, *,
+                       max_chain: int = 64, interpret: bool = True):
+    """Fused chain delete: the location-emitting probe run + ONE tombstone
+    scatter (logical deletion; compaction reclaims).  Caller contract:
+    ``mask`` is winner-filtered.  Returns (astate', ok[Q])."""
+    n = arena[0].shape[0]
+    q = keys.shape[0]
+    qpad = -(-q // QT) * QT
+    order, (qks, bqs), (found_s, _val_s, loc_s, need_s) = _chain_run(
+        arena, seg, bq, keys, max_chain, interpret)
+    qms = _pad_to(mask[order], qpad, fill=False)
+
+    ok_s = qms & found_s
+    astate2 = arena[2].at[jnp.where(ok_s, loc_s, n)].set(TOMB, mode="drop")
+
+    need = qms & need_s
+
+    def fallback(op):
+        s, ok = op
+        fb_s, fb_ok = ref.chain_delete_ref(arena[0], arena[1], s, *links,
+                                           bqs, qks, need, max_chain)
+        return fb_s, ok | fb_ok
+
+    astate2, ok_s = jax.lax.cond(need.any(), fallback, lambda op: op,
+                                 (astate2, ok_s))
+
+    ok = jnp.zeros((q,), jnp.bool_).at[order].set(ok_s[:q])
+    return astate2, ok
+
+
+@partial(jax.jit, static_argnames=("max_chain", "interpret"))
+def chain_insert_fused(arena, links, seg, free_stack, free_top, bq, keys,
+                       vals, mask, *, max_chain: int = 64,
+                       interpret: bool = True):
+    """Fused chain insert: the presence probe (kernel + dirty window +
+    gated pointer fallback) and the head relink share the SAME stable sort
+    keyed on the bucket, so the whole op is ONE argsort + ONE pallas_call.
+    New nodes are allocated from the free-stack tail (positions ascend, so
+    they extend the dirty window) and linked at their buckets' heads in
+    original-index order — the identical linearization, node placement, and
+    pointer structure as ``buckets.chain_insert``.
+
+    Caller contract: ``mask`` is winner-filtered.  Returns
+    (akey', aval', astate', anext', heads', free_top', ok[Q]).
+    """
+    akey, aval, astate = arena
+    anext, heads = links
+    n = akey.shape[0]
+    nb = heads.shape[0]
+    q = keys.shape[0]
+    order, (qks, bqs), (found_s, _v, _l, need_s) = _chain_run(
+        arena, seg, bq, keys, max_chain, interpret)
+
+    def fb_present(p):
+        fb_f, _, _ = ref.chain_lookup_ref(akey, aval, astate, anext, heads,
+                                          bqs, qks, max_chain)
+        return jnp.where(need_s, fb_f, p)
+
+    present_s = jax.lax.cond(need_s.any(), fb_present, lambda p: p, found_s)
+    present = jnp.zeros((q,), jnp.bool_).at[order].set(present_s[:q])
+
+    # allocation: identical linearization to buckets.chain_insert (want-rank
+    # in original order pops ascending arena positions)
+    want = mask & ~present
+    rank = jnp.cumsum(want.astype(I32)) - 1
+    can = want & (rank < free_top)
+    node = free_stack[jnp.where(can, free_top - 1 - rank, 0)]
+    wnode = jnp.where(can, node, n)
+    akey2 = akey.at[wnode].set(keys, mode="drop")
+    aval2 = aval.at[wnode].set(vals, mode="drop")
+    astate2 = astate.at[wnode].set(LIVE, mode="drop")
+
+    # head relink in the SAME sorted order (bucket asc, original index asc):
+    # each inserted node chains to the NEXT inserted node of its bucket
+    # (suffix-min scan — no second sort), the last one to the old head, and
+    # the FIRST inserted node of each bucket becomes the new head
+    # (prefix-max scan).
+    can_s = can[order]
+    node_s = node[order]
+    b_s = bqs[:q]
+    pos = jnp.arange(q, dtype=I32)
+    w = jnp.where(can_s, pos, q)
+    m = jnp.flip(jax.lax.cummin(jnp.flip(
+        jnp.concatenate([w[1:], jnp.full((1,), q, I32)]))))
+    nxt_idx = jnp.minimum(m, q - 1)
+    same_b = (m < q) & (b_s[nxt_idx] == b_s)
+    nxt_node = jnp.where(same_b, node_s[nxt_idx], heads[b_s])
+    anext2 = anext.at[jnp.where(can_s, node_s, n)].set(nxt_node, mode="drop")
+    wp = jnp.where(can_s, pos, -1)
+    pm = jax.lax.cummax(jnp.concatenate([jnp.full((1,), -1, I32), wp[:-1]]))
+    prev_idx = jnp.maximum(pm, 0)
+    is_first = can_s & ((pm < 0) | (b_s[prev_idx] != b_s))
+    heads2 = heads.at[jnp.where(is_first, b_s, nb)].set(node_s, mode="drop")
+
+    free_top2 = free_top - jnp.sum(can.astype(I32))
+    return akey2, aval2, astate2, anext2, heads2, free_top2, can
+
+
+@partial(jax.jit, static_argnames=("nbuckets",))
+def chain_compact_fused(akey, aval, astate, bq_nodes, *, nbuckets: int):
+    """The arena-sorted compaction pass: ONE segmented sort keyed on
+    (bucket, arena index) with dead nodes pushed past every bucket, then the
+    compaction gather (the sort's permutation IS the `_extract_kernel`-style
+    rank compaction, applied globally), per-bucket (start, len) offsets via
+    a histogram + exclusive cumsum, and a vectorized pointer rebuild so the
+    jnp reference paths stay valid (node i chains to i + 1 within its
+    bucket).  Tombstoned/migrated nodes are physically reclaimed — the
+    batched analogue of the paper's deferred call_rcu free.
+
+    Returns (akey', aval', astate', anext', heads', free_stack', free_top',
+    bstart, blen, sorted_upto).
+    """
+    n = akey.shape[0]
+    idx = jnp.arange(n, dtype=I32)
+    live = astate == LIVE
+    sortkey = jnp.where(live, bq_nodes, nbuckets)
+    order = jnp.argsort(sortkey)          # stable: (bucket, arena index)
+    ls = live[order]
+    akey2 = jnp.where(ls, akey[order], 0)
+    aval2 = jnp.where(ls, aval[order], 0)
+    astate2 = jnp.where(ls, LIVE, EMPTY).astype(I32)
+    lcount = jnp.sum(live.astype(I32))
+    counts = jnp.zeros((nbuckets,), I32).at[
+        jnp.where(live, bq_nodes, nbuckets)].add(1, mode="drop")
+    bstart = jnp.concatenate(
+        [jnp.zeros((1,), I32), jnp.cumsum(counts)[:-1].astype(I32)])
+    sb = sortkey[order]
+    chain_on = ls & jnp.concatenate([sb[1:] == sb[:-1],
+                                     jnp.zeros((1,), bool)])
+    anext2 = jnp.where(chain_on, idx + 1, -1)
+    heads2 = jnp.where(counts > 0, bstart, -1)
+    free_stack2 = n - 1 - idx
+    free_top2 = n - lcount
+    return (akey2, aval2, astate2, anext2, heads2, free_stack2, free_top2,
+            bstart, counts, lcount)
+
+
+def _chain_probe2_run(old_arena, old_seg, new_arena, new_seg, hazard_key,
+                      hazard_val, hazard_live, bq_old, bq_new, keys,
+                      max_chain: int, interpret: bool):
+    """Shared prep + launch for the fused chain rebuild-epoch ops: the ONE
+    argsort (keyed on the old arena's segment starts), the two-level tile
+    map for the new arena's blocks, ONE chain_probe2 pallas_call, and the
+    dirty-tail window merges for BOTH arenas.  Returns (order, sorted
+    (keys, old buckets, new buckets), per-query Lemma-4.1 components)."""
+    n_old = old_arena[0].shape[0]
+    n_new = new_arena[0].shape[0]
+    q = keys.shape[0]
+    old_p = _pad_table(old_arena, n_old, max_chain)
+    new_p = _pad_table(new_arena, n_new, max_chain)
+    h0o = old_seg[0][bq_old]
+    qlo = old_seg[1][bq_old]
+    h0n = new_seg[0][bq_new]
+    qln = new_seg[1][bq_new]
+
+    order = jnp.argsort(h0o)
+    qpad = -(-q // QT) * QT
+    h0os, qlos, h0ns, qlns, qks, bqos, bqns = _sort_pad_queries(
+        order, qpad, h0o, qlo, h0n, qln, keys, bq_old, bq_new)
+    tiles = qpad // QT
+    nblocks_new = new_p[0].shape[0] // SLAB
+    nres = min(NRES_CAP, nblocks_new - 1)
+    slab2 = jnp.concatenate([
+        _tile_base(h0os, tiles, old_p[0].shape[0])[None],
+        _resident_blockmap(h0ns // SLAB, tiles, nblocks_new, nres)])
+
+    (f_o, v_o, l_o, c_o, hz, f_n, v_n, l_n, c_n) = chain_probe2_tiles(
+        old_p, new_p, hazard_key, hazard_val, hazard_live.astype(I32),
+        h0os, qlos, h0ns, qlns, qks, slab2, max_probes=max_chain,
+        interpret=interpret)
+
+    fwo, vwo, lwo, cov_o = _chain_dirty_window(old_arena, old_seg[2],
+                                               old_seg[3], qks)
+    fwn, vwn, lwn, cov_n = _chain_dirty_window(new_arena, new_seg[2],
+                                               new_seg[3], qks)
+    fo = f_o | fwo
+    vo = jnp.where(f_o, v_o, vwo)
+    lo = jnp.where(f_o, l_o % n_old, lwo)
+    f_hz = hz >= 0
+    v_hz = jnp.take(hazard_val, jnp.clip(hz, 0, hazard_key.shape[0] - 1))
+    fn = f_n | fwn
+    vn = jnp.where(f_n, v_n, vwn)
+    ln = jnp.where(f_n, l_n % n_new, lwn)
+    co = c_o & cov_o
+    cn = c_n & cov_n
+    # ordered-check refinement: an old hit settles the query outright (any
+    # hit is real — windows and kernel both only report LIVE matches); absent
+    # from old is only trusted with full old coverage, after which the dense
+    # hazard compare and the new side (hit, or proven absent) settle it.
+    complete = fo | (co & (f_hz | fn | cn))
+    return order, (qks, bqos, bqns), (fo, vo, lo, f_hz, hz, v_hz, fn, vn,
+                                      ln, complete)
+
+
+@partial(jax.jit, static_argnames=("max_chain", "interpret"))
+def chain_ordered_lookup(old_arena, old_links, old_seg, new_arena, new_links,
+                         new_seg, hazard_key, hazard_val, hazard_live,
+                         bq_old, bq_new, qkey, *, max_chain: int = 64,
+                         interpret: bool = True):
+    """FUSED chain rebuild-epoch lookup: ONE argsort + ONE chain_probe2
+    pallas_call emit the Lemma-4.1-ordered result (old arena -> hazard
+    buffer -> new arena), with the two-level tile map keeping a grown new
+    arena resident and both arenas' dirty tails merged by dense windows.
+    Unresolved queries fall back to the pointer-chasing jnp ordered check
+    (gated — free when nothing escapes).  Returns (found[Q], val[Q])."""
+    q = qkey.shape[0]
+    order, (qks, bqos, bqns), comps = _chain_probe2_run(
+        old_arena, old_seg, new_arena, new_seg, hazard_key, hazard_val,
+        hazard_live, bq_old, bq_new, qkey, max_chain, interpret)
+    (fo, vo, _lo, f_hz, _hz, v_hz, fn, vn, _ln, complete) = comps
+    found_s = (fo | f_hz | fn) & complete
+    val_s = jnp.where(
+        complete,
+        jnp.where(fo, vo, jnp.where(f_hz, v_hz, jnp.where(fn, vn, 0))), 0)
+
+    need = ~complete
+
+    def fallback(fv):
+        f0, v0 = fv
+        fb_f, fb_v = ref.chain_ordered_lookup_ref(
+            old_arena, old_links, new_arena, new_links, hazard_key,
+            hazard_val, hazard_live, bqos, bqns, qks, max_chain)
+        return jnp.where(need, fb_f, f0), jnp.where(need, fb_v, v0)
+
+    found_s, val_s = jax.lax.cond(need.any(), fallback, lambda fv: fv,
+                                  (found_s, val_s))
+
+    found = jnp.zeros((q,), jnp.bool_).at[order].set(found_s[:q])
+    val = jnp.zeros((q,), I32).at[order].set(val_s[:q])
+    return found, val
+
+
+@partial(jax.jit, static_argnames=("max_chain", "interpret"))
+def chain_ordered_delete(old_arena, old_links, old_seg, new_arena, new_links,
+                         new_seg, hazard_key, hazard_val, hazard_live,
+                         bq_old, bq_new, keys, mask, *, max_chain: int = 64,
+                         interpret: bool = True):
+    """FUSED chain rebuild-epoch delete (paper Alg. 5): the SAME single
+    chain_probe2 pass resolves old-node / hazard-index / new-node, then
+    three scatters land the tombstones and the hazard kill.
+
+    Caller contract: ``mask`` is winner-filtered.  Returns
+    (old_astate', new_astate', hazard_live', ok[Q])."""
+    n_old = old_arena[0].shape[0]
+    n_new = new_arena[0].shape[0]
+    ch = hazard_key.shape[0]
+    q = keys.shape[0]
+    qpad = -(-q // QT) * QT
+    order, (qks, bqos, bqns), comps = _chain_probe2_run(
+        old_arena, old_seg, new_arena, new_seg, hazard_key, hazard_val,
+        hazard_live, bq_old, bq_new, keys, max_chain, interpret)
+    (fo, _vo, lo, f_hz, hz, _vhz, fn, _vn, ln, complete) = comps
+    qms = _pad_to(mask[order], qpad, fill=False)
+
+    # ordered landing: old hit > hazard hit > new hit.  An old hit is
+    # trusted even when ``complete`` is False (priority already determined);
+    # such queries are excluded from the fallback so they cannot double-
+    # delete a second instance downstream.
+    ok_old = qms & fo
+    ok_hz = qms & complete & ~fo & f_hz
+    ok_new = qms & complete & ~fo & ~f_hz & fn
+
+    old_state = old_arena[2].at[
+        jnp.where(ok_old, lo, n_old)].set(TOMB, mode="drop")
+    new_state = new_arena[2].at[
+        jnp.where(ok_new, ln, n_new)].set(TOMB, mode="drop")
+    kill = jnp.zeros_like(hazard_live).at[
+        jnp.where(ok_hz, hz, ch)].set(True, mode="drop")
+    hz_live = hazard_live & ~kill
+    ok_s = ok_old | ok_hz | ok_new
+
+    need = qms & ~fo & ~complete
+
+    def fallback(op):
+        os_, ns_, hl_, ok = op
+        fb_os, ok_o = ref.chain_delete_ref(old_arena[0], old_arena[1], os_,
+                                           *old_links, bqos, qks, need,
+                                           max_chain)
+        pend = need & ~ok_o
+        eq = (qks[:, None] == hazard_key[None, :]) & hl_[None, :]
+        hz_hit = eq.any(-1) & pend
+        kill2 = jnp.zeros_like(hl_).at[
+            jnp.where(hz_hit, jnp.argmax(eq, axis=-1), ch)].set(
+            True, mode="drop")
+        fb_ns, ok_n = ref.chain_delete_ref(new_arena[0], new_arena[1], ns_,
+                                           *new_links, bqns, qks,
+                                           pend & ~hz_hit, max_chain)
+        return fb_os, fb_ns, hl_ & ~kill2, ok | ok_o | hz_hit | ok_n
+
+    old_state, new_state, hz_live, ok_s = jax.lax.cond(
+        need.any(), fallback, lambda op: op,
+        (old_state, new_state, hz_live, ok_s))
+
+    ok = jnp.zeros((q,), jnp.bool_).at[order].set(ok_s[:q])
     return old_state, new_state, hz_live, ok

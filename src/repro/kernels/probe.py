@@ -15,7 +15,7 @@ way (HashGraph-style sorted/coalesced probing):
      ``max_probes`` rounds is a vectorized compare of the query tile against
      dynamically-indexed slab lanes.
 
-Seven kernels share that skeleton:
+Nine kernels share that skeleton:
 
 * ``_probe_kernel``        — single-table lookup (steady state, no rebuild).
   Emits per-query slot LOCATIONS alongside found/val, so the delete path
@@ -68,7 +68,22 @@ Seven kernels share that skeleton:
   fused twochoice delete reuses — never a second probe); insert runs the
   same local-claim protocol as the linear kernel, one lane per round, and
   ops.py drops b-claims shadowed by a-claims before resolving cross-tile
-  collisions.  ``chain`` stays the documented jnp reference backend.
+  collisions.
+* ``_chain_probe_kernel`` / ``_chain_probe2_kernel`` — the ``chain``
+  backend over its ARENA-SORTED layout (the last backend onto the fused
+  path): ``ops.chain_compact_fused`` keeps the node arena bucket-sorted and
+  tombstone-compacted, so a chain probe is a segment window
+  ``[bstart[b], bstart[b] + blen[b])`` — the same slab reduction as a
+  linear probe, terminated by the per-query segment LENGTH instead of an
+  EMPTY sentinel (the packed arena has none; cross-segment reads cannot
+  false-match because a key's bucket is a function of the key).
+  ``_chain_probe2_kernel`` is the rebuild-epoch single pass (old segments +
+  dense hazard compare + new segments on the same ``(tiles, nres)``
+  reduction grid, component outputs for the ordered delete).  Nodes
+  inserted since the last compaction live in a contiguous dirty tail that
+  ops.py resolves with a dense window compare — the hazard-buffer
+  treatment — and a tail grown past ``ops.DIRTY_CAP`` escapes to the
+  pointer-chasing jnp reference via the gated fallback.
 
 Exactness contract (all kernels): a query whose probe window escapes its
 2-block slab (hash skew), or whose new-table window misses ALL of its
@@ -827,6 +842,234 @@ def tc_probe2_tiles(old_padded, new_padded,
     return pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
                           interpret=interpret)(
         slab2, orow_sorted, nrow_sorted, qk_sorted,
+        okk, okk, ovv, ovv, oss, oss,
+        nkk, nkk, nvv, nvv, nss, nss,
+        hazard_key, hazard_val, hazard_live_i32)
+
+
+# ---------------------------------------------------------------------------
+# chain: segment-window probes over the arena-sorted node layout
+# ---------------------------------------------------------------------------
+#
+# The chain arena, once compacted by ops.chain_compact_fused, is bucket-
+# sorted: bucket b's nodes occupy the contiguous segment
+# [bstart[b], bstart[b] + blen[b]).  A chain probe is then the SAME slab-
+# window reduction as a linear probe — h0 = bstart[b] — except termination is
+# the segment length (the packed arena has no EMPTY sentinels between
+# segments), so the kernels take a per-query ``qlen`` bound instead of
+# stopping at EMPTY.  Cross-segment reads cannot false-match: a key's bucket
+# is a function of the key, so a LIVE node with a matching key in another
+# bucket's segment is impossible.  Nodes inserted after the compaction (the
+# dirty tail) are resolved OUTSIDE the kernel by a dense window compare in
+# ops.py — the hazard-buffer treatment — and a tail grown past DIRTY_CAP
+# escapes to the pointer-chasing jnp reference via the gated fallback.
+
+def _chain_window_probe(base_blk, h0, qlen, qk, k0, k1, v0, v1, s0, s1,
+                        max_probes: int):
+    """Segment-bounded probe loop over one 2-block VMEM window.
+
+    Like ``_window_probe`` but the probe run is [h0, h0 + qlen) — absence is
+    proven by exhausting the segment, not by an EMPTY sentinel.  ``complete``
+    additionally requires ``qlen <= max_probes`` (a segment longer than the
+    probe bound cannot prove absence).  Returns (found, val, loc, complete);
+    ``loc`` is the padded-arena node coordinate of the LIVE hit, -1 if none.
+    """
+    base = base_blk * SLAB
+    off = h0 - base
+    keys = jnp.concatenate([k0[...], k1[...]])
+    vals = jnp.concatenate([v0[...], v1[...]])
+    stat = jnp.concatenate([s0[...], s1[...]])
+
+    complete = ((off >= 0) & (off + max_probes <= 2 * SLAB)
+                & (qlen <= max_probes))
+    safe_off = jnp.clip(off, 0, 2 * SLAB - max_probes)
+
+    def body(p, carry):
+        found, val, loc = carry
+        idx = safe_off + p
+        k = jnp.take(keys, idx, axis=0)
+        v = jnp.take(vals, idx, axis=0)
+        s = jnp.take(stat, idx, axis=0)
+        hit = (p < qlen) & ~found & (s == LIVE) & (k == qk)
+        val = jnp.where(hit, v, val)
+        loc = jnp.where(hit, base + idx, loc)
+        return found | hit, val, loc
+
+    q = h0.shape[0]
+    init = (jnp.zeros((q,), bool), jnp.zeros((q,), I32),
+            jnp.full((q,), -1, I32))
+    found, val, loc = jax.lax.fori_loop(0, max_probes, body, init)
+    return (found & complete, jnp.where(complete, val, 0),
+            jnp.where(complete, loc, -1), complete)
+
+
+def _chain_probe_kernel(slab_ref,            # scalar-prefetch: [tiles]
+                        h0_ref, qlen_ref, qk_ref,        # [QT]
+                        tk0, tk1, tv0, tv1, ts0, ts1,    # [SLAB] arena blocks
+                        found_ref, val_ref, loc_ref, complete_ref,
+                        *, max_probes: int):
+    """Single-arena chain lookup over the sorted segments (steady state).
+    Emits per-query node LOCATIONS alongside found/val so the fused chain
+    delete tombstones with one scatter — same contract as ``_probe_kernel``.
+    """
+    i = pl.program_id(0)
+    found, val, loc, complete = _chain_window_probe(
+        slab_ref[i], h0_ref[...], qlen_ref[...], qk_ref[...],
+        tk0, tk1, tv0, tv1, ts0, ts1, max_probes)
+    found_ref[...] = found
+    val_ref[...] = val
+    loc_ref[...] = loc
+    complete_ref[...] = complete
+
+
+def _chain_probe2_kernel(slab2_ref,          # scalar-prefetch: [1+nres, tiles]
+                         h0o_ref, qlo_ref, h0n_ref, qln_ref, qk_ref,  # [QT]
+                         ok0, ok1, ov0, ov1, os0, os1,   # old arena blocks
+                         nk0, nk1, nv0, nv1, ns0, ns1,   # new resident blocks
+                         hk_ref, hv_ref, hl_ref,         # [CH] hazard buffer
+                         fold_ref, vold_ref, lold_ref, cold_ref, hzidx_ref,
+                         fnew_ref, vnew_ref, lnew_ref, cnew_ref,
+                         *, max_probes: int):
+    """Fused chain rebuild-epoch probe: the OLD segment probe, the dense
+    hazard compare, and the NEW segment probe land in one pass on the same
+    ``(tiles, nres)`` reduction grid as ``_probe2_kernel`` (row 0 of
+    ``slab2`` anchors the old-arena slabs the shared sort produced; rows 1..
+    are the tile's resident new-arena blocks, and iterations ``r > 0`` merge
+    further new windows into the revisited outputs).  Emits per-query
+    COMPONENTS — ops.py merges the dirty-tail windows of both arenas and
+    applies the Lemma-4.1 ordering, so the same outputs serve both the
+    ordered lookup and the ordered delete."""
+    i = pl.program_id(0)
+    r = pl.program_id(1)
+    qk = qk_ref[...]
+    f_n, v_n, l_n, c_n = _chain_window_probe(
+        slab2_ref[1 + r, i], h0n_ref[...], qln_ref[...], qk,
+        nk0, nk1, nv0, nv1, ns0, ns1, max_probes)
+
+    @pl.when(r == 0)
+    def _init():
+        f_o, v_o, l_o, c_o = _chain_window_probe(
+            slab2_ref[0, i], h0o_ref[...], qlo_ref[...], qk,
+            ok0, ok1, ov0, ov1, os0, os1, max_probes)
+        eq = (qk[:, None] == hk_ref[...][None, :]) & (hl_ref[...][None, :] != 0)
+        f_hz = eq.any(-1)
+        hz_i = jnp.argmax(eq, axis=-1)
+        fold_ref[...] = f_o
+        vold_ref[...] = v_o
+        lold_ref[...] = l_o
+        cold_ref[...] = c_o
+        hzidx_ref[...] = jnp.where(f_hz, hz_i.astype(I32), -1)
+        fnew_ref[...] = f_n
+        vnew_ref[...] = v_n
+        lnew_ref[...] = l_n
+        cnew_ref[...] = c_n
+
+    @pl.when(r > 0)
+    def _merge():
+        seen = fnew_ref[...]
+        fnew_ref[...] = seen | f_n
+        vnew_ref[...] = jnp.where(f_n & ~seen, v_n, vnew_ref[...])
+        lnew_ref[...] = jnp.maximum(lnew_ref[...], l_n)
+        cnew_ref[...] = cnew_ref[...] | c_n
+
+
+def chain_probe_tiles(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
+                      h0_sorted: jax.Array, qlen_sorted: jax.Array,
+                      qk_sorted: jax.Array, slab_base: jax.Array, *,
+                      max_probes: int, interpret: bool = True):
+    """Run the chain lookup kernel over pre-sorted, pre-tiled queries.
+
+    tkey/tval/tstate: padded arena arrays (``ops._pad_table``-style).
+    h0_sorted: per-query segment starts (``bstart[bucket]``), sorted
+    ascending; qlen_sorted: matching segment lengths.  Returns
+    (found[Q], val[Q], loc[Q], complete[Q]); ``loc`` is the padded-arena
+    node coordinate (-1 if absent).
+    """
+    q = h0_sorted.shape[0]
+    assert q % QT == 0 and tkey.shape[0] % SLAB == 0
+    tiles = q // QT
+
+    qspec = pl.BlockSpec((QT,), lambda i, s: (i,))
+    blk0 = pl.BlockSpec((SLAB,), lambda i, s: (s[i],))
+    blk1 = pl.BlockSpec((SLAB,), lambda i, s: (s[i] + 1,))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(tiles,),
+        in_specs=[qspec, qspec, qspec,
+                  blk0, blk1, blk0, blk1, blk0, blk1],
+        out_specs=[qspec] * 4,
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((q,), jnp.bool_),
+        jax.ShapeDtypeStruct((q,), I32),
+        jax.ShapeDtypeStruct((q,), I32),
+        jax.ShapeDtypeStruct((q,), jnp.bool_),
+    ]
+    kernel = functools.partial(_chain_probe_kernel, max_probes=max_probes)
+    return pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
+                          interpret=interpret)(
+        slab_base, h0_sorted, qlen_sorted, qk_sorted,
+        tkey, tkey, tval, tval, tstate, tstate)
+
+
+def chain_probe2_tiles(old_padded, new_padded,
+                       hazard_key: jax.Array, hazard_val: jax.Array,
+                       hazard_live_i32: jax.Array,
+                       h0o_sorted: jax.Array, qlo_sorted: jax.Array,
+                       h0n_sorted: jax.Array, qln_sorted: jax.Array,
+                       qk_sorted: jax.Array, slab2: jax.Array, *,
+                       max_probes: int, interpret: bool = True):
+    """Run the chain rebuild-epoch kernel over pre-sorted queries.
+
+    old_padded/new_padded: (key, val, state) arena triples padded
+    independently.  h0o/qlo and h0n/qln: per-query segment (start, len) for
+    the old and new arenas, sorted by the OLD start.  slab2:
+    [1 + nres, tiles] block map (row 0 old, rows 1.. resident new blocks).
+
+    Returns (f_old, v_old, loc_old, c_old, hz_idx, f_new, v_new, loc_new,
+    c_new) per query; locations are padded-arena coordinates (-1 = none).
+    """
+    q = qk_sorted.shape[0]
+    (okk, ovv, oss), (nkk, nvv, nss) = old_padded, new_padded
+    assert q % QT == 0 and okk.shape[0] % SLAB == 0 and \
+        nkk.shape[0] % SLAB == 0
+    tiles = q // QT
+    nres = slab2.shape[0] - 1
+    assert nres >= 1
+    ch = hazard_key.shape[0]
+
+    qspec = pl.BlockSpec((QT,), lambda i, r, s: (i,))
+    oblk0 = pl.BlockSpec((SLAB,), lambda i, r, s: (s[0, i],))
+    oblk1 = pl.BlockSpec((SLAB,), lambda i, r, s: (s[0, i] + 1,))
+    nblk0 = pl.BlockSpec((SLAB,), lambda i, r, s: (s[1 + r, i],))
+    nblk1 = pl.BlockSpec((SLAB,), lambda i, r, s: (s[1 + r, i] + 1,))
+    hspec = pl.BlockSpec((ch,), lambda i, r, s: (0,))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(tiles, nres),
+        in_specs=[qspec, qspec, qspec, qspec, qspec,
+                  oblk0, oblk1, oblk0, oblk1, oblk0, oblk1,
+                  nblk0, nblk1, nblk0, nblk1, nblk0, nblk1,
+                  hspec, hspec, hspec],
+        out_specs=[qspec] * 9,
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((q,), jnp.bool_),    # f_old
+        jax.ShapeDtypeStruct((q,), I32),          # v_old
+        jax.ShapeDtypeStruct((q,), I32),          # loc_old (padded coords)
+        jax.ShapeDtypeStruct((q,), jnp.bool_),    # c_old
+        jax.ShapeDtypeStruct((q,), I32),          # hazard index (-1 = none)
+        jax.ShapeDtypeStruct((q,), jnp.bool_),    # f_new
+        jax.ShapeDtypeStruct((q,), I32),          # v_new
+        jax.ShapeDtypeStruct((q,), I32),          # loc_new (padded coords)
+        jax.ShapeDtypeStruct((q,), jnp.bool_),    # c_new
+    ]
+    kernel = functools.partial(_chain_probe2_kernel, max_probes=max_probes)
+    return pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
+                          interpret=interpret)(
+        slab2, h0o_sorted, qlo_sorted, h0n_sorted, qln_sorted, qk_sorted,
         okk, okk, ovv, ovv, oss, oss,
         nkk, nkk, nvv, nvv, nss, nss,
         hazard_key, hazard_val, hazard_live_i32)

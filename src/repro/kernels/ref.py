@@ -167,6 +167,105 @@ def tc_insert_ref(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
     return tkey, tval, tstate, done
 
 
+def chain_lookup_ref(akey: jax.Array, aval: jax.Array, astate: jax.Array,
+                     anext: jax.Array, heads: jax.Array, b: jax.Array,
+                     qkey: jax.Array, max_chain: int):
+    """Pointer-chasing chain lookup oracle: lock-step batched traversal from
+    ``heads[b]`` along ``anext``, bounded by ``max_chain`` hops — each hop is
+    one dependent arena gather (the CPU cost model the arena-sorted fused
+    path exists to avoid).  Returns (found[Q], val[Q], loc[Q] node or -1).
+    """
+    q = qkey.shape[0]
+
+    def body(_, carry):
+        cur, found, val, loc = carry
+        valid = cur >= 0
+        c = jnp.where(valid, cur, 0)
+        hit = valid & (astate[c] == LIVE) & (akey[c] == qkey) & ~found
+        val = jnp.where(hit, aval[c], val)
+        loc = jnp.where(hit, cur, loc)
+        found = found | hit
+        step = valid & ~found
+        cur = jnp.where(step, anext[c], jnp.where(found, cur, -1))
+        return cur, found, val, loc
+
+    init = (heads[b], jnp.zeros((q,), bool), jnp.zeros((q,), I32),
+            jnp.full((q,), -1, I32))
+    _, found, val, loc = jax.lax.fori_loop(0, max_chain, body, init)
+    return found, val, loc
+
+
+def chain_delete_ref(akey: jax.Array, aval: jax.Array, astate: jax.Array,
+                     anext: jax.Array, heads: jax.Array, b: jax.Array,
+                     keys: jax.Array, mask: jax.Array, max_chain: int):
+    """Pointer-chasing chain delete oracle: traverse, then tombstone the
+    node holding each masked key (logical deletion; reclamation is the
+    compaction pass).  Caller contract: mask winner-filtered.  Returns
+    (astate', ok[Q])."""
+    n = akey.shape[0]
+    found, _, loc = chain_lookup_ref(akey, aval, astate, anext, heads, b,
+                                     keys, max_chain)
+    ok = mask & found
+    astate = astate.at[jnp.where(ok, loc, n)].set(TOMB, mode="drop")
+    return astate, ok
+
+
+def chain_insert_ref(akey, aval, astate, anext, heads, free_stack, free_top,
+                     b, keys, vals, mask, max_chain: int):
+    """Pointer-chasing chain insert oracle on raw arena arrays: presence by
+    lock-step traversal, want-rank tail allocation, insert-at-head linking
+    in original-index order — the same linearization, node placement, and
+    pointer structure as ``buckets.chain_insert``.
+
+    Caller contract: ``mask`` is winner-filtered.  Returns
+    (akey', aval', astate', anext', heads', free_top', ok[Q]).
+    """
+    n = akey.shape[0]
+    nb = heads.shape[0]
+    q = keys.shape[0]
+    present, _, _ = chain_lookup_ref(akey, aval, astate, anext, heads, b,
+                                     keys, max_chain)
+    want = mask & ~present
+    rank = jnp.cumsum(want.astype(I32)) - 1
+    can = want & (rank < free_top)
+    node = free_stack[jnp.where(can, free_top - 1 - rank, 0)]
+    wnode = jnp.where(can, node, n)
+    akey = akey.at[wnode].set(keys, mode="drop")
+    aval = aval.at[wnode].set(vals, mode="drop")
+    astate = astate.at[wnode].set(LIVE, mode="drop")
+    idx = jnp.arange(q, dtype=I32)
+    sortkey = jnp.where(can, b, nb)
+    order = jnp.lexsort((idx, sortkey))
+    sb, snode, scan = sortkey[order], node[order], can[order]
+    nxt_same = jnp.concatenate([snode[1:], jnp.full((1,), -1, I32)])
+    same_bucket = jnp.concatenate([sb[1:] == sb[:-1], jnp.zeros((1,), bool)])
+    old_head = heads[jnp.where(scan, sb, 0)]
+    nxt = jnp.where(same_bucket, nxt_same, jnp.where(scan, old_head, -1))
+    anext = anext.at[jnp.where(scan, snode, n)].set(nxt, mode="drop")
+    is_start = jnp.concatenate([jnp.ones((1,), bool), sb[1:] != sb[:-1]])
+    heads = heads.at[jnp.where(scan & is_start, sb, nb)].set(snode,
+                                                             mode="drop")
+    free_top = free_top - jnp.sum(can.astype(I32))
+    return akey, aval, astate, anext, heads, free_top, can
+
+
+def chain_ordered_lookup_ref(old_arena, old_links, new_arena, new_links,
+                             hazard_key, hazard_val, hazard_live,
+                             b_old, b_new, qkey, max_chain: int):
+    """The paper's ordered three-way check over chained tables:
+    old chains -> hazard buffer -> new chains."""
+    f_old, v_old, _ = chain_lookup_ref(*old_arena, *old_links, b_old, qkey,
+                                       max_chain)
+    eq = (qkey[:, None] == hazard_key[None, :]) & hazard_live[None, :]
+    f_hz = eq.any(-1)
+    v_hz = jnp.take(hazard_val, jnp.argmax(eq, axis=-1))
+    f_new, v_new, _ = chain_lookup_ref(*new_arena, *new_links, b_new, qkey,
+                                       max_chain)
+    found = f_old | f_hz | f_new
+    val = jnp.where(f_old, v_old, jnp.where(f_hz, v_hz, v_new))
+    return found, val
+
+
 def tc_delete_ref(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
                   rows_a: jax.Array, rows_b: jax.Array, keys: jax.Array,
                   mask: jax.Array):

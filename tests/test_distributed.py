@@ -15,6 +15,14 @@ from functools import partial
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.core import dhash, distributed as dd, hashing
 
+# jax >= 0.6 exposes jax.shard_map (check_vma); 0.4/0.5 ship it under
+# jax.experimental.shard_map with the older check_rep spelling
+if hasattr(jax, "shard_map"):
+    shard_map, _smap_kw = jax.shard_map, {"check_vma": False}
+else:
+    from jax.experimental.shard_map import shard_map
+    _smap_kw = {"check_rep": False}
+
 mesh = jax.sharding.Mesh(np.array(jax.devices()).reshape(8), ("model",))
 owner = hashing.fresh("tabulation", 7)
 stacked = dd.make_stacked(8, "linear", capacity=256, chunk=64, seed=0)
@@ -25,7 +33,7 @@ stacked = jtu.tree_map(
 keys = jnp.arange(1, 513, dtype=jnp.int32)
 vals = keys * 3
 
-@partial(jax.shard_map, mesh=mesh, check_vma=False,
+@partial(shard_map, mesh=mesh, **_smap_kw,
          in_specs=(tspec, P("model"), P("model"), P("model"), P("model")),
          out_specs=(tspec, P("model")))
 def service(dstack, lk, ik, iv, dk):
@@ -41,7 +49,7 @@ found_total = int(np.asarray(stats)[:, 0].sum())
 assert found_total == 512, found_total
 
 # capped routing agrees with uncapped under uniform keys
-@partial(jax.shard_map, mesh=mesh, check_vma=False,
+@partial(shard_map, mesh=mesh, **_smap_kw,
          in_specs=(tspec, P("model")), out_specs=(P("model"), P("model")))
 def lookup_capped(dstack, lk):
     d = dd.peel(dstack)

@@ -171,8 +171,9 @@ def test_zero_host_sync_full_fused_write_epoch(monkeypatch):
 
 def test_fused_twochoice_engine_matches_dict_oracle():
     """The twochoice backend on the fused kernels, driven end-to-end in a
-    continuous-rebuild engine against a dict oracle (PR 2 brings twochoice
-    onto the fused path; chain remains the jnp reference)."""
+    continuous-rebuild engine against a dict oracle (PR 2 brought twochoice
+    onto the fused path; the chain backend's engine-level coverage lives in
+    tests/test_differential.py)."""
     rng = np.random.default_rng(6)
     eng = DHashEngine(dhash.make("twochoice", capacity=256, chunk=32, seed=4,
                                  fused=True),

@@ -374,12 +374,13 @@ def test_ordered_delete_fused_matches_staged():
 
 
 @pytest.mark.parametrize("backend,fused", [
-    ("linear", True), ("twochoice", True), ("chain", False),
+    ("linear", True), ("twochoice", True), ("chain", True),
+    ("chain", False),
 ])
 def test_delete_extract_land_parity_all_backends(backend, fused):
     """The full write surface (delete + extract + land + swap) against a
-    dict oracle for every backend — linear/twochoice on the fused kernels,
-    chain as the documented jnp reference."""
+    dict oracle for every backend — all three on the fused kernels, plus
+    chain on the jnp reference path (the fused chain's fallback target)."""
     rng = np.random.default_rng(3)
     d = dhash.make(backend, capacity=512, chunk=64, seed=7, fused=fused)
     oracle: dict[int, int] = {}
@@ -482,3 +483,312 @@ def test_land_fused_uses_insert_kernel():
     jx_j = jax.make_jaxpr(dhash.rebuild_land)(d_j)
     assert _count_primitives(jx_f, ("pallas_call",))["pallas_call"] >= 1
     assert _count_primitives(jx_j, ("pallas_call",))["pallas_call"] == 0
+
+
+# ---------------------------------------------------------------------------
+# chain backend: arena-sorted fused path (PR 4)
+# ---------------------------------------------------------------------------
+
+def _chain_table(nbuckets=64, arena=2048, n_items=600, seed=1, max_chain=64,
+                 compact=True):
+    rng = np.random.default_rng(seed)
+    t = buckets.chain_make(nbuckets, arena, hashing.fresh("mix32", seed),
+                           max_chain=max_chain)
+    keys = jnp.asarray(rng.choice(1_000_000, n_items, replace=False)
+                       .astype(np.int32))
+    t, ok = jax.jit(buckets.chain_insert)(t, keys, keys * 3,
+                                          jnp.ones(keys.shape, bool))
+    assert bool(ok.all())
+    if compact:
+        t = buckets.chain_compact_fused(t)
+    return t, keys
+
+
+def test_chain_compact_fused_invariants():
+    """Compaction produces bucket-sorted, tombstone-compacted segments with
+    valid pointers: per-bucket (start, len) tiles the live prefix, chains
+    walk each segment in order, membership is preserved, and dead nodes are
+    physically reclaimed."""
+    t, keys = _chain_table(compact=False)
+    t, _ = jax.jit(buckets.chain_delete)(t, keys[:150], jnp.ones(150, bool))
+    tc = buckets.chain_compact_fused(t)
+    live = 600 - 150
+    assert int(buckets.chain_dirty(tc)) == 0
+    assert int(tc.sorted_upto) == live
+    assert int(tc.free_top) == tc.arena - live          # tombstones reclaimed
+    bstart, blen = np.asarray(tc.bstart), np.asarray(tc.blen)
+    assert blen.sum() == live
+    np.testing.assert_array_equal(bstart, np.concatenate([[0],
+                                                          blen.cumsum()[:-1]]))
+    # every node's key hashes to the bucket whose segment holds it
+    b_of = np.asarray(hashing.bucket_of(tc.hfn, tc.akey, tc.nbuckets))
+    for b in range(tc.nbuckets):
+        seg = slice(int(bstart[b]), int(bstart[b] + blen[b]))
+        assert (b_of[seg] == b).all()
+    # jnp pointer path still sees exactly the surviving keys
+    f, v, _ = buckets.chain_lookup(tc, keys)
+    np.testing.assert_array_equal(np.asarray(f),
+                                  np.arange(600) >= 150)
+    np.testing.assert_array_equal(np.asarray(v)[150:],
+                                  np.asarray(keys * 3)[150:])
+
+
+def test_chain_fused_matches_jnp():
+    """Fused chain lookup/insert/delete == the jnp pointer-chasing path on
+    EVERY observable — including the exact arena state for insert (same
+    allocation and link order), with duplicates, re-inserts, masked-out
+    entries, and an odd batch size."""
+    rng = np.random.default_rng(4)
+    t, keys = _chain_table()
+    qs = jnp.concatenate([keys, jnp.asarray(
+        rng.integers(2_000_000, 3_000_000, 333).astype(np.int32))])
+    f_j, v_j, l_j = jax.jit(buckets.chain_lookup)(t, qs)
+    f_k, v_k, l_k = jax.jit(buckets.chain_lookup_fused)(t, qs)
+    fm = np.asarray(f_j)
+    np.testing.assert_array_equal(np.asarray(f_k), fm)
+    np.testing.assert_array_equal(np.asarray(v_k)[fm], np.asarray(v_j)[fm])
+    np.testing.assert_array_equal(np.asarray(l_k)[fm], np.asarray(l_j)[fm])
+    assert (np.asarray(l_k)[~fm] == -1).all()
+
+    fresh = jnp.asarray(rng.choice(np.arange(3_000_000, 4_000_000), 200,
+                                   replace=False).astype(np.int32))
+    batch = jnp.concatenate([fresh, fresh[:50], keys[:50]])
+    mask = jnp.ones(batch.shape, bool).at[-10:].set(False)
+    t_j, ok_j = jax.jit(buckets.chain_insert)(t, batch, batch * 7, mask)
+    t_k, ok_k = jax.jit(buckets.chain_insert_fused)(t, batch, batch * 7,
+                                                    mask)
+    np.testing.assert_array_equal(np.asarray(ok_k), np.asarray(ok_j))
+    for fld in ("akey", "aval", "astate", "anext", "heads", "free_top"):
+        np.testing.assert_array_equal(np.asarray(getattr(t_k, fld)),
+                                      np.asarray(getattr(t_j, fld)),
+                                      err_msg=fld)
+
+    dels = jnp.concatenate([keys[:100], fresh[:40], jnp.asarray(
+        rng.integers(5_000_000, 6_000_000, 31).astype(np.int32))])
+    dm = jnp.ones(dels.shape, bool)
+    td_j, okd_j = jax.jit(buckets.chain_delete)(t_j, dels, dm)
+    td_k, okd_k = jax.jit(buckets.chain_delete_fused)(t_k, dels, dm)
+    np.testing.assert_array_equal(np.asarray(okd_k), np.asarray(okd_j))
+    np.testing.assert_array_equal(np.asarray(td_k.astate),
+                                  np.asarray(td_j.astate))
+
+
+def test_chain_kernels_budget():
+    """Budget: every fused chain batch op is ONE argsort + ONE pallas_call
+    (the dirty-tail window is a dynamic_slice compare, the insert relink is
+    a pair of prefix/suffix scans — neither adds a sort), and the
+    compaction pass is exactly ONE segmented sort with no kernel launch."""
+    t, keys = _chain_table()
+    t2, _ = _chain_table(seed=2)
+    rng = np.random.default_rng(0)
+    hk = jnp.asarray(rng.choice(10_000_000, 64, replace=False)
+                     .astype(np.int32))
+    hl = jnp.asarray(rng.random(64) < 0.7)
+    mask = jnp.ones(keys.shape, bool)
+    b = hashing.bucket_of(t.hfn, keys, t.nbuckets)
+    b2 = hashing.bucket_of(t2.hfn, keys, t2.nbuckets)
+    parts, parts2 = buckets._chain_parts(t), buckets._chain_parts(t2)
+
+    jx = jax.make_jaxpr(lambda *a: ops.chain_lookup_fused(*a, max_chain=64))(
+        *parts, b, keys)
+    assert _count_primitives(jx, ("sort", "pallas_call")) == \
+        {"sort": 1, "pallas_call": 1}
+
+    jx = jax.make_jaxpr(lambda *a: ops.chain_delete_fused(*a, max_chain=64))(
+        *parts, b, keys, mask)
+    assert _count_primitives(jx, ("sort", "pallas_call")) == \
+        {"sort": 1, "pallas_call": 1}
+
+    jx = jax.make_jaxpr(lambda *a: ops.chain_insert_fused(*a, max_chain=64))(
+        parts[0], parts[1], parts[2], t.free_stack, t.free_top, b,
+        keys, keys * 2, mask)
+    assert _count_primitives(jx, ("sort", "pallas_call")) == \
+        {"sort": 1, "pallas_call": 1}
+
+    jx = jax.make_jaxpr(
+        lambda *a: ops.chain_ordered_lookup(*a, max_chain=64))(
+        *parts, *parts2, hk, hk * 7, hl, b, b2, keys)
+    assert _count_primitives(jx, ("sort", "pallas_call")) == \
+        {"sort": 1, "pallas_call": 1}
+
+    jx = jax.make_jaxpr(
+        lambda *a: ops.chain_ordered_delete(*a, max_chain=64))(
+        *parts, *parts2, hk, hk * 7, hl, b, b2, keys, mask)
+    assert _count_primitives(jx, ("sort", "pallas_call")) == \
+        {"sort": 1, "pallas_call": 1}
+
+    jx = jax.make_jaxpr(
+        lambda *a: ops.chain_compact_fused(*a, nbuckets=t.nbuckets))(
+        t.akey, t.aval, t.astate, hashing.bucket_of(t.hfn, t.akey,
+                                                    t.nbuckets))
+    assert _count_primitives(jx, ("sort", "pallas_call")) == \
+        {"sort": 1, "pallas_call": 0}
+
+
+def test_chain_staleness_forces_fallback_parity():
+    """Compaction staleness: a dirty tail grown past ops.DIRTY_CAP makes
+    absence unprovable in-pass, so the fused ops must route through the
+    gated pointer-chasing fallback — and stay exact across BOTH sides of
+    the compaction transition."""
+    rng = np.random.default_rng(9)
+    t = buckets.chain_make(64, 4096, hashing.fresh("mix32", 9), max_chain=96)
+    keys = jnp.asarray(rng.choice(1_000_000, ops.DIRTY_CAP + 188,
+                                  replace=False).astype(np.int32))
+    t, ok = jax.jit(buckets.chain_insert_fused)(t, keys, keys * 2,
+                                                jnp.ones(keys.shape, bool))
+    assert bool(ok.all())
+    assert int(buckets.chain_dirty(t)) > ops.DIRTY_CAP   # stale: past the window
+    qs = jnp.concatenate([keys, jnp.asarray(
+        rng.integers(2_000_000, 3_000_000, 101).astype(np.int32))])
+    f_j, v_j, _ = jax.jit(buckets.chain_lookup)(t, qs)
+    f_k, v_k, _ = jax.jit(buckets.chain_lookup_fused)(t, qs)
+    fm = np.asarray(f_j)
+    np.testing.assert_array_equal(np.asarray(f_k), fm)
+    np.testing.assert_array_equal(np.asarray(v_k)[fm], np.asarray(v_j)[fm])
+    # the trigger restores the sorted invariant at exactly this threshold...
+    t2 = jax.jit(buckets.chain_maybe_compact)(t)
+    assert int(buckets.chain_dirty(t2)) == 0
+    # ...and a below-threshold table is left untouched (cond not taken)
+    t3 = jax.jit(buckets.chain_maybe_compact)(t2)
+    np.testing.assert_array_equal(np.asarray(t3.akey), np.asarray(t2.akey))
+    f_c, v_c, _ = jax.jit(buckets.chain_lookup_fused)(t2, qs)
+    np.testing.assert_array_equal(np.asarray(f_c), fm)
+    np.testing.assert_array_equal(np.asarray(v_c)[fm], np.asarray(v_j)[fm])
+
+
+def test_chain_ordered_matches_ref_grown_arena():
+    """Fused chain rebuild-epoch lookup/delete == the pointer-chasing
+    ordered oracle with a 4x-grown, partially-landed new arena carrying a
+    dirty tail, live hazard entries, duplicates, and absent keys."""
+    rng = np.random.default_rng(1)
+    told, k1 = _chain_table(seed=2)
+    tnew = buckets.chain_make(256, 8192, hashing.fresh("mix32", 3),
+                              max_chain=64)
+    k2 = jnp.asarray(rng.choice(np.arange(1_000_000, 2_000_000), 400,
+                                replace=False).astype(np.int32))
+    tnew, _ = jax.jit(buckets.chain_insert)(tnew, k2, k2 * 5,
+                                            jnp.ones(400, bool))
+    tnew = buckets.chain_compact_fused(tnew)
+    k3 = jnp.asarray(rng.choice(np.arange(4_000_000, 5_000_000), 120,
+                                replace=False).astype(np.int32))
+    tnew, _ = jax.jit(buckets.chain_insert_fused)(tnew, k3, k3 * 9,
+                                                  jnp.ones(120, bool))
+    assert int(buckets.chain_dirty(tnew)) == 120
+    hk = jnp.asarray(rng.choice(np.arange(6_000_000, 7_000_000), 64,
+                                replace=False).astype(np.int32))
+    hv, hl = hk * 7, jnp.asarray(rng.random(64) < 0.7)
+    qs = jnp.concatenate([k1[:200], k2[:200], k3[:60], hk, jnp.tile(k1[:64], 2),
+                          jnp.asarray(rng.integers(8_000_000, 9_000_000, 333)
+                                      .astype(np.int32))])
+    f_k, v_k = jax.jit(buckets.chain_ordered_lookup_fused)(
+        told, tnew, hk, hv, hl, qs)
+    bqo = hashing.bucket_of(told.hfn, qs, told.nbuckets)
+    bqn = hashing.bucket_of(tnew.hfn, qs, tnew.nbuckets)
+    f_r, v_r = ref.chain_ordered_lookup_ref(
+        (told.akey, told.aval, told.astate), (told.anext, told.heads),
+        (tnew.akey, tnew.aval, tnew.astate), (tnew.anext, tnew.heads),
+        hk, hv, hl, bqo, bqn, qs, 64)
+    fm = np.asarray(f_r)
+    np.testing.assert_array_equal(np.asarray(f_k), fm)
+    np.testing.assert_array_equal(np.asarray(v_k)[fm], np.asarray(v_r)[fm])
+
+    dels = jnp.concatenate([k1[::5], k2[::5], k3[::5], hk[:20], jnp.asarray(
+        rng.integers(8_000_000, 9_000_000, 41).astype(np.int32))])
+    dm = jnp.ones(dels.shape, bool)
+    os_, ns_, hl2, ok = jax.jit(buckets.chain_ordered_delete_fused)(
+        told, tnew, hk, hv, hl, dels, dm)
+    # staged jnp oracle: old -> hazard kill -> new
+    winner = buckets.batch_winners(dels, dm)
+    t_o2, ok_o = jax.jit(buckets.chain_delete)(told, dels, dm)
+    pend = dm & ~ok_o
+    eq = (dels[:, None] == hk[None, :]) & hl[None, :]
+    hz_hit = eq.any(-1) & pend & winner
+    kill = (eq & hz_hit[:, None]).any(0)
+    t_n2, ok_n = jax.jit(buckets.chain_delete)(tnew, dels, pend & ~hz_hit)
+    np.testing.assert_array_equal(np.asarray(ok),
+                                  np.asarray(ok_o | hz_hit | ok_n))
+    np.testing.assert_array_equal(np.asarray(os_), np.asarray(t_o2.astate))
+    np.testing.assert_array_equal(np.asarray(ns_), np.asarray(t_n2.astate))
+    np.testing.assert_array_equal(np.asarray(hl2), np.asarray(hl & ~kill))
+
+
+def test_nres_cap_overflow_graceful():
+    """NRES_CAP overflow coverage: a 32x-growth rebuild target overflows
+    the two-level tile map (more new-table blocks than NRES_CAP residents
+    per tile), so SOME queries escape to the gated fallback — the contract
+    is graceful degradation: the escape rate stays bounded, results stay
+    exactly correct, and the structural budget never grows.  Pinning the
+    precondition makes future NRES_CAP raises observable (retune this test
+    when the cap covers 32x)."""
+    rng = np.random.default_rng(3)
+    told, keys, _ = _table(1 << 12, 3_000, seed=21)
+    c_new = (1 << 12) * 32                      # 131072 slots = 32 slabs
+    tnew = buckets.linear_make(c_new, hashing.fresh("mix32", 22),
+                               max_probes=32)
+    k2 = jnp.asarray(rng.choice(np.arange(10_000_000, 20_000_000), 3_000,
+                                replace=False).astype(np.int32))
+    tnew, _ = jax.jit(buckets.linear_insert)(tnew, k2, k2 * 9,
+                                             jnp.ones(k2.shape, bool))
+    hz = jnp.zeros(32, jnp.int32)
+    qs = jnp.concatenate([keys[:1_500], k2[:1_500], jnp.asarray(
+        rng.integers(2**30, 2**31 - 1, 1_096).astype(np.int32))])
+    h0_old = hashing.bucket_of(told.hfn, qs, told.capacity)
+    h0_new = hashing.bucket_of(tnew.hfn, qs, tnew.capacity)
+    args = ((told.key, told.val, told.state), (tnew.key, tnew.val, tnew.state),
+            hz, hz, jnp.zeros(32, bool), h0_old, h0_new, qs)
+    # precondition: this growth genuinely exceeds the tile map's coverage
+    nblocks_new = (-(-(c_new + 32) // ops.SLAB) + 1)
+    assert nblocks_new - 1 > ops.NRES_CAP, \
+        "NRES_CAP was raised; grow this test's target past the new coverage"
+    rate = float(ops.rebuild_escape_rate(*args, max_probes=32))
+    assert 0.0 < rate < 0.5, f"escape rate at 32x growth out of band: {rate}"
+    # graceful: every escaped query is recovered exactly by the fallback
+    f_ref, v_ref = ref.ordered_lookup_ref(*args, max_probes=32)
+    f_k, v_k = ops.ordered_lookup_fused(*args, max_probes=32)
+    np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_ref))
+    np.testing.assert_allclose(np.asarray(v_k), np.asarray(v_ref))
+    # and the budget is unchanged — overflow never buys extra passes
+    jx = jax.make_jaxpr(
+        lambda *a: ops.ordered_lookup_fused(*a, max_probes=32))(*args)
+    assert _count_primitives(jx, ("sort", "pallas_call")) == \
+        {"sort": 1, "pallas_call": 1}
+
+
+# ---------------------------------------------------------------------------
+# compile-mode readiness (real-TPU lowering, CI-skippable)
+# ---------------------------------------------------------------------------
+
+def _tpu_available() -> bool:
+    try:
+        return any(d.platform == "tpu" for d in jax.devices())
+    except RuntimeError:
+        return False
+
+
+@pytest.mark.skipif(not _tpu_available(),
+                    reason="compile-mode (interpret=False) lowering needs a "
+                           "TPU backend; CPU CI validates interpret mode")
+def test_compile_mode_lowering_smoke():
+    """Lower (do NOT execute) the probe-insert kernel and the new chain
+    kernels with interpret=False: catches Mosaic lowering failures — the
+    ROADMAP's known suspects are 1-D broadcasted_iota and bool block
+    outputs — before real-TPU work starts."""
+    import functools
+    t, keys, _ = _table(1 << 12, 1_000, seed=13)
+    h0 = hashing.bucket_of(t.hfn, keys, t.capacity)
+    mask = jnp.ones(keys.shape, bool)
+    jax.jit(functools.partial(ops.probe_insert, max_probes=32,
+                              interpret=False)).lower(
+        t.key, t.val, t.state, h0, keys, keys * 5, mask)
+
+    tc, ckeys = _chain_table()
+    tc2, _ = _chain_table(seed=2)
+    b = hashing.bucket_of(tc.hfn, ckeys, tc.nbuckets)
+    b2 = hashing.bucket_of(tc2.hfn, ckeys, tc2.nbuckets)
+    parts, parts2 = buckets._chain_parts(tc), buckets._chain_parts(tc2)
+    jax.jit(functools.partial(ops.chain_lookup_fused, max_chain=64,
+                              interpret=False)).lower(*parts, b, ckeys)
+    hk = jnp.zeros(64, jnp.int32)
+    jax.jit(functools.partial(ops.chain_ordered_lookup, max_chain=64,
+                              interpret=False)).lower(
+        *parts, *parts2, hk, hk, jnp.zeros(64, bool), b, b2, ckeys)
