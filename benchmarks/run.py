@@ -113,23 +113,34 @@ def chain_fused():
          f"{r['pass_ratio']:.2f}x_fewer_passes")
 
 
+def table_stack():
+    from benchmarks.bench_rebuild import run_table_stack
+    r = run_table_stack(quiet=True)
+    for name in ("stacked", "looped"):
+        _row(f"table_stack/{name}/t{r['n_tables']}", r[name]["wall_us"],
+             f"{r[name]['passes']}launches")
+    _row("table_stack/pass_ratio", 0.0,
+         f"{r['pass_ratio']:.2f}x_fewer_launches")
+
+
 TABLES = [fig2_throughput, fig3_rebuild, fig4_portability, s62_oversubscribe,
           s1_attack, moe_router, kvcache_rehash, fused_probe, fused_writes,
-          chain_fused, growth_escape]
+          chain_fused, growth_escape, table_stack]
 
 
 def quick() -> None:
     """CI smoke mode: exercises the perf harness end-to-end in minutes —
-    the fused-probe, fused-writes, chain-fused, and growth-escape
-    acceptance checks (pass counts + escape rates + their BENCH_*.json
-    artifacts) plus a tiny fig3 rebuild sweep so perf code can't silently
-    rot."""
+    the fused-probe, fused-writes, chain-fused, growth-escape, and
+    table-stack acceptance checks (pass counts + escape rates + their
+    BENCH_*.json artifacts) plus a tiny fig3 rebuild sweep so perf code
+    can't silently rot."""
     print("name,us_per_call,derived")
     t0 = time.time()
     fused_probe()
     fused_writes()
     chain_fused()
     growth_escape()
+    table_stack()
     from benchmarks.bench_rebuild import run as rebuild_run
     for name, n, dt in rebuild_run(ns=(2_000,), quiet=True):
         _row(f"fig3/{name}/n{n}", dt * 1e6, f"{dt*1e3:.1f}ms_full_rebuild")

@@ -1,7 +1,9 @@
 """DHash core: dynamic hash tables with live hash-function rebuild (the
-paper's contribution), modular bucket backends, baselines, and the
-shard_map-distributed table."""
+paper's contribution), the BucketBackend descriptor registry, modular
+bucket backends, baselines, and the shard_map-distributed table."""
 
-from repro.core import baselines, buckets, dhash, distributed, engine, hashing
+from repro.core import (backend, baselines, buckets, dhash, distributed,
+                        engine, hashing)
 
-__all__ = ["baselines", "buckets", "dhash", "distributed", "engine", "hashing"]
+__all__ = ["backend", "baselines", "buckets", "dhash", "distributed",
+           "engine", "hashing"]

@@ -37,10 +37,15 @@ Every backend exposes:
   extract_chunk(t, cursor, n)    -> (t', hkeys, hvals, hlive, new_cursor)
   count_live(t) -> scalar
   capacity_of(t) -> int (static)
+
+This module holds the table pytrees and the plain jnp reference ops.  The
+Pallas-kernel (``*_fused``) adapters and the per-backend dispatch both live
+in ``core/backend.py``: one frozen ``BucketBackend`` descriptor per backend
+bundles constructors, plain/fused/ordered op callables, and layout caps —
+the generic facades at the bottom of this file dispatch through that
+registry, keyed on the table type.
 """
 from __future__ import annotations
-
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -204,64 +209,6 @@ def linear_clear(t: LinearTable) -> LinearTable:
                        key=z, val=z, state=z)
 
 
-# -- Pallas-accelerated linear paths (kernels/ops.py): same observable set
-# semantics as linear_lookup/linear_insert/linear_delete/linear_extract_chunk,
-# hot loop in VMEM ----------------------------------------------------------
-
-def linear_lookup_fused(t: LinearTable, keys: jax.Array, *,
-                        interpret: bool = True):
-    """Kernel-backed lookup.  Returns (found, vals)."""
-    from repro.kernels import ops
-    h0 = hashing.bucket_of(t.hfn, keys, t.capacity)
-    return ops.probe_lookup(t.key, t.val, t.state, h0, keys,
-                            max_probes=t.max_probes, interpret=interpret)
-
-
-def linear_insert_fused(t: LinearTable, keys: jax.Array, vals: jax.Array,
-                        mask: jax.Array, *, interpret: bool = True):
-    """Kernel-backed insert: batch_winners dedup (the kernel's caller
-    contract), then one claim pass + one scatter instead of the
-    O(Q x max_probes) jnp claim loop."""
-    from repro.kernels import ops
-    winner = batch_winners(keys, mask)
-    h0 = hashing.bucket_of(t.hfn, keys, t.capacity)
-    tk, tv, ts, ok = ops.probe_insert(t.key, t.val, t.state, h0, keys, vals,
-                                      winner, max_probes=t.max_probes,
-                                      interpret=interpret)
-    return LinearTable(capacity=t.capacity, max_probes=t.max_probes,
-                       hfn=t.hfn, key=tk, val=tv, state=ts), ok
-
-
-def linear_delete_fused(t: LinearTable, keys: jax.Array, mask: jax.Array, *,
-                        interpret: bool = True):
-    """Kernel-backed delete: the location-emitting probe kernel tombstones
-    in ONE pass (one sort + one pallas_call + one scatter) instead of the
-    jnp lookup-then-scatter double walk."""
-    from repro.kernels import ops
-    winner = batch_winners(keys, mask)
-    h0 = hashing.bucket_of(t.hfn, keys, t.capacity)
-    state, ok = ops.probe_delete(t.key, t.val, t.state, h0, keys, winner,
-                                 max_probes=t.max_probes, interpret=interpret)
-    return LinearTable(capacity=t.capacity, max_probes=t.max_probes,
-                       hfn=t.hfn, key=t.key, val=t.val, state=state), ok
-
-
-def linear_extract_chunk_fused(t: LinearTable, cursor: jax.Array, n: int, *,
-                               interpret: bool = True):
-    """Kernel-backed rebuild chunk scan: one pallas_call over the resident
-    slab window + one MIGRATED scatter; hazard entries come back COMPACTED
-    (live entries first) rather than position-aligned — identical as a set,
-    which is all the hazard protocol observes."""
-    from repro.kernels import ops
-    if n > ops.SLAB:   # window contract; fall back to the jnp scan
-        return linear_extract_chunk(t, cursor, n)
-    state, hk, hv, hl, cur = ops.extract_chunk_fused(
-        t.key, t.val, t.state, cursor, chunk=n, interpret=interpret)
-    t = LinearTable(capacity=t.capacity, max_probes=t.max_probes, hfn=t.hfn,
-                    key=t.key, val=t.val, state=state)
-    return t, hk, hv, hl, cur
-
-
 # ---------------------------------------------------------------------------
 # twochoice: bucketed 2-choice hashing (W-wide vector buckets)
 # ---------------------------------------------------------------------------
@@ -377,123 +324,18 @@ def twochoice_clear(t: TwoChoiceTable) -> TwoChoiceTable:
                           hfn_b=t.hfn_b, key=z, val=z, state=z)
 
 
-# -- Pallas-accelerated twochoice paths (kernels/ops.py): both row choices
-# of a query become two entries of ONE sorted batch — one argsort + one
-# pallas_call replace the [Q, W] double-row gathers --------------------------
-
-def twochoice_lookup_fused(t: TwoChoiceTable, keys: jax.Array, *,
-                           interpret: bool = True):
-    """Kernel-backed 2-choice lookup.  Returns (found, vals, loc) — the same
-    triple as ``twochoice_lookup`` so the delete path can reuse ``loc``."""
-    from repro.kernels import ops
-    ba, bb = _tc_rows(t, keys)
-    return ops.twochoice_lookup(t.key, t.val, t.state, ba, bb, keys,
-                                interpret=interpret)
-
-
-def twochoice_insert_fused(t: TwoChoiceTable, keys: jax.Array,
-                           vals: jax.Array, mask: jax.Array, *,
-                           interpret: bool = True):
-    """Kernel-backed 2-choice insert: batch_winners dedup, then one claim
-    pass + one scatter (a-row claims shadow b-row claims of the same
-    query)."""
-    from repro.kernels import ops
-    winner = batch_winners(keys, mask)
-    ba, bb = _tc_rows(t, keys)
-    tk, tv, ts, ok = ops.twochoice_insert(t.key, t.val, t.state, ba, bb,
-                                          keys, vals, winner,
-                                          max_rounds=t.max_rounds,
-                                          interpret=interpret)
-    return TwoChoiceTable(nbuckets=t.nbuckets, width=t.width,
-                          max_rounds=t.max_rounds, hfn_a=t.hfn_a,
-                          hfn_b=t.hfn_b, key=tk, val=tv, state=ts), ok
-
-
-def twochoice_delete_fused(t: TwoChoiceTable, keys: jax.Array,
-                           mask: jax.Array, *, interpret: bool = True):
-    """Kernel-backed 2-choice delete: reuses the fused lookup's location
-    output — one kernel pass + one tombstone scatter, instead of the jnp
-    path's full second ``twochoice_lookup`` row-gather probe."""
-    from repro.kernels import ops
-    winner = batch_winners(keys, mask)
-    ba, bb = _tc_rows(t, keys)
-    state, ok = ops.twochoice_delete(t.key, t.val, t.state, ba, bb, keys,
-                                     winner, interpret=interpret)
-    return TwoChoiceTable(nbuckets=t.nbuckets, width=t.width,
-                          max_rounds=t.max_rounds, hfn_a=t.hfn_a,
-                          hfn_b=t.hfn_b, key=t.key, val=t.val, state=state), ok
-
-
-def twochoice_ordered_lookup_fused(t_old: TwoChoiceTable,
-                                   t_new: TwoChoiceTable,
-                                   hazard_key: jax.Array,
-                                   hazard_val: jax.Array,
-                                   hazard_live: jax.Array,
-                                   keys: jax.Array, *,
-                                   interpret: bool = True):
-    """Kernel-backed twochoice rebuild-epoch lookup: the whole ordered check
-    (old -> hazard -> new, Lemma 4.1) in ONE argsort + ONE probe2-style
-    pallas_call — previously two composed fused single-table passes.
-    Returns (found, vals)."""
-    from repro.kernels import ops
-    ba_o, bb_o = _tc_rows(t_old, keys)
-    ba_n, bb_n = _tc_rows(t_new, keys)
-    return ops.twochoice_ordered_lookup(
-        (t_old.key, t_old.val, t_old.state),
-        (t_new.key, t_new.val, t_new.state),
-        hazard_key, hazard_val, hazard_live,
-        ba_o, bb_o, ba_n, bb_n, keys, interpret=interpret)
-
-
-def twochoice_ordered_delete_fused(t_old: TwoChoiceTable,
-                                   t_new: TwoChoiceTable,
-                                   hazard_key: jax.Array,
-                                   hazard_val: jax.Array,
-                                   hazard_live: jax.Array,
-                                   keys: jax.Array, mask: jax.Array, *,
-                                   interpret: bool = True):
-    """Kernel-backed twochoice rebuild-epoch delete (paper Alg. 5): the SAME
-    single tc_probe2 pass resolves old-slot / hazard-index / new-slot;
-    three scatters land the result.  Returns the raw
-    (old_state', new_state', hazard_live', ok[Q]) — the dhash layer
-    reassembles its pytrees."""
-    from repro.kernels import ops
-    winner = batch_winners(keys, mask)
-    ba_o, bb_o = _tc_rows(t_old, keys)
-    ba_n, bb_n = _tc_rows(t_new, keys)
-    return ops.twochoice_ordered_delete(
-        (t_old.key, t_old.val, t_old.state),
-        (t_new.key, t_new.val, t_new.state),
-        hazard_key, hazard_val, hazard_live,
-        ba_o, bb_o, ba_n, bb_n, keys, winner, interpret=interpret)
-
-
-def twochoice_extract_chunk_fused(t: TwoChoiceTable, cursor: jax.Array,
-                                  n: int, *, interpret: bool = True):
-    """Kernel-backed 2-choice rebuild chunk scan: the extract kernel runs on
-    the row-major flattened arrays (the scan order is identical)."""
-    from repro.kernels import ops
-    if n > ops.SLAB:
-        return twochoice_extract_chunk(t, cursor, n)
-    state, hk, hv, hl, cur = ops.extract_chunk_fused(
-        t.key.reshape(-1), t.val.reshape(-1), t.state.reshape(-1), cursor,
-        chunk=n, interpret=interpret)
-    t = TwoChoiceTable(nbuckets=t.nbuckets, width=t.width,
-                       max_rounds=t.max_rounds, hfn_a=t.hfn_a, hfn_b=t.hfn_b,
-                       key=t.key, val=t.val,
-                       state=state.reshape(t.nbuckets, t.width))
-    return t, hk, hv, hl, cur
-
-
 # ---------------------------------------------------------------------------
 # chain: arena-based chained buckets (paper-faithful Michael-list analogue)
 # ---------------------------------------------------------------------------
 
-@pytree_dataclass(meta_fields=("nbuckets", "arena", "max_chain"))
+@pytree_dataclass(meta_fields=("nbuckets", "arena", "max_chain", "dirty_cap"))
 class ChainTable:
     nbuckets: int
     arena: int        # node capacity N
     max_chain: int    # traversal bound (>= max expected chain incl. tombstones)
+    dirty_cap: int    # dense-window budget for the post-compaction dirty
+                      # tail (the fused path's coverage bound; the
+                      # ``BucketBackend`` descriptor supplies the default)
     hfn: hashing.HashFn
     akey: jax.Array   # [N] i32
     aval: jax.Array   # [N] i32
@@ -513,13 +355,21 @@ class ChainTable:
     sorted_upto: jax.Array # scalar i32 - arena prefix in bucket-sorted order
 
 
-def chain_make(nbuckets: int, arena: int, hfn: hashing.HashFn, max_chain: int = 64) -> ChainTable:
+def chain_make(nbuckets: int, arena: int, hfn: hashing.HashFn,
+               max_chain: int = 64, dirty_cap: int | None = None) -> ChainTable:
     n = arena
+    if dirty_cap is None:
+        # resolve from the chain descriptor (core/backend.py) so tables
+        # built directly through chain_make agree with registry-built ones
+        # — the descriptor field is the single source of truth for the cap
+        from repro.core import backend
+        dirty_cap = backend.get("chain").dirty_cap
     # free_stack is DESCENDING so pops allocate ascending positions: the
     # allocated region is always the contiguous prefix [0, n - free_top),
     # which is what keeps the fused path's dirty tail a dense window.
     return ChainTable(
-        nbuckets=nbuckets, arena=n, max_chain=max_chain, hfn=hfn,
+        nbuckets=nbuckets, arena=n, max_chain=max_chain, dirty_cap=dirty_cap,
+        hfn=hfn,
         akey=jnp.zeros((n,), I32), aval=jnp.zeros((n,), I32),
         anext=jnp.full((n,), -1, I32), astate=jnp.zeros((n,), I32),
         heads=jnp.full((nbuckets,), -1, I32),
@@ -636,7 +486,7 @@ def chain_compact(t: ChainTable) -> ChainTable:
     batched analogue is a periodic vectorized compaction (also doubles as the
     post-rebuild reclamation of the old arena)."""
     live = t.astate == LIVE
-    fresh = chain_make(t.nbuckets, t.arena, t.hfn, t.max_chain)
+    fresh = chain_make(t.nbuckets, t.arena, t.hfn, t.max_chain, t.dirty_cap)
     t2, _ = chain_insert(fresh, jnp.where(live, t.akey, 0), t.aval, live)
     return t2
 
@@ -658,14 +508,9 @@ def chain_clear(t: ChainTable) -> ChainTable:
         sorted_upto=jnp.asarray(0, I32))
 
 
-# -- Pallas-accelerated chain paths (kernels/ops.py): the arena is kept in
-# bucket-sorted, tombstone-compacted order (per-bucket (start, len) segments
-# replace head/next pointer chasing on the read path), so chain probes are
-# the same slab-window reductions the other backends use.  Nodes inserted
-# since the last compaction live in the contiguous dirty tail and are
-# resolved by a dense window compare (the hazard-buffer treatment); when the
-# tail outgrows ops.DIRTY_CAP the ops escape to the pointer-chasing jnp
-# reference via the gated fallback ---------------------------------------
+# -- The Pallas-accelerated (``*_fused``) chain paths moved to
+# core/backend.py with every other backend's fused adapters: the arena-
+# sorted layout itself (and its jnp maintenance) stays here ----------------
 
 def _chain_parts(t: ChainTable):
     """The raw-array views the chain ops consume: arena triple, link pair
@@ -674,182 +519,70 @@ def _chain_parts(t: ChainTable):
             (t.bstart, t.blen, t.sorted_upto, chain_dirty(t)))
 
 
-def chain_lookup_fused(t: ChainTable, keys: jax.Array, *,
-                       interpret: bool = True):
-    """Kernel-backed chain lookup over the arena-sorted layout.  Returns
-    (found, vals, loc) — ``loc`` is the arena node index (-1 if absent), so
-    the fused delete never probes twice."""
-    from repro.kernels import ops
-    b = hashing.bucket_of(t.hfn, keys, t.nbuckets)
-    return ops.chain_lookup_fused(*_chain_parts(t), b, keys,
-                                  max_chain=t.max_chain, interpret=interpret)
-
-
-def chain_insert_fused(t: ChainTable, keys: jax.Array, vals: jax.Array,
-                       mask: jax.Array, *, interpret: bool = True):
-    """Kernel-backed chain insert: batch_winners dedup, ONE sort keyed on
-    the bucket (it orders both the presence-probe tiles AND the head
-    linking), one presence pallas_call, then vectorized tail allocation +
-    segmented head relink — no pointer chasing.  New nodes extend the dirty
-    tail; call ``chain_maybe_compact`` to restore the sorted invariant."""
-    from repro.kernels import ops
-    winner = batch_winners(keys, mask)
-    b = hashing.bucket_of(t.hfn, keys, t.nbuckets)
-    arena_t, links, seg = _chain_parts(t)
-    akey, aval, astate, anext, heads, free_top, ok = ops.chain_insert_fused(
-        arena_t, links, seg, t.free_stack, t.free_top, b, keys, vals, winner,
-        max_chain=t.max_chain, interpret=interpret)
-    return replace(t, akey=akey, aval=aval, astate=astate, anext=anext,
-                   heads=heads, free_top=free_top), ok
-
-
-def chain_delete_fused(t: ChainTable, keys: jax.Array, mask: jax.Array, *,
-                       interpret: bool = True):
-    """Kernel-backed chain delete: the location-emitting probe (sorted
-    segment window + dirty-tail compare) tombstones in ONE pass."""
-    from repro.kernels import ops
-    winner = batch_winners(keys, mask)
-    b = hashing.bucket_of(t.hfn, keys, t.nbuckets)
-    astate, ok = ops.chain_delete_fused(*_chain_parts(t), b, keys, winner,
-                                        max_chain=t.max_chain,
-                                        interpret=interpret)
-    return replace(t, astate=astate), ok
-
-
-def chain_ordered_lookup_fused(t_old: ChainTable, t_new: ChainTable,
-                               hazard_key: jax.Array, hazard_val: jax.Array,
-                               hazard_live: jax.Array, keys: jax.Array, *,
-                               interpret: bool = True):
-    """Kernel-backed chain rebuild-epoch lookup: the whole ordered check
-    (old -> hazard -> new, Lemma 4.1) in ONE sort + ONE chain_probe2
-    pallas_call, with the PR 3 two-level tile map covering grown new
-    arenas.  Returns (found, vals)."""
-    from repro.kernels import ops
-    b_old = hashing.bucket_of(t_old.hfn, keys, t_old.nbuckets)
-    b_new = hashing.bucket_of(t_new.hfn, keys, t_new.nbuckets)
-    return ops.chain_ordered_lookup(
-        *_chain_parts(t_old), *_chain_parts(t_new),
-        hazard_key, hazard_val, hazard_live, b_old, b_new, keys,
-        max_chain=max(t_old.max_chain, t_new.max_chain), interpret=interpret)
-
-
-def chain_ordered_delete_fused(t_old: ChainTable, t_new: ChainTable,
-                               hazard_key: jax.Array, hazard_val: jax.Array,
-                               hazard_live: jax.Array, keys: jax.Array,
-                               mask: jax.Array, *, interpret: bool = True):
-    """Kernel-backed chain rebuild-epoch delete (paper Alg. 5): the SAME
-    single chain_probe2 pass resolves old-node / hazard-index / new-node;
-    three scatters land the result.  Returns the raw
-    (old_astate', new_astate', hazard_live', ok[Q])."""
-    from repro.kernels import ops
-    winner = batch_winners(keys, mask)
-    b_old = hashing.bucket_of(t_old.hfn, keys, t_old.nbuckets)
-    b_new = hashing.bucket_of(t_new.hfn, keys, t_new.nbuckets)
-    return ops.chain_ordered_delete(
-        *_chain_parts(t_old), *_chain_parts(t_new),
-        hazard_key, hazard_val, hazard_live, b_old, b_new, keys, winner,
-        max_chain=max(t_old.max_chain, t_new.max_chain), interpret=interpret)
-
-
-def chain_extract_chunk_fused(t: ChainTable, cursor: jax.Array, n: int, *,
-                              interpret: bool = True):
-    """Kernel-backed rebuild chunk scan: the arena is a flat array, so the
-    extract kernel runs verbatim (positions are scan order)."""
-    from repro.kernels import ops
-    if n > ops.SLAB:   # window contract; fall back to the jnp scan
-        return chain_extract_chunk(t, cursor, n)
-    astate, hk, hv, hl, cur = ops.extract_chunk_fused(
-        t.akey, t.aval, t.astate, cursor, chunk=n, interpret=interpret)
-    return replace(t, astate=astate), hk, hv, hl, cur
-
-
-def chain_compact_fused(t: ChainTable) -> ChainTable:
-    """Restore the arena-sorted invariant: ONE segmented sort keyed on
-    (bucket, arena index) with dead nodes pushed to the end, the compaction
-    gather, per-bucket (start, len) offsets, and a vectorized pointer
-    rebuild (node i chains to i+1 within its bucket).  Physically reclaims
-    tombstones/migrated nodes; dirty count drops to 0."""
-    from repro.kernels import ops
-    b = hashing.bucket_of(t.hfn, t.akey, t.nbuckets)
-    (akey, aval, astate, anext, heads, free_stack, free_top, bstart, blen,
-     sorted_upto) = ops.chain_compact_fused(t.akey, t.aval, t.astate, b,
-                                            nbuckets=t.nbuckets)
-    return replace(t, akey=akey, aval=aval, astate=astate, anext=anext,
-                   heads=heads, free_stack=free_stack, free_top=free_top,
-                   bstart=bstart, blen=blen, sorted_upto=sorted_upto)
-
-
-def chain_maybe_compact(t: ChainTable, *,
-                        threshold: int | None = None) -> ChainTable:
-    """Compaction trigger: re-sort the arena iff the dirty tail has outgrown
-    the dense-window coverage (``ops.DIRTY_CAP`` by default) — the gate that
-    keeps the fused chain ops on the kernel path.  cond-gated, so the clean
-    steady state never pays the sort."""
-    from repro.kernels import ops
-    thresh = ops.DIRTY_CAP if threshold is None else threshold
-    return jax.lax.cond(chain_dirty(t) > thresh, chain_compact_fused,
-                        lambda tt: tt, t)
-
-
 # ---------------------------------------------------------------------------
-# dispatch facade
+# dispatch facade: generic table-typed entry points over the descriptor
+# registry (core/backend.py) — the jnp ops above are what the registry
+# binds; these facades are for callers holding a bare table pytree
 # ---------------------------------------------------------------------------
 
-_OPS: dict[str, dict[str, Any]] = {
-    "linear": dict(lookup=linear_lookup, insert=linear_insert, delete=linear_delete,
-                   extract_chunk=linear_extract_chunk, count_live=linear_count_live,
-                   clear=linear_clear),
-    "twochoice": dict(lookup=twochoice_lookup, insert=twochoice_insert, delete=twochoice_delete,
-                      extract_chunk=twochoice_extract_chunk, count_live=twochoice_count_live,
-                      clear=twochoice_clear),
-    "chain": dict(lookup=chain_lookup, insert=chain_insert, delete=chain_delete,
-                  extract_chunk=chain_extract_chunk, count_live=chain_count_live,
-                  clear=chain_clear),
-}
+def _be(t):
+    from repro.core import backend
+    return backend.of_table(t)
 
 
 def backend_of(table) -> str:
-    if isinstance(table, LinearTable):
-        return "linear"
-    if isinstance(table, TwoChoiceTable):
-        return "twochoice"
-    if isinstance(table, ChainTable):
-        return "chain"
-    raise TypeError(type(table))
+    """Registry name of a table pytree ("linear"/"twochoice"/"chain"/...)."""
+    return _be(table).name
 
 
 def lookup(t, keys):
-    return _OPS[backend_of(t)]["lookup"](t, keys)
+    return _be(t).lookup(t, keys)
 
 
 def insert(t, keys, vals, mask):
-    return _OPS[backend_of(t)]["insert"](t, keys, vals, mask)
+    return _be(t).insert(t, keys, vals, mask)
 
 
 def delete(t, keys, mask):
-    return _OPS[backend_of(t)]["delete"](t, keys, mask)
+    return _be(t).delete(t, keys, mask)
 
 
 def extract_chunk(t, cursor, n):
-    return _OPS[backend_of(t)]["extract_chunk"](t, cursor, n)
+    return _be(t).extract_chunk(t, cursor, n)
 
 
 def count_live(t):
-    return _OPS[backend_of(t)]["count_live"](t)
+    return _be(t).count_live(t)
 
 
 def clear(t):
     """Empty the table in place (shape/hash-function preserving, jittable) —
     the on-device reset of a drained table before it becomes the next rebuild
     target."""
-    return _OPS[backend_of(t)]["clear"](t)
+    return _be(t).clear(t)
 
 
 def capacity_of(t) -> int:
-    if isinstance(t, LinearTable):
-        return t.capacity
-    if isinstance(t, TwoChoiceTable):
-        return t.nbuckets * t.width
-    if isinstance(t, ChainTable):
-        return t.arena
-    raise TypeError(type(t))
+    return _be(t).capacity_of(t)
+
+
+# Legacy import surface: the fused adapters lived here before the
+# descriptor-protocol refactor collapsed them into core/backend.py.
+_MOVED_TO_BACKEND = (
+    "linear_lookup_fused", "linear_insert_fused", "linear_delete_fused",
+    "linear_extract_chunk_fused",
+    "twochoice_lookup_fused", "twochoice_insert_fused",
+    "twochoice_delete_fused", "twochoice_ordered_lookup_fused",
+    "twochoice_ordered_delete_fused", "twochoice_extract_chunk_fused",
+    "chain_lookup_fused", "chain_insert_fused", "chain_delete_fused",
+    "chain_ordered_lookup_fused", "chain_ordered_delete_fused",
+    "chain_extract_chunk_fused", "chain_compact_fused",
+    "chain_maybe_compact",
+)
+
+
+def __getattr__(name: str):
+    if name in _MOVED_TO_BACKEND:
+        from repro.core import backend
+        return getattr(backend, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -33,6 +33,19 @@ This is the paper's core contribution (§3-§4) mapped to the SPMD/XLA model:
   transition consumes state_t and produces state_{t+1}, so no reader of
   state_t can observe state_{t+1} — the grace period is free.
 
+* **Backend dispatch is the descriptor registry** (core/backend.py): every
+  op below resolves ``DHashState.backend`` to a frozen ``BucketBackend``
+  entry and calls its plain/fused/ordered callables — this module contains
+  zero per-backend branches, which is what keeps the paper's modularity
+  claim real (a new backend is one ``backend.register()`` call).
+
+* **Table stacks** (``make_stack`` + the ``stack_*`` ops): because each
+  backend's state is a uniform pytree with all statics held by the
+  descriptor, a stack of T independent tables is just the same pytree with
+  a leading [T] axis, and every op ``jax.vmap``s over it — T tables served
+  by ONE kernel launch per op, each table free to run its own rebuild epoch
+  (multi-tenant serving: per-tenant page tables in serving/kvcache.py).
+
 Progress-guarantee analogue (DESIGN.md §2): a step's latency is bounded and
 independent of rebuild progress — rebuild costs O(chunk) per transition,
 never a stop-the-world O(N) pause.
@@ -46,28 +59,30 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import buckets, hashing
+from repro.core import backend as backends
+from repro.core import buckets
 from repro.core.struct_utils import pytree_dataclass, replace
 
 I32 = jnp.int32
 
 
-@pytree_dataclass(meta_fields=("backend", "chunk", "fwd_hazard", "fused"))
+@pytree_dataclass(meta_fields=("backend", "chunk", "fwd_hazard", "fused",
+                               "nres_cap"))
 class DHashState:
-    backend: str
+    backend: str                # registry key (core/backend.py)
     chunk: int                  # hazard buffer capacity (entries per rebuild chunk)
-    fwd_hazard: bool            # linear backend: resolve hazard hits via
-                                # MIGRATED-slot forwarding (zero extra passes)
+    fwd_hazard: bool            # backends with a lookup_fwd hook (linear):
+                                # resolve hazard hits via MIGRATED-slot
+                                # forwarding (zero extra passes)
     fused: bool                 # route the FULL op surface (lookup/insert/
                                 # delete + rebuild extract and land) through
-                                # the Pallas kernels (kernels/ops.py) for
-                                # ALL THREE backends; every backend's
-                                # rebuild-epoch lookup AND delete is ONE
-                                # sort + ONE pallas_call (old+hazard+new in
-                                # one pass, two-level tile map for grown new
-                                # tables; chain probes its arena-sorted
-                                # segments and compacts when the dirty tail
-                                # outgrows the dense window)
+                                # the descriptor's Pallas adapters; every
+                                # backend's rebuild-epoch lookup AND delete
+                                # is ONE sort + ONE pallas_call
+    nres_cap: int               # resident new-table blocks per query tile in
+                                # the rebuild-epoch probe (two-level tile
+                                # map) — descriptor default, overridable per
+                                # table at make()
     old: Any                    # active table (backend pytree)
     new: Any                    # target table; meaningful only while rebuilding
     hazard_key: jax.Array       # [chunk] i32
@@ -78,59 +93,51 @@ class DHashState:
     epoch: jax.Array            # scalar i32
 
 
+def _be(d: DHashState) -> backends.BucketBackend:
+    """The descriptor every op dispatches through (static registry lookup —
+    ``d.backend`` is aux data, so this is free under jit)."""
+    return backends.get(d.backend)
+
+
 # ---------------------------------------------------------------------------
 # construction
 # ---------------------------------------------------------------------------
 
-def _make_table(backend: str, capacity: int, seed, *, load_factor: float = 0.75,
-                max_probes: int = 64, bucket_width: int = 8, max_chain: int = 64,
-                nbuckets: int | None = None):
-    """Build an empty backend table sized for ``capacity`` live entries."""
-    rng = np.random.default_rng(seed)
-    if backend == "linear":
-        slots = _next_pow2(int(capacity / load_factor) + 1)
-        return buckets.linear_make(slots, hashing.fresh("mix32", rng), max_probes=max_probes)
-    if backend == "twochoice":
-        nb = _next_pow2(int(capacity / (load_factor * bucket_width)) + 1)
-        return buckets.twochoice_make(nb, hashing.fresh("mix32", rng),
-                                      hashing.fresh("mix32", rng), width=bucket_width)
-    if backend == "chain":
-        nb = nbuckets if nbuckets is not None else _next_pow2(max(capacity // 16, 1))
-        return buckets.chain_make(nb, capacity, hashing.fresh("mix32", rng), max_chain=max_chain)
-    raise ValueError(f"unknown backend {backend!r}")
-
-
-def _next_pow2(x: int) -> int:
-    return 1 << (int(x) - 1).bit_length()
-
-
-FUSED_BACKENDS = ("linear", "twochoice", "chain")
+def _make_table(backend: str, capacity: int, seed, **kw):
+    """Build an empty backend table sized for ``capacity`` live entries
+    (the descriptor's sizing policy)."""
+    return backends.get(backend).make(capacity, seed, **kw)
 
 
 def _fused_default(backend: str) -> bool:
     """Resolve ``fused=None``: the DHASH_FUSED env var (``on``/``1``/``true``)
-    turns the Pallas kernels on for every backend that supports them — the
-    hook CI's fused=on|off test matrix uses to drive the whole suite through
-    the fused paths without touching call sites."""
+    turns the Pallas kernels on for every backend whose descriptor carries
+    the fused op set — the hook CI's fused=on|off test matrix uses to drive
+    the whole suite through the fused paths without touching call sites."""
     flag = os.environ.get("DHASH_FUSED", "off").lower()
-    return flag in ("1", "on", "true") and backend in FUSED_BACKENDS
+    return flag in ("1", "on", "true") and backends.get(backend).fused
 
 
 def make(backend: str = "linear", capacity: int = 1024, *, chunk: int = 256,
          seed: int = 0, fwd_hazard: bool = False, fused: bool | None = None,
-         **kw) -> DHashState:
+         nres_cap: int | None = None, **kw) -> DHashState:
+    be = backends.get(backend)
     if fused is None:
         # fwd_hazard is the alternative (jnp) hazard-resolution strategy; the
         # env default must not silently shadow it with the fused branch
         fused = _fused_default(backend) and not fwd_hazard
-    if fused and backend not in FUSED_BACKENDS:
-        raise ValueError(f"fused kernels are not implemented for backend "
-                         f"{backend!r}; choose from {FUSED_BACKENDS}")
-    old = _make_table(backend, capacity, seed, **kw)
-    new = _make_table(backend, capacity, seed + 1, **kw)
+    if fused and not be.fused:
+        raise ValueError(
+            f"fused kernels are not implemented for backend {backend!r}; "
+            f"fused-capable: "
+            f"{tuple(n for n in backends.names() if backends.get(n).fused)}")
+    if nres_cap is None:
+        nres_cap = be.nres_cap
+    old = be.make(capacity, seed, **kw)
+    new = be.make(capacity, seed + 1, **kw)
     # distinct buffers per field (aliased leaves break jit buffer donation)
     return DHashState(backend=backend, chunk=chunk, fwd_hazard=fwd_hazard,
-                      fused=fused, old=old, new=new,
+                      fused=fused, nres_cap=nres_cap, old=old, new=new,
                       hazard_key=jnp.zeros((chunk,), I32),
                       hazard_val=jnp.zeros((chunk,), I32),
                       hazard_live=jnp.zeros((chunk,), bool),
@@ -152,53 +159,28 @@ def _hazard_probe(d: DHashState, keys: jax.Array):
 def lookup(d: DHashState, keys: jax.Array):
     """Batched lookup honouring the rebuild protocol. Returns (found, vals).
 
-    With ``fused`` both branches run on the Pallas kernels; the
-    rebuild-epoch branch is the fused probe2 kernel (linear) or its
-    twochoice analogue: ONE argsort + ONE pallas_call cover the whole
-    old -> hazard -> new ordered check, with a two-level tile map keeping
-    grown new tables resident."""
+    With ``fused`` both branches run the descriptor's Pallas adapters; the
+    rebuild-epoch branch is the backend's single-pass ordered probe: ONE
+    argsort + ONE pallas_call cover the whole old -> hazard -> new ordered
+    check, with the two-level tile map keeping grown new tables resident."""
+    be = _be(d)
 
     def fast(dd: DHashState):
         if dd.fused:
-            if dd.backend == "twochoice":
-                f, v, _ = buckets.twochoice_lookup_fused(dd.old, keys)
-                return f, v
-            if dd.backend == "chain":
-                f, v, _ = buckets.chain_lookup_fused(dd.old, keys)
-                return f, v
-            return buckets.linear_lookup_fused(dd.old, keys)
-        f, v, _ = buckets.lookup(dd.old, keys)
+            return be.lookup_fused(dd.old, keys)
+        f, v, _ = be.lookup(dd.old, keys)
         return f, v
 
     def slow(dd: DHashState):
-        if dd.fused and dd.backend == "chain":
-            # single-pass chain_probe2 over the arena-sorted segments: one
-            # sort + one pallas_call for the whole ordered check, dirty
-            # tails of both arenas resolved by dense windows
-            return buckets.chain_ordered_lookup_fused(
-                dd.old, dd.new, dd.hazard_key, dd.hazard_val,
-                dd.hazard_live, keys)
-        if dd.fused and dd.backend == "twochoice":
-            # single-pass probe2 analogue: one sort + one tc_probe2
-            # pallas_call for the whole ordered check (was two composed
-            # fused row-gather passes around a separate hazard compare)
-            return buckets.twochoice_ordered_lookup_fused(
-                dd.old, dd.new, dd.hazard_key, dd.hazard_val,
-                dd.hazard_live, keys)
         if dd.fused:
-            from repro.kernels import ops
-            h0_old = hashing.bucket_of(dd.old.hfn, keys, dd.old.capacity)
-            h0_new = hashing.bucket_of(dd.new.hfn, keys, dd.new.capacity)
-            return ops.ordered_lookup_fused(
-                (dd.old.key, dd.old.val, dd.old.state),
-                (dd.new.key, dd.new.val, dd.new.state),
-                dd.hazard_key, dd.hazard_val, dd.hazard_live,
-                h0_old, h0_new, keys, max_probes=dd.old.max_probes)
-        if dd.fwd_hazard and dd.backend == "linear":
+            return be.ordered_lookup_fused(
+                dd.old, dd.new, dd.hazard_key, dd.hazard_val,
+                dd.hazard_live, keys, nres_cap=dd.nres_cap)
+        if dd.fwd_hazard and be.lookup_fwd is not None:
             # beyond-paper: the old-table probe already passes over the
             # MIGRATED slots of the in-flight chunk, so the hazard check is
             # a forwarding index, not a second pass (§Perf dhash-service)
-            f_old, v_old, _, mig = buckets.linear_lookup_fwd(dd.old, keys)
+            f_old, v_old, _, mig = be.lookup_fwd(dd.old, keys)
             base = dd.cursor - dd.chunk
             hz_idx = mig - base
             inwin = (mig >= 0) & (hz_idx >= 0) & (hz_idx < dd.chunk)
@@ -206,9 +188,9 @@ def lookup(d: DHashState, keys: jax.Array):
             f_hz = inwin & dd.hazard_live[safe] & (dd.hazard_key[safe] == keys)
             v_hz = dd.hazard_val[safe]
         else:
-            f_old, v_old, _ = buckets.lookup(dd.old, keys)   # (1) old table
+            f_old, v_old, _ = be.lookup(dd.old, keys)        # (1) old table
             f_hz, v_hz = _hazard_probe(dd, keys)             # (2) rebuild_cur
-        f_new, v_new, _ = buckets.lookup(dd.new, keys)       # (3) new table
+        f_new, v_new, _ = be.lookup(dd.new, keys)            # (3) new table
         found = f_old | f_hz | f_new
         val = jnp.where(f_old, v_old, jnp.where(f_hz, v_hz, v_new))
         return found, val
@@ -217,21 +199,16 @@ def lookup(d: DHashState, keys: jax.Array):
 
 
 def _ins_table(dd: DHashState, t, kk, vv, mm):
-    """Backend-dispatched insert (shared by user inserts and hazard
+    """Descriptor-dispatched insert (shared by user inserts and hazard
     landing, so a fused state's rebuild landing runs the claim kernel).
-    A fused chain table additionally re-sorts its arena when the insert
-    pushes the dirty tail past the dense-window coverage
-    (``chain_maybe_compact`` — cond-gated, free on the clean steady state),
-    which is what keeps chain landings and user inserts on the kernel
-    path."""
-    if dd.fused and dd.backend == "twochoice":
-        return buckets.twochoice_insert_fused(t, kk, vv, mm)
-    if dd.fused and dd.backend == "chain":
-        t2, ok = buckets.chain_insert_fused(t, kk, vv, mm)
-        return buckets.chain_maybe_compact(t2), ok
+    The descriptor's ``insert_fused`` folds any post-insert maintenance —
+    a fused chain table re-sorts its arena when the insert pushes the dirty
+    tail past the dense-window coverage (cond-gated, free on the clean
+    steady state)."""
+    be = _be(dd)
     if dd.fused:
-        return buckets.linear_insert_fused(t, kk, vv, mm)
-    return buckets.insert(t, kk, vv, mm)
+        return be.insert_fused(t, kk, vv, mm)
+    return be.insert(t, kk, vv, mm)
 
 
 def insert(d: DHashState, keys: jax.Array, vals: jax.Array, mask: jax.Array | None = None):
@@ -255,62 +232,34 @@ def delete(d: DHashState, keys: jax.Array, mask: jax.Array | None = None):
     """Batched delete honouring the ordered check (Alg. 5). Returns (state', ok).
 
     With ``fused`` the write path is kernel-backed end to end: the fast
-    branch tombstones via the location-emitting probe kernel, and BOTH
-    fused backends' rebuild-epoch branches are ONE argsort + ONE
-    pallas_call (``ops.ordered_delete_fused`` for linear,
-    ``ops.twochoice_ordered_delete`` for twochoice — the probe2 kernels'
+    branch tombstones via the descriptor's location-emitting probe adapter,
+    and the rebuild-epoch branch is the backend's single-pass
+    ``ordered_delete_fused`` — ONE argsort + ONE pallas_call whose
     slot/hazard-index outputs drive the old tombstone, the hazard kill, and
-    the new tombstone in a single pass)."""
+    the new tombstone."""
     if mask is None:
         mask = jnp.ones(keys.shape, bool)
+    be = _be(d)
 
     def _del(dd: DHashState, t, kk, mm):
         if dd.fused:
-            if dd.backend == "twochoice":
-                return buckets.twochoice_delete_fused(t, kk, mm)
-            if dd.backend == "chain":
-                return buckets.chain_delete_fused(t, kk, mm)
-            return buckets.linear_delete_fused(t, kk, mm)
-        return buckets.delete(t, kk, mm)
+            return be.delete_fused(t, kk, mm)
+        return be.delete(t, kk, mm)
 
     def fast(dd: DHashState):
         t, ok = _del(dd, dd.old, keys, mask)
         return replace(dd, old=t), ok
 
-    def slow_fused_linear(dd: DHashState):
-        from repro.kernels import ops
-        winner = buckets.batch_winners(keys, mask)
-        h0_old = hashing.bucket_of(dd.old.hfn, keys, dd.old.capacity)
-        h0_new = hashing.bucket_of(dd.new.hfn, keys, dd.new.capacity)
-        os_, ns_, hl, ok = ops.ordered_delete_fused(
-            (dd.old.key, dd.old.val, dd.old.state),
-            (dd.new.key, dd.new.val, dd.new.state),
-            dd.hazard_key, dd.hazard_val, dd.hazard_live,
-            h0_old, h0_new, keys, winner, max_probes=dd.old.max_probes)
-        return replace(dd, old=replace(dd.old, state=os_),
-                       new=replace(dd.new, state=ns_), hazard_live=hl), ok
-
-    def slow_fused_twochoice(dd: DHashState):
-        os_, ns_, hl, ok = buckets.twochoice_ordered_delete_fused(
+    def slow_fused(dd: DHashState):
+        os_, ns_, hl, ok = be.ordered_delete_fused(
             dd.old, dd.new, dd.hazard_key, dd.hazard_val, dd.hazard_live,
-            keys, mask)
-        return replace(dd, old=replace(dd.old, state=os_),
-                       new=replace(dd.new, state=ns_), hazard_live=hl), ok
-
-    def slow_fused_chain(dd: DHashState):
-        os_, ns_, hl, ok = buckets.chain_ordered_delete_fused(
-            dd.old, dd.new, dd.hazard_key, dd.hazard_val, dd.hazard_live,
-            keys, mask)
-        return replace(dd, old=replace(dd.old, astate=os_),
-                       new=replace(dd.new, astate=ns_), hazard_live=hl), ok
+            keys, mask, nres_cap=dd.nres_cap)
+        return replace(dd, old=be.with_state(dd.old, os_),
+                       new=be.with_state(dd.new, ns_), hazard_live=hl), ok
 
     def slow(dd: DHashState):
-        if dd.fused and dd.backend == "linear":
-            return slow_fused_linear(dd)
-        if dd.fused and dd.backend == "twochoice":
-            return slow_fused_twochoice(dd)
-        if dd.fused and dd.backend == "chain":
-            return slow_fused_chain(dd)
+        if dd.fused:
+            return slow_fused(dd)
         t_old, ok_old = _del(dd, dd.old, keys, mask)                   # (1) old
         pending = mask & ~ok_old
         # (2) hazard buffer: clear the live bit (LOGICALLY_REMOVED on the
@@ -337,26 +286,18 @@ def rebuild_start(d: DHashState, new_table=None, *, seed: int | None = None) -> 
 
     Caller contract (paper's rebuild_lock): no rebuild may be in progress.
     """
+    be = _be(d)
     if new_table is None:
-        cap = buckets.capacity_of(d.old)
         if seed is None:
             seed = int(np.random.default_rng().integers(1 << 31))
-        if d.backend == "linear":
-            new_table = buckets.linear_make(cap, hashing.fresh("mix32", seed), d.old.max_probes)
-        elif d.backend == "twochoice":
-            rng = np.random.default_rng(seed)
-            new_table = buckets.twochoice_make(d.old.nbuckets, hashing.fresh("mix32", rng),
-                                               hashing.fresh("mix32", rng), width=d.old.width)
-        else:
-            new_table = buckets.chain_make(d.old.nbuckets, d.old.arena,
-                                           hashing.fresh("mix32", seed), d.old.max_chain)
-    if d.fused and d.backend == "chain":
-        # freeze the old arena fully sorted (and tombstone-reclaimed) before
-        # the cursor scan starts: the old side stays dirt-free for the whole
-        # epoch (inserts target the new table), so every rebuild-epoch probe
-        # keeps its segments kernel-resident.  Safe exactly here — the
-        # cursor resets to 0, so node movement cannot skip the scan.
-        d = replace(d, old=buckets.chain_compact_fused(d.old))
+        new_table = be.fresh_like(d.old, seed)
+    if d.fused and be.freeze_old is not None:
+        # pre-epoch maintenance hook (chain: freeze the old arena fully
+        # sorted and tombstone-reclaimed before the cursor scan starts — the
+        # old side stays dirt-free for the whole epoch since inserts target
+        # the new table).  Safe exactly here: the cursor resets to 0, so
+        # node movement cannot skip the scan.
+        d = replace(d, old=be.freeze_old(d.old))
     return replace(d, new=new_table, cursor=jnp.asarray(0, I32),
                    rebuilding=jnp.asarray(True))
 
@@ -368,20 +309,15 @@ def rebuild_extract(d: DHashState) -> DHashState:
     scan is the extract kernel (one pallas_call over the resident slab
     window + one MIGRATED scatter; hazard entries compacted on-device)
     instead of the jnp gather scan."""
+    be = _be(d)
 
     def go(dd: DHashState):
-        if dd.fused and dd.backend == "linear":
-            t, hk, hv, hl, cur = buckets.linear_extract_chunk_fused(
-                dd.old, dd.cursor, dd.chunk)
-        elif dd.fused and dd.backend == "twochoice":
-            t, hk, hv, hl, cur = buckets.twochoice_extract_chunk_fused(
-                dd.old, dd.cursor, dd.chunk)
-        elif dd.fused and dd.backend == "chain":
-            t, hk, hv, hl, cur = buckets.chain_extract_chunk_fused(
-                dd.old, dd.cursor, dd.chunk)
+        if dd.fused:
+            t, hk, hv, hl, cur = be.extract_chunk_fused(dd.old, dd.cursor,
+                                                        dd.chunk)
         else:
-            t, hk, hv, hl, cur = buckets.extract_chunk(dd.old, dd.cursor,
-                                                       dd.chunk)
+            t, hk, hv, hl, cur = be.extract_chunk(dd.old, dd.cursor,
+                                                  dd.chunk)
         return replace(dd, old=t, hazard_key=hk, hazard_val=hv,
                        hazard_live=hl, cursor=cur)
 
@@ -395,17 +331,12 @@ def rebuild_land(d: DHashState) -> DHashState:
     hazard (delete during the hazard period) are dropped.
 
     With ``fused`` the landing runs through the SAME claim kernel as user
-    inserts (``probe_insert`` / ``tc_insert``), so the whole rebuild epoch —
-    extract -> land -> swap — stays on-device inside the jitted engine
-    step."""
+    inserts, so the whole rebuild epoch — extract -> land -> swap — stays
+    on-device inside the jitted engine step."""
 
     def go(dd: DHashState):
-        if dd.fused:
-            t, _ok = _ins_table(dd, dd.new, dd.hazard_key, dd.hazard_val,
-                                dd.hazard_live)
-        else:
-            t, _ok = buckets.insert(dd.new, dd.hazard_key, dd.hazard_val,
-                                    dd.hazard_live)
+        t, _ok = _ins_table(dd, dd.new, dd.hazard_key, dd.hazard_val,
+                            dd.hazard_live)
         return replace(dd, new=t, hazard_live=jnp.zeros_like(dd.hazard_live))
 
     return jax.lax.cond(d.rebuilding, go, lambda dd: dd, d)
@@ -419,7 +350,8 @@ def rebuild_chunk(d: DHashState) -> DHashState:
 
 def rebuild_done(d: DHashState) -> jax.Array:
     """Scalar bool: all chunks migrated and landed."""
-    return d.rebuilding & (d.cursor >= buckets.capacity_of(d.old)) & ~d.hazard_live.any()
+    return d.rebuilding & (d.cursor >= _be(d).capacity_of(d.old)) \
+        & ~d.hazard_live.any()
 
 
 def rebuild_finish(d: DHashState) -> DHashState:
@@ -452,16 +384,6 @@ def rebuild_step(d: DHashState) -> DHashState:
     return jax.lax.cond(d.hazard_live.any(), rebuild_land, rebuild_extract, d)
 
 
-def _reseed_table(t, salt: jax.Array):
-    """Shape-preserving on-device hash refresh for any backend table."""
-    if isinstance(t, buckets.LinearTable):
-        return replace(t, hfn=hashing.reseed(t.hfn, salt))
-    if isinstance(t, buckets.TwoChoiceTable):
-        return replace(t, hfn_a=hashing.reseed(t.hfn_a, salt),
-                       hfn_b=hashing.reseed(t.hfn_b, salt + 0x5851F42))
-    return replace(t, hfn=hashing.reseed(t.hfn, salt))
-
-
 def rebuild_autostart(d: DHashState) -> DHashState:
     """Fully-jitted rebuild start: when NOT rebuilding, clear the (drained)
     standby table, reseed its hash function on-device from the epoch counter
@@ -471,15 +393,16 @@ def rebuild_autostart(d: DHashState) -> DHashState:
     host-level ``rebuild_start``: combined with ``finish_same_shape`` the
     steady state never leaves the accelerator.  Valid when old/new share
     static shapes (same-capacity rebuilds)."""
+    be = _be(d)
 
     def go(dd: DHashState):
-        new = buckets.clear(dd.new)
-        new = _reseed_table(new, dd.epoch + 1)
+        new = be.clear(dd.new)
+        new = be.reseed(new, dd.epoch + 1)
         old = dd.old
-        if dd.fused and dd.backend == "chain":
-            # same old-arena freeze as the host-level rebuild_start: sort +
-            # reclaim once per epoch, before the cursor scan begins
-            old = buckets.chain_compact_fused(old)
+        if dd.fused and be.freeze_old is not None:
+            # same pre-epoch maintenance as the host-level rebuild_start:
+            # sort + reclaim once per epoch, before the cursor scan begins
+            old = be.freeze_old(old)
         return replace(dd, old=old, new=new, cursor=jnp.asarray(0, I32),
                        rebuilding=jnp.asarray(True))
 
@@ -493,7 +416,7 @@ def rebuild_autostart(d: DHashState) -> DHashState:
 def rebuild_all(d: DHashState, *, finish: bool = True) -> DHashState:
     """Run a complete rebuild to quiescence (host loop; used by tests/benches
     that don't care about interleaving)."""
-    cap = buckets.capacity_of(d.old)
+    cap = _be(d).capacity_of(d.old)
     steps = -(-cap // d.chunk) + 1  # +1 in case a hazard chunk is already pending
     chunk_fn = jax.jit(rebuild_chunk)
     done_fn = jax.jit(rebuild_done)
@@ -505,5 +428,96 @@ def rebuild_all(d: DHashState, *, finish: bool = True) -> DHashState:
 
 
 def count_items(d: DHashState) -> jax.Array:
-    return (buckets.count_live(d.old) + buckets.count_live(d.new)
+    be = _be(d)
+    return (be.count_live(d.old) + be.count_live(d.new)
             + d.hazard_live.sum(dtype=I32))
+
+
+# ---------------------------------------------------------------------------
+# table stacks: T independent tables batched over a leading axis
+# ---------------------------------------------------------------------------
+#
+# A stack is an ordinary DHashState whose every array leaf carries a leading
+# [T] axis (the static meta — backend, chunk, fused, nres_cap — is shared).
+# The stack_* ops are jax.vmap over the single-table ops, so T tables cost
+# ONE kernel launch per op (the fused 1-sort/1-pallas_call budget holds per
+# table step) and each table runs its own rebuild epoch — the multi-tenant
+# seam serving/kvcache.py builds per-tenant page tables on.
+
+def make_stack(n_tables: int, backend: str = "linear", capacity: int = 1024,
+               *, chunk: int = 256, seed: int = 0, **kw) -> DHashState:
+    """Build ``n_tables`` independent tables (decorrelated hash seeds)
+    stacked on a leading [T] axis.  All static metadata is shared — that is
+    what makes the stack one uniform pytree ``jax.vmap`` can batch."""
+    if n_tables < 1:
+        raise ValueError(f"need at least one table, got {n_tables}")
+    tables = [make(backend, capacity, chunk=chunk, seed=seed + i, **kw)
+              for i in range(n_tables)]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *tables)
+
+
+def stack_size(d: DHashState) -> int:
+    """Static T of a stacked state (the leading axis of any scalar leaf)."""
+    return d.cursor.shape[0]
+
+
+def unstack(d: DHashState) -> list[DHashState]:
+    """Split a stack back into its T independent single-table states."""
+    return [jax.tree_util.tree_map(lambda x: x[i], d)
+            for i in range(stack_size(d))]
+
+
+def stack_lookup(d: DHashState, keys: jax.Array):
+    """Batched lookup over the stack: keys [T, Q] -> (found, vals) [T, Q]."""
+    return jax.vmap(lookup)(d, keys)
+
+
+def stack_insert(d: DHashState, keys: jax.Array, vals: jax.Array,
+                 mask: jax.Array | None = None):
+    """Batched insert over the stack ([T, Q] operands). Returns (state', ok)."""
+    if mask is None:
+        mask = jnp.ones(keys.shape, bool)
+    return jax.vmap(insert)(d, keys, vals, mask)
+
+
+def stack_delete(d: DHashState, keys: jax.Array,
+                 mask: jax.Array | None = None):
+    """Batched delete over the stack ([T, Q] operands). Returns (state', ok)."""
+    if mask is None:
+        mask = jnp.ones(keys.shape, bool)
+    return jax.vmap(delete)(d, keys, mask)
+
+
+def stack_rebuild_step(d: DHashState) -> DHashState:
+    """One rebuild transition on every (rebuilding) table of the stack —
+    epochs advance independently; idle tables are untouched."""
+    return jax.vmap(rebuild_step)(d)
+
+
+def stack_finish_same_shape(d: DHashState) -> DHashState:
+    """Per-table jitted epoch swap: each table swaps exactly when ITS
+    rebuild completes (staggered epochs across the stack)."""
+    return jax.vmap(finish_same_shape)(d)
+
+
+def stack_autostart(d: DHashState, start: jax.Array | None = None) -> DHashState:
+    """Begin a rebuild on the tables selected by ``start`` [T] bool (all by
+    default); tables already rebuilding are untouched.  Fully jitted — the
+    per-tenant analogue of ``rebuild_autostart``."""
+    if start is None:
+        start = jnp.ones((stack_size(d),), bool)
+
+    def one(dd, s):
+        return jax.lax.cond(s, rebuild_autostart, lambda x: x, dd)
+
+    return jax.vmap(one)(d, start)
+
+
+def stack_rebuild_done(d: DHashState) -> jax.Array:
+    """[T] bool: which tables have a completed-but-unswapped rebuild."""
+    return jax.vmap(rebuild_done)(d)
+
+
+def stack_count_items(d: DHashState) -> jax.Array:
+    """[T] i32: live entries per table (old + new + hazard)."""
+    return jax.vmap(count_items)(d)

@@ -13,7 +13,9 @@ attack) routes without overflow, it just concentrates work.
 
 These functions are written to be called INSIDE ``jax.shard_map`` with the
 table sharded (one leaf-shard per device along ``axis``) and queries sharded
-along their batch dim.
+along their batch dim.  Every shard-local table op dispatches through the
+``BucketBackend`` descriptor registry (core/backend.py), so any registered
+backend — fused or jnp — shards without changes here.
 """
 from __future__ import annotations
 
@@ -64,6 +66,18 @@ def _route(keys: jax.Array, owner: jax.Array, nshards: int,
     return send, smask, order, so, rank, kept
 
 
+def _route_payload(payload: jax.Array, order, so, rank, kept, nshards: int,
+                   cap: int):
+    """Scatter a per-key payload (values, masks) into the [S, cap] send
+    buffer produced by ``_route`` for the same batch — dropped keys (beyond
+    an owner's cap) stay zero.  Shared by the distributed router and the
+    serving tenant router."""
+    cso = jnp.where(kept, so, nshards)
+    crank = jnp.where(kept, rank, 0)
+    return jnp.zeros((nshards, cap), payload.dtype).at[cso, crank].set(
+        payload[order], mode="drop")
+
+
 def _unroute(resp_local: jax.Array, order, so, rank, kept, q, fill=0):
     """Invert _route for a [S, cap] response."""
     gathered = jnp.where(
@@ -101,12 +115,8 @@ def routed_update(d: dhash.DHashState, keys: jax.Array, vals: jax.Array,
     owner = (hashing.hash_u32(owner_hfn, keys) % jnp.uint32(s)).astype(I32)
     send, smask, order, so, rank, kept = _route(keys, owner, s, cap)
     c = send.shape[1]
-    cso = jnp.where(kept, so, s)
-    crank = jnp.where(kept, rank, 0)
-    sendv = jnp.zeros((s, c), vals.dtype).at[cso, crank].set(vals[order],
-                                                             mode="drop")
-    sm2 = jnp.zeros((s, c), bool).at[cso, crank].set(mask[order] & kept,
-                                                     mode="drop")
+    sendv = _route_payload(vals, order, so, rank, kept, s, c)
+    sm2 = _route_payload(mask, order, so, rank, kept, s, c)
     rk = lax.all_to_all(send, axis, split_axis=0, concat_axis=0)
     rv = lax.all_to_all(sendv, axis, split_axis=0, concat_axis=0)
     rm = lax.all_to_all(sm2, axis, split_axis=0, concat_axis=0)
@@ -125,14 +135,15 @@ def routed_rebuild_step(d: dhash.DHashState, axis: str) -> dhash.DHashState:
 
 def make_stacked(nshards: int, backend: str = "linear", capacity: int = 1024,
                  *, chunk: int = 256, seed: int = 0, **kw) -> dhash.DHashState:
-    """Build ``nshards`` independent shard tables stacked on a leading axis.
+    """Build ``nshards`` independent shard tables stacked on a leading axis
+    (``dhash.make_stack`` — the same uniform-pytree stack the vmap ops
+    batch; here the leading axis is sharded over the mesh instead).
 
     Shard the leading axis over the mesh axis, then inside shard_map peel it
     with ``tree_map(lambda x: x[0], stacked)`` — see ``shardwise``.
     """
-    tables = [dhash.make(backend, capacity, chunk=chunk, seed=seed + i, **kw)
-              for i in range(nshards)]
-    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *tables)
+    return dhash.make_stack(nshards, backend, capacity, chunk=chunk,
+                            seed=seed, **kw)
 
 
 def peel(stacked):

@@ -44,6 +44,11 @@ not be used elsewhere.
 
 Used by the benchmarks (continuous-rebuild mode reproduces the paper's Fig 2
 setup) and by the serving engine for live cache rehash.
+
+``DHashStackEngine`` is the multi-table variant: it drives a
+``dhash.make_stack`` state — T independent tables vmapped inside one jitted
+step, each with its OWN rebuild epoch (staggered live rehashes across
+tenants) — through the same donation + K-step polling treatment.
 """
 from __future__ import annotations
 
@@ -52,6 +57,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import dhash
 
@@ -204,3 +210,99 @@ class DHashEngine:
     def _step_cache_size(self) -> int:
         """Total jit cache entries across step variants (retrace detector)."""
         return sum(f._cache_size() for f in self._step_fns.values())
+
+
+@dataclass
+class DHashStackEngine:
+    """Drives a ``dhash.make_stack`` state: T independent tables batched by
+    ``jax.vmap`` inside ONE jitted step (multi-tenant serving loop).
+
+    Per step, every table runs its op batch ([T, Q] operands), one rebuild
+    transition, and its own on-device epoch swap — epochs are fully
+    INDEPENDENT across the stack: ``request_rebuild(mask)`` starts rebuilds
+    on any subset of tables (device-side ``rebuild_autostart`` under the
+    mask, so a stack engine never needs the host-level ``rebuild_start``),
+    and in ``continuous_rebuild`` mode every table that finishes an epoch
+    immediately opens the next.  The same donation + K-step polling
+    treatment as ``DHashEngine`` applies; stacks only support same-shape
+    rebuilds (the vmapped swap is ``finish_same_shape``)."""
+
+    state: dhash.DHashState                # stacked: every leaf leads with [T]
+    continuous_rebuild: bool = False
+    poll_every: int = DEFAULT_POLL_EVERY
+    _stats: EngineStats = field(default_factory=EngineStats, repr=False)
+    _step_fn: Callable | None = field(default=None, init=False, repr=False)
+    _start_fn: Callable | None = field(default=None, init=False, repr=False)
+    _lookup_fn: Callable | None = field(default=None, init=False, repr=False)
+    _count_fn: Callable | None = field(default=None, init=False, repr=False)
+    _epoch0: jnp.ndarray | None = field(default=None, init=False, repr=False)
+    _last_poll_step: int = field(default=-1, init=False, repr=False)
+
+    def __post_init__(self):
+        self.state = jax.tree_util.tree_map(jnp.copy, self.state)
+        self.n_tables = dhash.stack_size(self.state)
+        autostart = self.continuous_rebuild
+
+        def fused(d, lk, ik, iv, dk, imask, dmask):
+            found, vals = dhash.stack_lookup(d, lk)
+            d, ok_i = dhash.stack_insert(d, ik, iv, imask)
+            d, ok_d = dhash.stack_delete(d, dk, dmask)
+            d = dhash.stack_rebuild_step(d)
+            d = dhash.stack_finish_same_shape(d)
+            if autostart:
+                d = dhash.stack_autostart(d)
+            return d, (found, vals, ok_i, ok_d)
+
+        self._step_fn = jax.jit(fused, donate_argnums=(0,))
+        self._start_fn = jax.jit(dhash.stack_autostart)
+        self._lookup_fn = jax.jit(dhash.stack_lookup)
+        self._count_fn = jax.jit(dhash.stack_count_items)
+        self._epoch0 = np.asarray(jax.device_get(self.state.epoch))
+
+    def step(self, lookup_keys, ins_keys, ins_vals, del_keys,
+             ins_mask=None, del_mask=None):
+        """One batched step for all T tables: operands are [T, Q]."""
+        lk = jnp.asarray(lookup_keys, I32)
+        ik = jnp.asarray(ins_keys, I32)
+        iv = jnp.asarray(ins_vals, I32)
+        dk = jnp.asarray(del_keys, I32)
+        im = jnp.ones(ik.shape, bool) if ins_mask is None else jnp.asarray(ins_mask)
+        dm = jnp.ones(dk.shape, bool) if del_mask is None else jnp.asarray(del_mask)
+        self.state, out = self._step_fn(self.state, lk, ik, iv, dk, im, dm)
+        self._stats.steps += 1
+        self._stats.ops += lk.size + ik.size + dk.size
+        if self.poll_every <= 1 or self._stats.steps % self.poll_every == 0:
+            self._poll()
+        return out
+
+    def _poll(self):
+        epochs = np.asarray(jax.device_get(self.state.epoch))
+        self._stats.host_syncs += 1
+        self._last_poll_step = self._stats.steps
+        self._stats.rebuilds_completed = int((epochs - self._epoch0).sum())
+
+    @property
+    def stats(self) -> EngineStats:
+        """Reading stats performs a refresh-only device read ONLY when the
+        engine stepped since the last poll (same contract as
+        ``DHashEngine.stats`` — repeated reads in a step loop stay
+        sync-free)."""
+        if self._stats.steps != self._last_poll_step:
+            self._poll()
+        return self._stats
+
+    def request_rebuild(self, mask=None) -> None:
+        """Start a rebuild on the selected tables ([T] bool; all by default).
+        Tables mid-rebuild are untouched (the paper's trylock: the request
+        is simply lost for them)."""
+        m = (jnp.ones((self.n_tables,), bool) if mask is None
+             else jnp.asarray(mask, bool))
+        self.state = self._start_fn(self.state, m)
+
+    def lookup(self, keys):
+        return self._lookup_fn(self.state, jnp.asarray(keys, I32))
+
+    def counts(self) -> np.ndarray:
+        """[T] live-entry counts (one host sync)."""
+        self._stats.host_syncs += 1
+        return np.asarray(jax.device_get(self._count_fn(self.state)))

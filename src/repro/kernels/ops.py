@@ -52,15 +52,20 @@ EMPTY, LIVE, TOMB, MIGRATED = 0, 1, 2, 3
 # second level of the two-level tile map).  16 block pairs cover a new table
 # of up to ~16 SLABs (64K slots) COMPLETELY — a 16x growth rebuild of the
 # default benchmark tables stays fully fused; beyond that, the least-
-# populated blocks of a tile overflow to the gated jnp fallback.
+# populated blocks of a tile overflow to the gated jnp fallback.  This is
+# the DEFAULT of the ``nres_cap`` parameter the rebuild-epoch ops accept;
+# the per-backend value lives on the ``BucketBackend`` descriptor
+# (core/backend.py) and is threaded here through ``dhash.make()``.
 NRES_CAP = 16
 
 # Dirty-tail window of the arena-sorted chain backend: nodes inserted since
 # the last compaction live in a contiguous tail, resolved by a dense window
 # compare (the hazard-buffer treatment).  A tail grown past DIRTY_CAP is no
 # longer fully visible to the window, so the fused chain ops escape to the
-# pointer-chasing jnp reference — ``buckets.chain_maybe_compact`` re-sorts
+# pointer-chasing jnp reference — ``backend.chain_maybe_compact`` re-sorts
 # the arena at exactly this threshold to keep the steady state on-kernel.
+# Like NRES_CAP this is only the DEFAULT of the ``dirty_cap`` parameter;
+# the live value is a ``BucketBackend`` descriptor field.
 DIRTY_CAP = 512
 
 
@@ -182,7 +187,8 @@ def ordered_lookup(old_tables, new_tables, hazard_key, hazard_val, hazard_live,
 
 
 def _probe2_run(old_tables, new_tables, hazard_key, hazard_val, hazard_live,
-                h0_old, h0_new, keys, max_probes: int, interpret: bool):
+                h0_old, h0_new, keys, max_probes: int, interpret: bool,
+                nres_cap: int = NRES_CAP):
     """Shared prep + launch for the fused rebuild-epoch ops: the ONE argsort
     (keyed on the old table's start slot), the two-level new-table tile map
     (per-tile resident blocks, no second sort), and the ONE probe2
@@ -198,7 +204,7 @@ def _probe2_run(old_tables, new_tables, hazard_key, hazard_val, hazard_live,
     h0os, h0ns, qks = _sort_pad_queries(order, qpad, h0_old, h0_new, keys)
     tiles = qpad // QT
     nblocks_new = new_p[0].shape[0] // SLAB
-    nres = min(NRES_CAP, nblocks_new - 1)
+    nres = min(nres_cap, nblocks_new - 1)
     slab2 = jnp.concatenate([
         _tile_base(h0os, tiles, old_p[0].shape[0])[None],
         _resident_blockmap(h0ns // SLAB, tiles, nblocks_new, nres)])
@@ -209,10 +215,11 @@ def _probe2_run(old_tables, new_tables, hazard_key, hazard_val, hazard_live,
     return order, (h0os, h0ns, qks), outs
 
 
-@partial(jax.jit, static_argnames=("max_probes", "interpret"))
+@partial(jax.jit, static_argnames=("max_probes", "interpret", "nres_cap"))
 def ordered_lookup_fused(old_tables, new_tables, hazard_key, hazard_val,
                          hazard_live, h0_old, h0_new, qkey, *,
-                         max_probes: int = 64, interpret: bool = True):
+                         max_probes: int = 64, interpret: bool = True,
+                         nres_cap: int = NRES_CAP):
     """FUSED rebuild-epoch lookup: ONE argsort (keyed on h0_old) and ONE
     pallas_call emit the Lemma-4.1-ordered result for both tables plus the
     hazard buffer.  New-table residency is the two-level tile map: each
@@ -224,7 +231,7 @@ def ordered_lookup_fused(old_tables, new_tables, hazard_key, hazard_val,
     q = qkey.shape[0]
     order, (h0os, h0ns, qks), outs = _probe2_run(
         old_tables, new_tables, hazard_key, hazard_val, hazard_live,
-        h0_old, h0_new, qkey, max_probes, interpret)
+        h0_old, h0_new, qkey, max_probes, interpret, nres_cap)
     found_s, val_s, complete_s = outs[0], outs[1], outs[2]
 
     need = ~complete_s
@@ -244,10 +251,11 @@ def ordered_lookup_fused(old_tables, new_tables, hazard_key, hazard_val,
     return found, val
 
 
-@partial(jax.jit, static_argnames=("max_probes", "interpret"))
+@partial(jax.jit, static_argnames=("max_probes", "interpret", "nres_cap"))
 def rebuild_escape_rate(old_tables, new_tables, hazard_key, hazard_val,
                         hazard_live, h0_old, h0_new, qkey, *,
-                        max_probes: int = 64, interpret: bool = True):
+                        max_probes: int = 64, interpret: bool = True,
+                        nres_cap: int = NRES_CAP):
     """Diagnostic for the growth-escape benchmark: the fraction of
     rebuild-epoch queries the fused probe2 pass could NOT resolve in-kernel
     (``complete=False`` — the gated jnp oracle recomputes exactly these).
@@ -256,7 +264,7 @@ def rebuild_escape_rate(old_tables, new_tables, hazard_key, hazard_val,
     q = qkey.shape[0]
     order, _sorted, outs = _probe2_run(
         old_tables, new_tables, hazard_key, hazard_val, hazard_live,
-        h0_old, h0_new, qkey, max_probes, interpret)
+        h0_old, h0_new, qkey, max_probes, interpret, nres_cap)
     complete_s = outs[2]
     escaped = jnp.zeros((q,), jnp.bool_).at[order].set((~complete_s)[:q])
     return escaped.mean()
@@ -378,10 +386,11 @@ def probe_delete(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
     return tstate2, ok
 
 
-@partial(jax.jit, static_argnames=("max_probes", "interpret"))
+@partial(jax.jit, static_argnames=("max_probes", "interpret", "nres_cap"))
 def ordered_delete_fused(old_tables, new_tables, hazard_key, hazard_val,
                          hazard_live, h0_old, h0_new, keys, mask, *,
-                         max_probes: int = 64, interpret: bool = True):
+                         max_probes: int = 64, interpret: bool = True,
+                         nres_cap: int = NRES_CAP):
     """FUSED rebuild-epoch delete (paper Alg. 5): ONE argsort + ONE
     pallas_call (the probe2 kernel's location outputs) resolve the ordered
     check, then three scatters land the result — tombstone the old-table
@@ -398,7 +407,7 @@ def ordered_delete_fused(old_tables, new_tables, hazard_key, hazard_val,
     qpad = -(-q // QT) * QT
     order, (h0os, h0ns, qks), outs = _probe2_run(
         old_tables, new_tables, hazard_key, hazard_val, hazard_live,
-        h0_old, h0_new, keys, max_probes, interpret)
+        h0_old, h0_new, keys, max_probes, interpret, nres_cap)
     (_found_s, _val_s, complete_s, fold_s, locold_s, hzidx_s,
      locnew_s, _cold_s) = outs
     qms = _pad_to(mask[order], qpad, fill=False)
@@ -633,7 +642,7 @@ def twochoice_delete(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
 
 def _tc_probe2_run(old_t, new_t, hazard_key, hazard_val, hazard_live,
                    rows_a_old, rows_b_old, rows_a_new, rows_b_new, keys,
-                   interpret: bool):
+                   interpret: bool, nres_cap: int = NRES_CAP):
     """Shared prep + launch for the fused twochoice rebuild-epoch ops: the
     2Q entry expansion (each query's two row choices, paired old/new), ONE
     argsort keyed on the OLD row, the two-level resident map for the new
@@ -657,7 +666,7 @@ def _tc_probe2_run(old_t, new_t, hazard_key, hazard_val, hazard_live,
         (ors.reshape(tiles, QT)[:, 0] // slab_r).astype(I32),
         old_p[0].shape[0] // slab_r - 2)
     nblocks_new = new_p[0].shape[0] // slab_r
-    nres = min(NRES_CAP, nblocks_new - 1)
+    nres = min(nres_cap, nblocks_new - 1)
     slab2 = jnp.concatenate([
         obase[None], _resident_blockmap(nrs // slab_r, tiles, nblocks_new,
                                         nres)])
@@ -691,11 +700,12 @@ def _tc_ordered_combine(outs, hazard_key, hazard_val, q: int):
     return fo, vo, lo, f_hz, hzq, v_hz, fn, vn, ln, complete
 
 
-@partial(jax.jit, static_argnames=("interpret",))
+@partial(jax.jit, static_argnames=("interpret", "nres_cap"))
 def twochoice_ordered_lookup(old_t, new_t, hazard_key, hazard_val,
                              hazard_live, rows_a_old, rows_b_old,
                              rows_a_new, rows_b_new, qkey, *,
-                             interpret: bool = True):
+                             interpret: bool = True,
+                             nres_cap: int = NRES_CAP):
     """FUSED twochoice rebuild-epoch lookup: ONE argsort (the 2Q entry batch
     keyed on the old table's row index) + ONE pallas_call emit the
     Lemma-4.1-ordered result — previously this composed TWO fused
@@ -707,7 +717,7 @@ def twochoice_ordered_lookup(old_t, new_t, hazard_key, hazard_val,
     q = qkey.shape[0]
     outs = _tc_probe2_run(old_t, new_t, hazard_key, hazard_val, hazard_live,
                           rows_a_old, rows_b_old, rows_a_new, rows_b_new,
-                          qkey, interpret)
+                          qkey, interpret, nres_cap)
     (fo, vo, _lo, f_hz, _hzq, v_hz, fn, vn, _ln,
      complete) = _tc_ordered_combine(outs, hazard_key, hazard_val, q)
     found = (fo | f_hz | fn) & complete
@@ -736,11 +746,12 @@ def twochoice_ordered_lookup(old_t, new_t, hazard_key, hazard_val,
     return jax.lax.cond(need.any(), fallback, lambda fv: fv, (found, val))
 
 
-@partial(jax.jit, static_argnames=("interpret",))
+@partial(jax.jit, static_argnames=("interpret", "nres_cap"))
 def twochoice_ordered_delete(old_t, new_t, hazard_key, hazard_val,
                              hazard_live, rows_a_old, rows_b_old,
                              rows_a_new, rows_b_new, keys, mask, *,
-                             interpret: bool = True):
+                             interpret: bool = True,
+                             nres_cap: int = NRES_CAP):
     """FUSED twochoice rebuild-epoch delete (paper Alg. 5): the SAME single
     probe2-style pass as the ordered lookup resolves old-slot / hazard-index
     / new-slot, then three scatters land the tombstones and the hazard kill.
@@ -753,7 +764,7 @@ def twochoice_ordered_delete(old_t, new_t, hazard_key, hazard_val,
     q = keys.shape[0]
     outs = _tc_probe2_run(old_t, new_t, hazard_key, hazard_val, hazard_live,
                           rows_a_old, rows_b_old, rows_a_new, rows_b_new,
-                          keys, interpret)
+                          keys, interpret, nres_cap)
     (fo, _vo, lo, f_hz, hzq, _vhz, fn, _vn, ln,
      complete) = _tc_ordered_combine(outs, hazard_key, hazard_val, q)
 
@@ -816,7 +827,8 @@ def twochoice_ordered_delete(old_t, new_t, hazard_key, hazard_val,
 # (consumed only by the fallback), ``seg = (bstart, blen, sorted_upto,
 # dirty)``.
 
-def _chain_dirty_window(arena, sorted_upto, dirty, qkey):
+def _chain_dirty_window(arena, sorted_upto, dirty, qkey,
+                        dirty_cap: int = DIRTY_CAP):
     """Dense compare of the query batch against the arena's dirty tail.
 
     The window is the static-size slice [base, base + size) with
@@ -829,7 +841,7 @@ def _chain_dirty_window(arena, sorted_upto, dirty, qkey):
     """
     akey, aval, astate = arena
     n = akey.shape[0]
-    size = min(DIRTY_CAP, n)
+    size = min(dirty_cap, n)
     base = jnp.minimum(sorted_upto, n - size).astype(I32)
     wk = jax.lax.dynamic_slice(akey, (base,), (size,))
     wv = jax.lax.dynamic_slice(aval, (base,), (size,))
@@ -845,7 +857,8 @@ def _chain_dirty_window(arena, sorted_upto, dirty, qkey):
     return hit, val, loc, covered
 
 
-def _chain_run(arena, seg, bq, qkey, max_chain: int, interpret: bool):
+def _chain_run(arena, seg, bq, qkey, max_chain: int, interpret: bool,
+               dirty_cap: int = DIRTY_CAP):
     """Shared prep + launch for the single-arena chain ops: the ONE sort
     (stable argsort on the bucket — ``bstart`` is nondecreasing in the
     bucket, so segment starts sort with it, and the insert path reuses the
@@ -869,7 +882,8 @@ def _chain_run(arena, seg, bq, qkey, max_chain: int, interpret: bool):
         tk, tv, ts, h0s, qls, qks, slab_base, max_probes=max_chain,
         interpret=interpret)
 
-    fw, vw, lw, covered = _chain_dirty_window(arena, sorted_upto, dirty, qks)
+    fw, vw, lw, covered = _chain_dirty_window(arena, sorted_upto, dirty, qks,
+                                              dirty_cap)
     found_s = f_s | fw
     val_s = jnp.where(f_s, v_s, vw)
     loc_s = jnp.where(f_s, l_s % n, lw)   # physical node index (-1 = absent)
@@ -879,9 +893,9 @@ def _chain_run(arena, seg, bq, qkey, max_chain: int, interpret: bool):
     return order, (qks, bqs), (found_s, val_s, loc_s, need_s)
 
 
-@partial(jax.jit, static_argnames=("max_chain", "interpret"))
+@partial(jax.jit, static_argnames=("max_chain", "interpret", "dirty_cap"))
 def chain_lookup_fused(arena, links, seg, bq, qkey, *, max_chain: int = 64,
-                       interpret: bool = True):
+                       interpret: bool = True, dirty_cap: int = DIRTY_CAP):
     """Fused chain lookup: ONE argsort + ONE chain-probe pallas_call over
     the bucket-sorted segments, a dense dirty-tail window, and the
     pointer-chasing jnp reference as the gated fallback for unresolved
@@ -889,7 +903,7 @@ def chain_lookup_fused(arena, links, seg, bq, qkey, *, max_chain: int = 64,
     is reused by the fused delete so deleting never probes twice."""
     q = qkey.shape[0]
     order, (qks, bqs), (found_s, val_s, loc_s, need_s) = _chain_run(
-        arena, seg, bq, qkey, max_chain, interpret)
+        arena, seg, bq, qkey, max_chain, interpret, dirty_cap)
 
     def fallback(fvl):
         f0, v0, l0 = fvl
@@ -907,9 +921,10 @@ def chain_lookup_fused(arena, links, seg, bq, qkey, *, max_chain: int = 64,
     return found, val, loc
 
 
-@partial(jax.jit, static_argnames=("max_chain", "interpret"))
+@partial(jax.jit, static_argnames=("max_chain", "interpret", "dirty_cap"))
 def chain_delete_fused(arena, links, seg, bq, keys, mask, *,
-                       max_chain: int = 64, interpret: bool = True):
+                       max_chain: int = 64, interpret: bool = True,
+                       dirty_cap: int = DIRTY_CAP):
     """Fused chain delete: the location-emitting probe run + ONE tombstone
     scatter (logical deletion; compaction reclaims).  Caller contract:
     ``mask`` is winner-filtered.  Returns (astate', ok[Q])."""
@@ -917,7 +932,7 @@ def chain_delete_fused(arena, links, seg, bq, keys, mask, *,
     q = keys.shape[0]
     qpad = -(-q // QT) * QT
     order, (qks, bqs), (found_s, _val_s, loc_s, need_s) = _chain_run(
-        arena, seg, bq, keys, max_chain, interpret)
+        arena, seg, bq, keys, max_chain, interpret, dirty_cap)
     qms = _pad_to(mask[order], qpad, fill=False)
 
     ok_s = qms & found_s
@@ -938,10 +953,10 @@ def chain_delete_fused(arena, links, seg, bq, keys, mask, *,
     return astate2, ok
 
 
-@partial(jax.jit, static_argnames=("max_chain", "interpret"))
+@partial(jax.jit, static_argnames=("max_chain", "interpret", "dirty_cap"))
 def chain_insert_fused(arena, links, seg, free_stack, free_top, bq, keys,
                        vals, mask, *, max_chain: int = 64,
-                       interpret: bool = True):
+                       interpret: bool = True, dirty_cap: int = DIRTY_CAP):
     """Fused chain insert: the presence probe (kernel + dirty window +
     gated pointer fallback) and the head relink share the SAME stable sort
     keyed on the bucket, so the whole op is ONE argsort + ONE pallas_call.
@@ -959,7 +974,7 @@ def chain_insert_fused(arena, links, seg, free_stack, free_top, bq, keys,
     nb = heads.shape[0]
     q = keys.shape[0]
     order, (qks, bqs), (found_s, _v, _l, need_s) = _chain_run(
-        arena, seg, bq, keys, max_chain, interpret)
+        arena, seg, bq, keys, max_chain, interpret, dirty_cap)
 
     def fb_present(p):
         fb_f, _, _ = ref.chain_lookup_ref(akey, aval, astate, anext, heads,
@@ -1047,7 +1062,8 @@ def chain_compact_fused(akey, aval, astate, bq_nodes, *, nbuckets: int):
 
 def _chain_probe2_run(old_arena, old_seg, new_arena, new_seg, hazard_key,
                       hazard_val, hazard_live, bq_old, bq_new, keys,
-                      max_chain: int, interpret: bool):
+                      max_chain: int, interpret: bool,
+                      nres_cap: int = NRES_CAP, dirty_cap: int = DIRTY_CAP):
     """Shared prep + launch for the fused chain rebuild-epoch ops: the ONE
     argsort (keyed on the old arena's segment starts), the two-level tile
     map for the new arena's blocks, ONE chain_probe2 pallas_call, and the
@@ -1069,7 +1085,7 @@ def _chain_probe2_run(old_arena, old_seg, new_arena, new_seg, hazard_key,
         order, qpad, h0o, qlo, h0n, qln, keys, bq_old, bq_new)
     tiles = qpad // QT
     nblocks_new = new_p[0].shape[0] // SLAB
-    nres = min(NRES_CAP, nblocks_new - 1)
+    nres = min(nres_cap, nblocks_new - 1)
     slab2 = jnp.concatenate([
         _tile_base(h0os, tiles, old_p[0].shape[0])[None],
         _resident_blockmap(h0ns // SLAB, tiles, nblocks_new, nres)])
@@ -1080,9 +1096,9 @@ def _chain_probe2_run(old_arena, old_seg, new_arena, new_seg, hazard_key,
         interpret=interpret)
 
     fwo, vwo, lwo, cov_o = _chain_dirty_window(old_arena, old_seg[2],
-                                               old_seg[3], qks)
+                                               old_seg[3], qks, dirty_cap)
     fwn, vwn, lwn, cov_n = _chain_dirty_window(new_arena, new_seg[2],
-                                               new_seg[3], qks)
+                                               new_seg[3], qks, dirty_cap)
     fo = f_o | fwo
     vo = jnp.where(f_o, v_o, vwo)
     lo = jnp.where(f_o, l_o % n_old, lwo)
@@ -1102,11 +1118,13 @@ def _chain_probe2_run(old_arena, old_seg, new_arena, new_seg, hazard_key,
                                       ln, complete)
 
 
-@partial(jax.jit, static_argnames=("max_chain", "interpret"))
+@partial(jax.jit, static_argnames=("max_chain", "interpret", "nres_cap",
+                                   "dirty_cap"))
 def chain_ordered_lookup(old_arena, old_links, old_seg, new_arena, new_links,
                          new_seg, hazard_key, hazard_val, hazard_live,
                          bq_old, bq_new, qkey, *, max_chain: int = 64,
-                         interpret: bool = True):
+                         interpret: bool = True, nres_cap: int = NRES_CAP,
+                         dirty_cap: int = DIRTY_CAP):
     """FUSED chain rebuild-epoch lookup: ONE argsort + ONE chain_probe2
     pallas_call emit the Lemma-4.1-ordered result (old arena -> hazard
     buffer -> new arena), with the two-level tile map keeping a grown new
@@ -1116,7 +1134,8 @@ def chain_ordered_lookup(old_arena, old_links, old_seg, new_arena, new_links,
     q = qkey.shape[0]
     order, (qks, bqos, bqns), comps = _chain_probe2_run(
         old_arena, old_seg, new_arena, new_seg, hazard_key, hazard_val,
-        hazard_live, bq_old, bq_new, qkey, max_chain, interpret)
+        hazard_live, bq_old, bq_new, qkey, max_chain, interpret,
+        nres_cap, dirty_cap)
     (fo, vo, _lo, f_hz, _hz, v_hz, fn, vn, _ln, complete) = comps
     found_s = (fo | f_hz | fn) & complete
     val_s = jnp.where(
@@ -1140,11 +1159,13 @@ def chain_ordered_lookup(old_arena, old_links, old_seg, new_arena, new_links,
     return found, val
 
 
-@partial(jax.jit, static_argnames=("max_chain", "interpret"))
+@partial(jax.jit, static_argnames=("max_chain", "interpret", "nres_cap",
+                                   "dirty_cap"))
 def chain_ordered_delete(old_arena, old_links, old_seg, new_arena, new_links,
                          new_seg, hazard_key, hazard_val, hazard_live,
                          bq_old, bq_new, keys, mask, *, max_chain: int = 64,
-                         interpret: bool = True):
+                         interpret: bool = True, nres_cap: int = NRES_CAP,
+                         dirty_cap: int = DIRTY_CAP):
     """FUSED chain rebuild-epoch delete (paper Alg. 5): the SAME single
     chain_probe2 pass resolves old-node / hazard-index / new-node, then
     three scatters land the tombstones and the hazard kill.
@@ -1158,7 +1179,8 @@ def chain_ordered_delete(old_arena, old_links, old_seg, new_arena, new_links,
     qpad = -(-q // QT) * QT
     order, (qks, bqos, bqns), comps = _chain_probe2_run(
         old_arena, old_seg, new_arena, new_seg, hazard_key, hazard_val,
-        hazard_live, bq_old, bq_new, keys, max_chain, interpret)
+        hazard_live, bq_old, bq_new, keys, max_chain, interpret,
+        nres_cap, dirty_cap)
     (fo, _vo, lo, f_hz, hz, _vhz, fn, _vn, ln, complete) = comps
     qms = _pad_to(mask[order], qpad, fill=False)
 

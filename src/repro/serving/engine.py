@@ -8,7 +8,12 @@ Host-side driver (the framework's serve driver, deliverable (b)):
   degrade (bursty admission / adversarial patterns), the engine starts a
   DHash rebuild; every decode step advances it one transition — serving
   latency is flat through the entire rehash (measured in
-  benchmarks/bench_kvcache.py).
+  benchmarks/bench_kvcache.py);
+* **multi-tenant page tables** (``ServeConfig.n_tenants > 1``): the page
+  table is a per-tenant ``dhash.make_stack`` (tenant = seq_id % n_tenants);
+  decode resolves every tenant in one vmapped stack op and rehash epochs
+  run independently per tenant — only the tenants whose load degraded pay a
+  rebuild, with on-device epoch swaps.
 
 The jitted step is fully paged: per layer, K/V of the new token are written
 to the page pool and attention runs flash-decoding over DHash-resolved pages.
@@ -42,6 +47,9 @@ class ServeConfig:
     max_blocks: int = 64          # per-seq block bound (= max_len / page_size)
     max_new_tokens: int = 32
     rehash_load_factor: float = 0.7
+    n_tenants: int = 1            # > 1: per-tenant page-table stack
+                                  # (tenant = seq_id % n_tenants) with
+                                  # INDEPENDENT live rehash epochs
 
 
 def paged_decode_step(params: dict, cfg: ArchConfig, kv: PagedKV,
@@ -111,7 +119,15 @@ class ServingEngine:
         c, s = self.cfg, self.sc
         self.kv = kvcache.make(c.n_layers, s.page_size, s.n_pages,
                                c.n_kv_heads, c.head_dim,
-                               max_blocks=s.max_blocks, dtype=jnp.dtype(c.dtype))
+                               max_blocks=s.max_blocks, dtype=jnp.dtype(c.dtype),
+                               n_tenants=s.n_tenants)
+        self._tenant_epochs0 = (np.asarray(
+            jax.device_get(self.kv.table.epoch)) if s.n_tenants > 1 else None)
+        if s.n_tenants > 1:
+            # one fused poll -> ONE host sync per decode step (loads +
+            # rebuilding flags + epoch counters together)
+            self._tenant_poll = jax.jit(lambda kv: (
+                kvcache.table_load(kv), kv.table.rebuilding, kv.table.epoch))
         b = s.max_seqs
         self.seq_ids = np.zeros((b,), np.int32)
         self.lengths = np.zeros((b,), np.int32)
@@ -202,6 +218,8 @@ class ServingEngine:
 
     # -- live rehash ----------------------------------------------------------
     def _maybe_rehash(self):
+        if self.sc.n_tenants > 1:
+            return self._maybe_rehash_tenants()
         t = self.kv.table
         if bool(jax.device_get(t.rebuilding)):
             if bool(jax.device_get(dhash.rebuild_done(t))):
@@ -213,3 +231,16 @@ class ServingEngine:
         if live / cap > self.sc.rehash_load_factor:
             self.kv = kvcache.replace(
                 self.kv, table=dhash.rebuild_start(t, seed=live + 1))
+
+    def _maybe_rehash_tenants(self):
+        """Per-tenant rehash triggers over the page-table stack: only the
+        tenants whose load degraded start an epoch; completed epochs swap
+        on-device inside ``kvcache.rehash_step``, so no host-side finish is
+        needed.  ``rehashes`` counts COMPLETIONS (epoch deltas across the
+        stack) — the same semantics as the single-tenant path."""
+        loads, rebuilding, epochs = (
+            np.asarray(x) for x in jax.device_get(self._tenant_poll(self.kv)))
+        self.rehashes = int((epochs - self._tenant_epochs0).sum())
+        want = (loads > self.sc.rehash_load_factor) & ~rebuilding
+        if want.any():
+            self.kv = kvcache.start_rehash(self.kv, jnp.asarray(want))

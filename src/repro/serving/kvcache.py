@@ -7,6 +7,15 @@ adversarial request patterns) while decode steps keep resolving pages at
 full rate — lookups follow the ordered old->hazard->new check and never
 block on the rebuild.
 
+**Multi-tenant mode** (``make(..., n_tenants=T)``): the page table becomes a
+``dhash.make_stack`` of T per-tenant tables (tenant = ``seq_id % T``, the
+engine's default partition), batched by the vmapped ``stack_*`` ops — one
+kernel launch resolves every tenant's pages, and each tenant's table runs
+its OWN live rehash epoch (``start_rehash(kv, mask)`` targets exactly the
+tenants whose load degraded; a noisy neighbour's rebuild never touches the
+others' tables).  The page POOL stays shared — pages are fungible; only the
+mapping is isolated per tenant.
+
 Attention over pages is flash-decoding style: a scan over blocks with a
 running (max, denominator) accumulator — no materialization of the gathered
 KV, so the memory roofline term stays at one pass over the live pages.
@@ -18,7 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dhash
+from repro.core import buckets, dhash
+from repro.core.distributed import _route, _route_payload, _unroute
 from repro.core.struct_utils import pytree_dataclass, replace
 
 F32 = jnp.float32
@@ -32,7 +42,7 @@ def block_key(seq_id: jax.Array, block_idx: jax.Array) -> jax.Array:
 
 
 @pytree_dataclass(meta_fields=("layers", "page_size", "n_pages", "kv_heads",
-                               "head_dim", "max_blocks"))
+                               "head_dim", "max_blocks", "n_tenants"))
 class PagedKV:
     layers: int
     page_size: int
@@ -40,25 +50,87 @@ class PagedKV:
     kv_heads: int
     head_dim: int
     max_blocks: int              # blocks per sequence bound
+    n_tenants: int               # 1 = single shared page table; T > 1 = a
+                                 # dhash stack of per-tenant tables
     pool_k: jax.Array            # [L, n_pages, page, KV, HD]
     pool_v: jax.Array
-    table: dhash.DHashState      # block_key -> page id
+    table: dhash.DHashState      # block_key -> page id ([T]-stacked if T > 1)
     free_stack: jax.Array        # [n_pages] i32
     free_top: jax.Array          # scalar i32
 
 
 def make(layers: int, page_size: int, n_pages: int, kv_heads: int,
          head_dim: int, *, max_blocks: int = 4096, dtype=jnp.bfloat16,
-         table_chunk: int = 256, seed: int = 3) -> PagedKV:
+         table_chunk: int = 256, seed: int = 3,
+         n_tenants: int = 1) -> PagedKV:
     shp = (layers, n_pages, page_size, kv_heads, head_dim)
+    if n_tenants == 1:
+        table = dhash.make("linear", capacity=2 * n_pages, chunk=table_chunk,
+                           seed=seed)
+    else:
+        # every tenant's table is sized for the full pool (pages are shared,
+        # so in the worst case one tenant holds them all)
+        table = dhash.make_stack(n_tenants, "linear", capacity=2 * n_pages,
+                                 chunk=table_chunk, seed=seed)
     return PagedKV(
         layers=layers, page_size=page_size, n_pages=n_pages, kv_heads=kv_heads,
-        head_dim=head_dim, max_blocks=max_blocks,
+        head_dim=head_dim, max_blocks=max_blocks, n_tenants=n_tenants,
         pool_k=jnp.zeros(shp, dtype), pool_v=jnp.zeros(shp, dtype),
-        table=dhash.make("linear", capacity=2 * n_pages, chunk=table_chunk,
-                         seed=seed),
+        table=table,
         free_stack=jnp.arange(n_pages, dtype=I32),
         free_top=jnp.asarray(n_pages, I32))
+
+
+def tenant_of(kv: PagedKV, seq_ids: jax.Array) -> jax.Array:
+    """Owning tenant of each sequence (the engine's default partition)."""
+    return (seq_ids.astype(I32) % kv.n_tenants).astype(I32)
+
+
+# -- tenant-routed table access: group a flat key batch by owning tenant
+# (the distributed module's routing buffers), run ONE vmapped stack op,
+# scatter results back to batch order.  n_tenants == 1 short-circuits to
+# the plain single-table op — the historical layout, zero overhead --------
+
+def table_lookup(kv: PagedKV, tenant: jax.Array, keys: jax.Array):
+    """(found[N], vals[N]) across the tenant stack; ``tenant`` aligns with
+    ``keys``."""
+    if kv.n_tenants == 1:
+        return dhash.lookup(kv.table, keys)
+    n = keys.shape[0]
+    send, smask, order, so, rank, kept = _route(keys, tenant, kv.n_tenants)
+    f, v = dhash.stack_lookup(kv.table, send)
+    f = f & smask
+    return (_unroute(f, order, so, rank, kept, n).astype(bool),
+            _unroute(v, order, so, rank, kept, n))
+
+
+def table_insert(kv: PagedKV, tenant: jax.Array, keys: jax.Array,
+                 vals: jax.Array, mask: jax.Array):
+    """(table', ok[N]) across the tenant stack."""
+    if kv.n_tenants == 1:
+        return dhash.insert(kv.table, keys, vals, mask)
+    t = kv.n_tenants
+    n = keys.shape[0]
+    send, smask, order, so, rank, kept = _route(keys, tenant, t)
+    c = send.shape[1]
+    sendv = _route_payload(vals, order, so, rank, kept, t, c)
+    sendm = _route_payload(mask, order, so, rank, kept, t, c)
+    table, ok = dhash.stack_insert(kv.table, send, sendv, sendm)
+    return table, _unroute(ok, order, so, rank, kept, n).astype(bool)
+
+
+def table_delete(kv: PagedKV, tenant: jax.Array, keys: jax.Array,
+                 mask: jax.Array):
+    """(table', ok[N]) across the tenant stack."""
+    if kv.n_tenants == 1:
+        return dhash.delete(kv.table, keys, mask)
+    t = kv.n_tenants
+    n = keys.shape[0]
+    send, smask, order, so, rank, kept = _route(keys, tenant, t)
+    c = send.shape[1]
+    sendm = _route_payload(mask, order, so, rank, kept, t, c)
+    table, ok = dhash.stack_delete(kv.table, send, sendm)
+    return table, _unroute(ok, order, so, rank, kept, n).astype(bool)
 
 
 def resolve_blocks(kv: PagedKV, seq_ids: jax.Array, n_blocks: int):
@@ -67,7 +139,9 @@ def resolve_blocks(kv: PagedKV, seq_ids: jax.Array, n_blocks: int):
     b = seq_ids.shape[0]
     blk = jnp.arange(n_blocks, dtype=I32)
     keys = block_key(seq_ids[:, None], blk[None, :]).reshape(-1)
-    found, page = dhash.lookup(kv.table, keys)
+    tenant = jnp.broadcast_to(tenant_of(kv, seq_ids)[:, None],
+                              (b, n_blocks)).reshape(-1)
+    found, page = table_lookup(kv, tenant, keys)
     return page.reshape(b, n_blocks), found.reshape(b, n_blocks)
 
 
@@ -77,12 +151,13 @@ def alloc_pages(kv: PagedKV, seq_ids: jax.Array, block_idx: jax.Array,
     Idempotent: pairs already mapped keep their page (no leak).
     Returns (kv', pages [B])."""
     keys = block_key(seq_ids, block_idx)
-    present, _ = dhash.lookup(kv.table, keys)
+    tenant = tenant_of(kv, seq_ids)
+    present, _ = table_lookup(kv, tenant, keys)
     want = mask & ~present
     rank = jnp.cumsum(want.astype(I32)) - 1
     can = want & (rank < kv.free_top)
     page = kv.free_stack[jnp.where(can, kv.free_top - 1 - rank, 0)]
-    table, ok = dhash.insert(kv.table, keys, page, can)
+    table, ok = table_insert(kv, tenant, keys, page, can)
     used = jnp.sum((can & ok).astype(I32))
     return replace(kv, table=table, free_top=kv.free_top - used), \
         jnp.where(can, page, -1)
@@ -107,7 +182,7 @@ def append_token(kv: PagedKV, seq_ids: jax.Array, positions: jax.Array,
 
 def resolve_blocks_at(kv: PagedKV, seq_ids: jax.Array, block_idx: jax.Array):
     keys = block_key(seq_ids, block_idx)
-    found, page = dhash.lookup(kv.table, keys)
+    found, page = table_lookup(kv, tenant_of(kv, seq_ids), keys)
     return page, found
 
 
@@ -162,8 +237,10 @@ def free_sequences(kv: PagedKV, seq_ids: jax.Array, max_blocks: int):
     b = seq_ids.shape[0]
     blk = jnp.arange(max_blocks, dtype=I32)
     keys = block_key(seq_ids[:, None], blk[None, :]).reshape(-1)
-    found, pages = dhash.lookup(kv.table, keys)
-    table, ok = dhash.delete(kv.table, keys, found)
+    tenant = jnp.broadcast_to(tenant_of(kv, seq_ids)[:, None],
+                              (b, max_blocks)).reshape(-1)
+    found, pages = table_lookup(kv, tenant, keys)
+    table, ok = table_delete(kv, tenant, keys, found)
     # push freed pages (deterministic order)
     rank = jnp.cumsum(ok.astype(I32)) - 1
     dst = jnp.where(ok, kv.free_top + rank, kv.n_pages)
@@ -174,5 +251,38 @@ def free_sequences(kv: PagedKV, seq_ids: jax.Array, max_blocks: int):
 
 
 def rehash_step(kv: PagedKV) -> PagedKV:
-    """One live rebuild transition on the page table (engine interleaves)."""
-    return replace(kv, table=dhash.rebuild_step(kv.table))
+    """One live rebuild transition on the page table (engine interleaves).
+
+    In multi-tenant mode every tenant advances its own epoch and swaps
+    on-device the moment ITS rebuild completes (``finish_same_shape`` under
+    vmap) — rehashes stay fully independent across the stack."""
+    if kv.n_tenants == 1:
+        return replace(kv, table=dhash.rebuild_step(kv.table))
+    table = dhash.stack_finish_same_shape(
+        dhash.stack_rebuild_step(kv.table))
+    return replace(kv, table=table)
+
+
+def start_rehash(kv: PagedKV, mask: jax.Array | None = None) -> PagedKV:
+    """Begin a live rehash on the selected tenants' tables ([T] bool; all by
+    default).  Tables mid-rebuild are untouched.  Multi-tenant only — the
+    single-table engine drives ``dhash.rebuild_start`` directly (it may
+    resize, which a stack cannot)."""
+    if kv.n_tenants == 1:
+        raise ValueError("start_rehash targets a tenant stack; use "
+                         "dhash.rebuild_start on kv.table for n_tenants=1")
+    return replace(kv, table=dhash.stack_autostart(kv.table, mask))
+
+
+def table_load(kv: PagedKV):
+    """Active-table load factor per tenant table ([T] f32; scalar for a
+    single table) — the serving engine's rehash trigger.  Both shapes use
+    the SAME metric, live entries in the active (old) table over its
+    capacity, so a trigger threshold means one thing regardless of
+    tenancy."""
+    if kv.n_tenants == 1:
+        cap = buckets.capacity_of(kv.table.old)
+        return buckets.count_live(kv.table.old) / cap
+    peel = jax.tree_util.tree_map(lambda x: x[0], kv.table)
+    cap = buckets.capacity_of(peel.old)
+    return jax.vmap(lambda d: buckets.count_live(d.old))(kv.table) / cap

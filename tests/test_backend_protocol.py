@@ -1,0 +1,221 @@
+"""Backend-conformance suite: every ``BucketBackend`` registry entry, fused
+on and off, through ONE shared op-contract checklist against a dict oracle.
+
+This file is the executable form of the descriptor protocol
+(core/backend.py): a new backend that passes here composes with everything
+the DHash layer builds on top (rebuild epochs, engines, stacks, serving).
+It replaces the per-backend fused-vs-jnp parity copies that used to
+accumulate in test_kernels.py (one twochoice copy, one chain copy, ...) —
+kernel-specific tests (budgets, layouts, fallbacks) stay there.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backend, dhash
+
+ALL_BACKENDS = backend.names()
+FUSED_AXIS = [(b, f) for b in ALL_BACKENDS
+              for f in ((False, True) if backend.get(b).fused else (False,))]
+
+PLAIN_OPS = ("make", "fresh_like", "reseed", "capacity_of", "with_state",
+             "lookup", "insert", "delete", "extract_chunk", "count_live",
+             "clear")
+FUSED_OPS = ("lookup_fused", "insert_fused", "delete_fused",
+             "extract_chunk_fused", "ordered_lookup_fused",
+             "ordered_delete_fused")
+
+
+# ---------------------------------------------------------------------------
+# registry shape
+# ---------------------------------------------------------------------------
+
+def test_registry_wellformed():
+    assert set(ALL_BACKENDS) >= {"linear", "twochoice", "chain"}
+    for name in ALL_BACKENDS:
+        be = backend.get(name)
+        assert be.name == name
+        assert isinstance(be.table_cls, type)
+        assert be.nres_cap > 0
+        assert be.dirty_cap >= 0
+        for op in PLAIN_OPS:
+            assert callable(getattr(be, op)), f"{name}.{op}"
+        have = [getattr(be, op) is not None for op in FUSED_OPS]
+        assert all(have) == be.fused and (all(have) or not any(have))
+        t = be.make(128, seed=0)
+        assert isinstance(t, be.table_cls)
+        assert isinstance(be.capacity_of(t), int)
+        assert backend.of_table(t) is be
+        assert dhash.make(name, 128, chunk=32).backend == name
+
+
+def test_registry_rejects_partial_fused_set():
+    be = backend.get("linear")
+    with pytest.raises(ValueError, match="all-or-none"):
+        dataclasses.replace(be, ordered_delete_fused=None)
+    with pytest.raises(ValueError):
+        backend.get("no-such-backend")
+
+
+def test_caps_are_threaded_from_descriptor():
+    """The layout caps live on the descriptor and flow through make():
+    nres_cap onto the DHash state, dirty_cap onto the chain table."""
+    d = dhash.make("linear", 128, chunk=32)
+    assert d.nres_cap == backend.get("linear").nres_cap
+    assert dhash.make("linear", 128, chunk=32, nres_cap=4).nres_cap == 4
+    c = dhash.make("chain", 128, chunk=32)
+    assert c.old.dirty_cap == backend.get("chain").dirty_cap
+    c2 = dhash.make("chain", 128, chunk=32, dirty_cap=64)
+    assert c2.old.dirty_cap == 64 and c2.new.dirty_cap == 64
+
+
+# ---------------------------------------------------------------------------
+# the shared op-contract checklist
+# ---------------------------------------------------------------------------
+
+def _mixed_batches(rng, n_live=300, n_absent=100):
+    live = rng.choice(1_000_000, n_live, replace=False).astype(np.int32) + 1
+    absent = (rng.choice(1_000_000, n_absent, replace=False)
+              .astype(np.int32) + 1_000_001)
+    return jnp.asarray(live), jnp.asarray(absent)
+
+
+@pytest.mark.parametrize("name,fused", FUSED_AXIS)
+def test_table_op_contract(name, fused):
+    """Descriptor-level checklist on a bare table: insert (dups, masks,
+    re-inserts), lookup (hits, misses, loc contract), delete (absent keys,
+    dups), extract -> land round trip, clear, count_live — all against a
+    dict oracle; the fused adapters must agree with the plain ops on every
+    observable."""
+    rng = np.random.default_rng(11)
+    be = backend.get(name)
+    t = be.make(600, seed=5)
+    live, absent = _mixed_batches(rng)
+    n = live.shape[0]
+
+    ins = be.insert_fused if fused else be.insert
+    dele = be.delete_fused if fused else be.delete
+    ext = be.extract_chunk_fused if fused else be.extract_chunk
+
+    def look(tt, keys):
+        if fused:
+            return be.lookup_fused(tt, keys)
+        f, v, _ = be.lookup(tt, keys)
+        return f, v
+
+    # -- insert: duplicates lose, masked-out entries never land
+    batch = jnp.concatenate([live, live[:50]])           # 50 in-batch dups
+    vals = batch * 3
+    mask = jnp.ones(batch.shape, bool).at[n - 20:n].set(False)
+    t, ok = jax.jit(ins)(t, batch, vals, mask)
+    oracle = {int(k): int(k) * 3 for k in live[:n - 20]}
+    assert int(ok.sum()) == len(oracle)
+    assert not bool(ok[n:].any()), "duplicate insert must lose"
+    assert int(be.count_live(t)) == len(oracle)
+
+    # -- re-insert of present keys fails (set semantics)
+    t, ok2 = jax.jit(ins)(t, live[:40], live[:40] * 9,
+                          jnp.ones((40,), bool))
+    assert not bool(ok2.any())
+
+    # -- lookup: hits with values, misses, loc contract on the plain op
+    qs = jnp.concatenate([live, absent])
+    f, v = jax.jit(look)(t, qs)
+    expect_f = np.array([int(k) in oracle for k in np.asarray(qs)])
+    np.testing.assert_array_equal(np.asarray(f), expect_f)
+    np.testing.assert_array_equal(
+        np.asarray(v)[expect_f],
+        np.array([oracle[int(k)] for k in np.asarray(qs)[expect_f]]))
+    _, _, loc = jax.jit(be.lookup)(t, qs)
+    np.testing.assert_array_equal(np.asarray(loc) >= 0, expect_f)
+
+    # -- delete: absent keys and duplicates report False
+    dels = jnp.concatenate([live[:60], absent[:30], live[:10]])
+    t, okd = jax.jit(dele)(t, dels, jnp.ones(dels.shape, bool))
+    expect_d = np.array([int(k) in oracle for k in np.asarray(dels)])
+    expect_d[-10:] = False                               # in-batch dup delete
+    np.testing.assert_array_equal(np.asarray(okd), expect_d)
+    for k in np.asarray(dels[:60]):
+        oracle.pop(int(k), None)
+    assert int(be.count_live(t)) == len(oracle)
+
+    # -- extract sweep -> land into a fresh table: membership preserved
+    fresh = be.fresh_like(t, seed=77)
+    assert (jax.tree_util.tree_structure(fresh)
+            == jax.tree_util.tree_structure(t))
+    assert int(be.count_live(fresh)) == 0
+    cursor = jnp.asarray(0, jnp.int32)
+    cap = be.capacity_of(t)
+    seen = {}
+    for _ in range(-(-cap // 128)):
+        t, hk, hv, hl, cursor = jax.jit(ext, static_argnums=2)(t, cursor, 128)
+        for k, v2, alive in zip(np.asarray(hk), np.asarray(hv),
+                                np.asarray(hl)):
+            if alive:
+                seen[int(k)] = int(v2)
+        fresh, _ = jax.jit(ins)(fresh, hk, hv, hl)
+    assert int(cursor) == cap
+    assert seen == oracle, "extract sweep must surface exactly the live set"
+    assert int(be.count_live(t)) == 0
+    f, v = jax.jit(look)(fresh, live)
+    expect_f = np.array([int(k) in oracle for k in np.asarray(live)])
+    np.testing.assert_array_equal(np.asarray(f), expect_f)
+
+    # -- clear: empty, geometry preserved
+    cleared = jax.jit(be.clear)(fresh)
+    assert int(be.count_live(cleared)) == 0
+    assert not bool(jax.jit(look)(cleared, live)[0].any())
+
+    # -- reseed: pytree structure intact, table still usable
+    reseeded = jax.jit(be.reseed)(be.make(600, seed=5), jnp.asarray(3))
+    r2, okr = jax.jit(ins)(reseeded, live[:50], live[:50] * 3,
+                           jnp.ones((50,), bool))
+    assert bool(okr.all())
+    assert bool(jax.jit(look)(r2, live[:50])[0].all())
+
+
+@pytest.mark.parametrize("name,fused", FUSED_AXIS)
+def test_ordered_ops_contract(name, fused):
+    """Rebuild-epoch surface through dhash (the descriptor's ordered ops
+    when fused): mid-epoch lookup and delete honour old > hazard > new
+    against a dict oracle, including keys landed in the new table."""
+    rng = np.random.default_rng(23)
+    d = dhash.make(name, 400, chunk=64, seed=3, fused=fused)
+    live, absent = _mixed_batches(rng, n_live=250)
+    d, ok = jax.jit(dhash.insert)(d, live, live * 3)
+    assert bool(ok.all())
+    oracle = {int(k): int(k) * 3 for k in np.asarray(live)}
+    d = dhash.rebuild_start(d, seed=41)
+    d = jax.jit(dhash.rebuild_chunk)(d)          # one chunk landed in new
+    d = jax.jit(dhash.rebuild_extract)(d)        # one chunk in hazard
+    ins_new = jnp.asarray(
+        rng.choice(1_000_000, 40, replace=False).astype(np.int32) + 2_000_002)
+    d, ok_i = jax.jit(dhash.insert)(d, ins_new, ins_new * 3)
+    assert bool(ok_i.all())
+    oracle.update({int(k): int(k) * 3 for k in np.asarray(ins_new)})
+
+    qs = jnp.concatenate([live, ins_new, absent])
+    f, v = jax.jit(dhash.lookup)(d, qs)
+    expect_f = np.array([int(k) in oracle for k in np.asarray(qs)])
+    np.testing.assert_array_equal(np.asarray(f), expect_f)
+    np.testing.assert_array_equal(
+        np.asarray(v)[expect_f],
+        np.array([oracle[int(k)] for k in np.asarray(qs)[expect_f]]))
+
+    dels = jnp.concatenate([live[::5], ins_new[:10], absent[:20]])
+    d, okd = jax.jit(dhash.delete)(d, dels)
+    expect_d = np.array([int(k) in oracle for k in np.asarray(dels)])
+    np.testing.assert_array_equal(np.asarray(okd), expect_d)
+    for k in np.asarray(dels):
+        oracle.pop(int(k), None)
+
+    d = dhash.rebuild_all(d)
+    assert int(dhash.count_items(d)) == len(oracle)
+    f, v = jax.jit(dhash.lookup)(d, qs)
+    expect_f = np.array([int(k) in oracle for k in np.asarray(qs)])
+    np.testing.assert_array_equal(np.asarray(f), expect_f)

@@ -414,63 +414,11 @@ def test_delete_extract_land_parity_all_backends(backend, fused):
                                             if int(k) in oracle]))
 
 
-def test_tc_lookup_fused_matches_jnp():
-    """Fused twochoice lookup == jnp on found/loc everywhere and val where
-    found (the jnp path leaves val undefined for misses); odd batch size."""
-    rng = np.random.default_rng(4)
-    tc = buckets.twochoice_make(1 << 9, hashing.fresh("mix32", 1),
-                                hashing.fresh("mix32", 2), width=8)
-    k = jnp.asarray(rng.choice(1_000_000, 1_500, replace=False)
-                    .astype(np.int32))
-    tc, _ = jax.jit(buckets.twochoice_insert)(tc, k, k * 5,
-                                              jnp.ones(1_500, bool))
-    qs = jnp.concatenate([k, jnp.asarray(
-        rng.integers(2_000_000, 3_000_000, 501).astype(np.int32))])
-    f_j, v_j, l_j = jax.jit(buckets.twochoice_lookup)(tc, qs)
-    f_k, v_k, l_k = jax.jit(buckets.twochoice_lookup_fused)(tc, qs)
-    fm = np.asarray(f_j)
-    np.testing.assert_array_equal(np.asarray(f_k), fm)
-    np.testing.assert_array_equal(np.asarray(v_k)[fm], np.asarray(v_j)[fm])
-    np.testing.assert_array_equal(np.asarray(l_k)[fm], np.asarray(l_j)[fm])
-    assert (np.asarray(l_k)[~fm] == -1).all()
-
-
-def test_tc_insert_delete_fused_matches_jnp():
-    """Fused twochoice insert/delete == jnp on ok flags, live counts, and
-    membership, with duplicate keys, re-inserts, and masked-out entries;
-    the fused delete reuses the lookup kernel's loc output (no re-probe)."""
-    rng = np.random.default_rng(9)
-    tc = buckets.twochoice_make(1 << 9, hashing.fresh("mix32", 1),
-                                hashing.fresh("mix32", 2), width=8)
-    base = jnp.asarray(rng.choice(1_000_000, 900, replace=False)
-                       .astype(np.int32))
-    tc, _ = jax.jit(buckets.twochoice_insert)(tc, base, base * 5,
-                                              jnp.ones(900, bool))
-    fresh = jnp.asarray(rng.choice(np.arange(2_000_000, 3_000_000), 400,
-                                   replace=False).astype(np.int32))
-    batch = jnp.concatenate([fresh, fresh[:100], base[:100]])
-    mask = jnp.ones(batch.shape, bool).at[-30:].set(False)
-    t_j, ok_j = jax.jit(buckets.twochoice_insert)(tc, batch, batch * 7, mask)
-    t_k, ok_k = jax.jit(buckets.twochoice_insert_fused)(tc, batch,
-                                                        batch * 7, mask)
-    np.testing.assert_array_equal(np.asarray(ok_k), np.asarray(ok_j))
-    assert int(buckets.twochoice_count_live(t_k)) == \
-        int(buckets.twochoice_count_live(t_j))
-    probe = jnp.concatenate([base, fresh])
-    f_j, v_j, _ = buckets.twochoice_lookup(t_j, probe)
-    f_k, v_k, _ = buckets.twochoice_lookup(t_k, probe)
-    fm = np.asarray(f_j)
-    np.testing.assert_array_equal(np.asarray(f_k), fm)
-    np.testing.assert_array_equal(np.asarray(v_k)[fm], np.asarray(v_j)[fm])
-
-    dels = jnp.concatenate([base[:300], jnp.asarray(
-        rng.integers(4_000_000, 5_000_000, 101).astype(np.int32))])
-    dm = jnp.ones(dels.shape, bool)
-    td_j, okd_j = jax.jit(buckets.twochoice_delete)(t_j, dels, dm)
-    td_k, okd_k = jax.jit(buckets.twochoice_delete_fused)(t_k, dels, dm)
-    np.testing.assert_array_equal(np.asarray(okd_k), np.asarray(okd_j))
-    assert int(buckets.twochoice_count_live(td_k)) == \
-        int(buckets.twochoice_count_live(td_j))
+# (The per-backend fused-vs-jnp parity copies that lived here —
+# test_tc_lookup_fused_matches_jnp, test_tc_insert_delete_fused_matches_jnp —
+# are subsumed by the registry-parameterized op-contract checklist in
+# tests/test_backend_protocol.py, which runs the same assertions for EVERY
+# BucketBackend entry x fused on/off.)
 
 
 def test_land_fused_uses_insert_kernel():
