@@ -9,6 +9,11 @@ SPMD mapping: batch width Q grows far beyond any fixed parallel resource;
 DHash's per-op cost amortizes (vectorization), while the lock-modelled
 tables' serialization rounds grow with Q/B and their throughput flattens or
 falls.
+
+``skew > 0`` draws lookup/delete keys from the suite's SHARED zipf skew
+source (``common.zipf_owners`` — the same generator the routed-stack bench
+uses for tenant load): hot-key concentration models the adversarial
+popularity distribution the capped tenant router is gated under.
 """
 from __future__ import annotations
 
@@ -17,29 +22,32 @@ import numpy as np
 from benchmarks.common import ALGOS, UNIVERSE, Workload, run_throughput
 
 
-def run(alpha=200, qs=(512, 2048, 8192, 16384), *, quiet=False):
+def run(alpha=200, qs=(512, 2048, 8192, 16384), *, skew=0.0, quiet=False):
     nbuckets = 64
     n = alpha * nbuckets
     rng = np.random.default_rng(0)
     present = rng.choice(UNIVERSE, size=n, replace=False).astype(np.int32)
+    tag = f" zipf(a={skew})" if skew > 0 else ""
     rows = []
     for name in ("DHash", "HT-RHT", "HT-Xu"):
         drv = ALGOS[name](nbuckets, n, seed=1)
         drv.populate(present)
         series = []
         for q in qs:
-            wl = Workload(q=q, mix=(80, 10, 10))
+            wl = Workload(q=q, mix=(80, 10, 10), skew=skew)
             mops = run_throughput(drv, wl, present, steps=4,
                                   rng=np.random.default_rng(q)) / 1e6
             series.append(mops)
             rows.append((drv.name, q, mops))
             if not quiet:
-                print(f"{drv.name:14s} Q={q:<6d} {mops:8.3f} Mops/s")
+                print(f"{drv.name:14s} Q={q:<6d}{tag} {mops:8.3f} Mops/s")
         trend = series[-1] / series[0]
-        print(f"[summary] {drv.name}: Q x{qs[-1]//qs[0]} -> throughput x{trend:.2f} "
+        print(f"[summary] {drv.name}{tag}: Q x{qs[-1]//qs[0]} -> "
+              f"throughput x{trend:.2f} "
               f"({'scales' if trend > 1.5 else 'flat/degrades'})")
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    run()                  # uniform keys (the paper's §6.2 setup)
+    run(skew=1.2)          # hot-key zipf via the shared skew source

@@ -721,18 +721,125 @@ def run_table_stack(n_tables=8, capacity=2048, batch=512, *, iters=5,
     return result
 
 
+def run_routed_stack(batch=1024, capacity=1024, cap_factor=2.0, *, iters=5,
+                     quiet=False, out_path=None):
+    """Capped two-pass tenant routing under zipf skew, T in {8, 64}
+    (the Issue-6 tentpole acceptance).
+
+    A flat [Q] key batch with zipf-distributed tenants (the suite's shared
+    skew source, ``common.zipf_owners``) is grouped by the counting-sort
+    router into a ``[T, cap]`` send buffer, ``cap = ceil(c*Q/T)``, and
+    served by ONE vmapped fused stack lookup.  Three things are pinned in
+    BENCH_routed_stack.json and gated by check_regression:
+
+    * **send_bytes_ratio** (gated as a ratio, >= 1.5): buffer width of the
+      full-width baseline over the capped layout, Q/cap = T/c — the
+      wire-bytes and scatter-work win (4x at T=8, 32x at T=64 with c=2);
+    * **per-op budget** (gated structurally): the routed fused lookup
+      lowers to exactly 1 ``sort`` + 1 ``pallas_call`` TOTAL — the router
+      itself is sort-free (histogram + cumsum + 2-D scatter), so routing
+      no longer adds an argsort on top of the kernel's own bucket sort;
+    * **overflow_rate** (gated as a rate): fraction of the zipf batch past
+      its tenant's cap — the exact router spill the serving layer's gated
+      full-width retry pass serves.  Deterministic for the fixed seed;
+      growth means the router or the skew source drifted.
+
+    Wall clocks are interpret-mode (recorded for the trajectory under this
+    artifact's band, not the acceptance); correctness is asserted inline —
+    capped results agree with the full-width route on every kept key.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import zipf_owners
+    from repro.core import backend, dhash
+    from repro.core import distributed as dd
+
+    rng = np.random.default_rng(0)
+    be = backend.get("linear")
+    keys = jnp.asarray(rng.choice(UNIVERSE, size=batch,
+                                  replace=False).astype(np.int32)) + 1
+    result = {"batch": batch, "cap_factor": cap_factor, "interpret": True,
+              "band": 2.5,
+              "workload": "zipf(a=1.2)-skewed tenant lookups through the "
+                          "capped counting-sort router, fused linear stacks"}
+    names = ("sort", "pallas_call")
+    for t in (8, 64):
+        tenant = jnp.asarray(zipf_owners(rng, batch, t))
+        cap = dd.route_cap(cap_factor, batch, t)
+        st = dhash.make_stack(t, "linear", capacity, chunk=256, seed=1,
+                              fused=True)
+        full = dd._route(keys, tenant, t)
+        st, _ = jax.jit(dhash.stack_insert)(st, full.send, full.send * 3,
+                                            full.smask)
+
+        def routed(st, k, tn):
+            rt = dd._route(k, tn, t, cap)
+            f, v = jax.vmap(lambda d, kk: be.lookup_fused(d.old, kk))(
+                st, rt.send)
+            return (dd._unroute(f & rt.smask, rt, fill=False),
+                    dd._unroute(v, rt, fill=0), rt.kept, rt.overflow)
+
+        # the acceptance budget: router + fused stack lookup = ONE sort +
+        # ONE pallas_call total (the kernel's own bucket sort is the only
+        # sort in the whole routed op)
+        budget = count_primitives(jax.make_jaxpr(routed)(st, keys, tenant),
+                                  names)
+        assert budget == {"sort": 1, "pallas_call": 1}, (t, budget)
+
+        jrouted = jax.jit(routed)
+        wall = timeit(lambda: jrouted(st, keys, tenant), warmup=2,
+                      iters=iters) * 1e6
+        f, v, kept, overflow = (np.asarray(x)
+                                for x in jax.device_get(jrouted(st, keys,
+                                                                tenant)))
+        # exact overflow accounting vs a host-side histogram
+        hist = np.bincount(np.asarray(tenant), minlength=t)
+        np.testing.assert_array_equal(overflow, np.maximum(hist - cap, 0))
+        # capped == full width on every kept key; spilled keys miss (the
+        # serving layer's cond-gated retry serves them — test_serving)
+        np.testing.assert_array_equal(f, kept)
+        np.testing.assert_array_equal(v[kept], np.asarray(keys)[kept] * 3)
+        send_bytes_ratio = batch / cap
+        overflow_rate = float(overflow.sum()) / batch
+        assert send_bytes_ratio >= 1.5, \
+            f"capped routing buffer win regressed: {send_bytes_ratio:.2f}x"
+        if t == 8:
+            assert send_bytes_ratio >= 4.0, \
+                f"T=8 wire-bytes reduction below acceptance: " \
+                f"{send_bytes_ratio:.2f}x"
+        if not quiet:
+            print(f"routed_stack T={t:<3d} cap={cap:<5d} "
+                  f"send_bytes_ratio={send_bytes_ratio:5.1f}x "
+                  f"overflow_rate={overflow_rate:.4f} {wall:9.0f} us")
+        result[f"t{t}"] = {"n_tenants": t, "cap": cap,
+                           "send_bytes_ratio": send_bytes_ratio,
+                           "overflow_rate": overflow_rate,
+                           "wall_us": wall, **budget}
+    out = (pathlib.Path(out_path) if out_path
+           else _REPO_ROOT / "BENCH_routed_stack.json")
+    out.write_text(json.dumps(result, indent=2) + "\n")
+    if not quiet:
+        print(f"[summary] capped routing: {result['t8']['send_bytes_ratio']:.0f}x "
+              f"fewer send-buffer bytes at T=8, "
+              f"{result['t64']['send_bytes_ratio']:.0f}x at T=64, "
+              f"1 sort + 1 pallas_call per routed op -> {out}")
+    return result
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--ns", type=int, nargs="*", default=[2_000, 8_000, 32_000])
     ap.add_argument("--alpha", type=int, default=20)
     ap.add_argument("--fused", action="store_true",
                     help="also run the fused=on|off rebuild-epoch probe, "
-                         "write-path, chain-backend, growth-escape, and "
-                         "table-stack comparisons (writes "
+                         "write-path, chain-backend, growth-escape, "
+                         "table-stack, and routed-stack comparisons (writes "
                          "BENCH_fused_probe.json + BENCH_fused_writes.json "
                          "+ BENCH_chain_fused.json + "
                          "BENCH_growth_escape.json + "
-                         "BENCH_table_stack.json)")
+                         "BENCH_table_stack.json + "
+                         "BENCH_routed_stack.json)")
     args = ap.parse_args(argv)
     rows = run(tuple(args.ns), args.alpha)
     if args.fused:
@@ -741,6 +848,7 @@ def main(argv=None):
         run_chain_fused()
         run_growth_escape()
         run_table_stack()
+        run_routed_stack()
     return rows
 
 

@@ -12,12 +12,16 @@ Gate semantics, per leaf key:
   they come from jaxpr inspection, are machine-independent, and any
   increase is a regression — the fused paths grew an extra sort or kernel
   launch, or a jnp probe loop crept back in.  Compared exactly.
-* **pass ratios** (``pass_ratio``) must not drop by more than
-  ``--ratio-tolerance`` (default 15%): the fused-vs-jnp advantage is the
-  acceptance criterion of the kernels.
-* **escape rates** (``escape_rate``) are lower-is-better fractions of
-  rebuild-epoch queries overflowing to the jnp fallback (the growth-escape
-  bench); they must not exceed the baseline by more than
+* **pass ratios** (``pass_ratio``, ``send_bytes_ratio``) must not drop by
+  more than ``--ratio-tolerance`` (default 15%): the fused-vs-jnp
+  advantage and the capped router's wire-bytes reduction (full-width
+  buffer bytes over capped, T/c — the routed-stack bench) are acceptance
+  criteria.
+* **escape rates** (``escape_rate``, ``overflow_rate``) are
+  lower-is-better fractions — rebuild-epoch queries overflowing to the
+  jnp fallback (growth-escape bench), and zipf-batch keys past their
+  tenant's routing cap (routed-stack bench; deterministic for the pinned
+  seed).  They must not exceed the baseline by more than
   ``--rate-tolerance`` ABSOLUTE (default 0.02 — a 0.00 baseline allows up
   to 0.02, so benign hash-seed jitter passes but a coverage regression in
   the two-level tile map fails).
@@ -51,9 +55,9 @@ import pathlib
 import sys
 
 STRUCTURAL = ("sort", "pallas_call", "passes")
-RATIOS = ("pass_ratio",)
+RATIOS = ("pass_ratio", "send_bytes_ratio")
 TIMINGS = ("wall_us",)
-RATES = ("escape_rate",)
+RATES = ("escape_rate", "overflow_rate")
 
 
 def _compare(base, cur, path: str, failures: list[str], *,

@@ -42,6 +42,18 @@ def count_primitives(closed_jaxpr, names):
     return {n: ctr.get(n, 0) for n in names}
 
 
+def zipf_owners(rng, q: int, n: int, a: float = 1.2) -> np.ndarray:
+    """Zipf-skewed owner ids in [0, n): rank r carries mass ~ 1/r^a, with
+    the ranks shuffled so the hot owner is not always id 0.  The SHARED
+    skew source of the suite — tenant load for the routed-stack bench
+    (bench_rebuild.run_routed_stack) and key popularity for the
+    oversubscription sweep (bench_oversubscribe) draw from this one
+    generator so "under zipf skew" means the same thing everywhere."""
+    ranks = np.minimum(rng.zipf(a, size=q) - 1, n - 1).astype(np.int64)
+    perm = rng.permutation(n)
+    return perm[ranks].astype(np.int32)
+
+
 def timeit(fn, *args, warmup=3, iters=5):
     """Min-of-N wall clock (default min-of-5): each iteration is timed
     individually (block_until_ready per repeat) and the MINIMUM is
@@ -284,14 +296,21 @@ ALGOS = {"DHash": DHashDriver, "HT-Xu": XuDriver, "HT-RHT": RHTDriver,
 class Workload:
     q: int                 # batch width ("worker threads")
     mix: tuple[int, int, int]   # percent lookup/insert/delete
+    skew: float = 0.0      # > 0: zipf exponent for key POPULARITY — lookups
+                           # and deletes concentrate on hot keys via
+                           # ``zipf_owners`` (the suite's shared skew source)
 
     def batches(self, rng, present: np.ndarray):
         nl = self.q * self.mix[0] // 100
         ni = self.q * self.mix[1] // 100
         nd = self.q * self.mix[2] // 100
-        lk = rng.choice(present, max(nl, 1))
+        if self.skew > 0:
+            lk = present[zipf_owners(rng, max(nl, 1), len(present), self.skew)]
+            dk = present[zipf_owners(rng, max(nd, 1), len(present), self.skew)]
+        else:
+            lk = rng.choice(present, max(nl, 1))
+            dk = rng.choice(present, max(nd, 1))
         ik = rng.integers(1, UNIVERSE, max(ni, 1)).astype(np.int32)
-        dk = rng.choice(present, max(nd, 1))
         return (jnp.asarray(lk, I32), jnp.asarray(ik, I32), jnp.asarray(dk, I32))
 
 

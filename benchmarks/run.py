@@ -123,15 +123,25 @@ def table_stack():
          f"{r['pass_ratio']:.2f}x_fewer_launches")
 
 
+def routed_stack():
+    from benchmarks.bench_rebuild import run_routed_stack
+    r = run_routed_stack(quiet=True)
+    for t in (8, 64):
+        row = r[f"t{t}"]
+        _row(f"routed_stack/t{t}/cap{row['cap']}", row["wall_us"],
+             f"{row['send_bytes_ratio']:.0f}x_fewer_send_bytes_"
+             f"{row['overflow_rate']:.4f}_overflow")
+
+
 TABLES = [fig2_throughput, fig3_rebuild, fig4_portability, s62_oversubscribe,
           s1_attack, moe_router, kvcache_rehash, fused_probe, fused_writes,
-          chain_fused, growth_escape, table_stack]
+          chain_fused, growth_escape, table_stack, routed_stack]
 
 
 def quick() -> None:
     """CI smoke mode: exercises the perf harness end-to-end in minutes —
-    the fused-probe, fused-writes, chain-fused, growth-escape, and
-    table-stack acceptance checks (pass counts + escape rates + their
+    the fused-probe, fused-writes, chain-fused, growth-escape, table-stack,
+    and routed-stack acceptance checks (pass counts + escape rates + their
     BENCH_*.json artifacts) plus a tiny fig3 rebuild sweep so perf code
     can't silently rot."""
     print("name,us_per_call,derived")
@@ -141,6 +151,7 @@ def quick() -> None:
     chain_fused()
     growth_escape()
     table_stack()
+    routed_stack()
     from benchmarks.bench_rebuild import run as rebuild_run
     for name, n, dt in rebuild_run(ns=(2_000,), quiet=True):
         _row(f"fig3/{name}/n{n}", dt * 1e6, f"{dt*1e3:.1f}ms_full_rebuild")

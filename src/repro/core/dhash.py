@@ -467,9 +467,20 @@ def unstack(d: DHashState) -> list[DHashState]:
             for i in range(stack_size(d))]
 
 
-def stack_lookup(d: DHashState, keys: jax.Array):
-    """Batched lookup over the stack: keys [T, Q] -> (found, vals) [T, Q]."""
-    return jax.vmap(lookup)(d, keys)
+def stack_lookup(d: DHashState, keys: jax.Array,
+                 mask: jax.Array | None = None):
+    """Batched lookup over the stack: keys [T, Q] -> (found, vals) [T, Q].
+
+    ``mask`` ([T, Q] bool) squelches ``found`` for padding slots — the
+    routed entry point: capped send buffers (core/distributed.py,
+    serving/kvcache.py) zero-pad each owner's segment, and a zero padding
+    key must never report a hit even if some table legitimately holds key
+    0.  The vmapped kernel launch is unchanged (mask is applied to the
+    result, not the probe)."""
+    found, vals = jax.vmap(lookup)(d, keys)
+    if mask is not None:
+        found = found & mask
+    return found, vals
 
 
 def stack_insert(d: DHashState, keys: jax.Array, vals: jax.Array,

@@ -7,9 +7,23 @@ swap is collectively synchronized for free — the multi-host analogue of the
 paper's ``synchronize_rcu`` grace period.
 
 Query routing is one all_to_all pair (there and back), the same dispatch
-pattern as MoE token routing; the send buffer is [S, Q] so even a fully
+pattern as MoE token routing.  The send-buffer layout is a **two-pass
+counting sort** (HashGraph's idiom): pass 1 histograms keys per owner and
+ranks each key within its owner; pass 2 scatters keys into exactly-sized
+per-owner segments of a ``[S, cap]`` buffer.  With a fixed per-owner cap
+the exclusive prefix sum over the capped histogram is the affine map
+``base[s] = s * cap`` — i.e. the row offsets of the 2-D buffer — so no
+argsort is ever needed: the router contributes ZERO ``sort`` primitives
+and the owner-grouped buffer feeds the fused kernels' own bucket sort
+directly (a routed fused ``stack_lookup`` stays at ONE sort + ONE
+pallas_call total, the same budget as an unrouted op).
+
+``cap=None`` (baseline) uses cap=Q — overflow-proof even under a fully
 adversarial key set (every key owned by one shard — the paper's collision
-attack) routes without overflow, it just concentrates work.
+attack) at S x the wire bytes.  The capped path uses
+``cap = ceil(c·Q/S)``; keys past an owner's cap are reported via EXACT
+per-owner overflow counts so callers can run a bounded full-width retry
+(see serving/kvcache.py) instead of silently dropping them.
 
 These functions are written to be called INSIDE ``jax.shard_map`` with the
 table sharded (one leaf-shard per device along ``axis``) and queries sharded
@@ -19,7 +33,7 @@ backend — fused or jnp — shards without changes here.
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -39,71 +53,101 @@ def _axis_size(axis) -> int:
     return lax.psum(1, axis)
 
 
-def _route(keys: jax.Array, owner: jax.Array, nshards: int,
-           cap: int | None = None):
-    """Group keys by owner shard into a [S, cap] send buffer.
+class Route(NamedTuple):
+    """The routing layout of one batch: the [S, cap] send buffers plus the
+    per-key coordinates that invert them, and exact overflow accounting."""
+    send: jax.Array      # [S, cap] keys, owner-grouped, zero-padded
+    smask: jax.Array     # [S, cap] bool: slot carries a kept key
+    owner: jax.Array     # [Q] i32 owner of each key (batch order)
+    rank: jax.Array      # [Q] i32 arrival rank within its owner (stable)
+    kept: jax.Array      # [Q] bool: rank < cap (routed on the first pass)
+    overflow: jax.Array  # [S] i32 EXACT per-owner spill: max(hist - cap, 0)
 
-    cap=None (baseline) uses cap=Q — overflow-proof even under a collision
-    attack concentrating every key on one owner, at S x the wire bytes.
-    The §Perf-optimized path uses cap = c*Q/S (see EXPERIMENTS.md): keys
-    beyond an owner's capacity are dropped from the batch (reported via
-    smask; a uniform owner hash overflows with negligible probability).
-    Returns (send[S,cap], smask[S,cap], order, so, rank, kept[Q sorted]).
+
+def route_cap(cap_factor: float, q: int, nshards: int) -> int:
+    """The capped-dispatch buffer width ``cap = ceil(c·Q/S)``, clamped to
+    [1, Q].  ``cap_factor <= 0`` means the overflow-proof full width."""
+    if cap_factor <= 0:
+        return q
+    return min(q, max(1, -(-int(cap_factor * q) // nshards)))
+
+
+def _route(keys: jax.Array, owner: jax.Array, nshards: int,
+           cap: int | None = None) -> Route:
+    """Group keys by owner into a [S, cap] send buffer — two-pass counting
+    sort, no ``sort`` primitive:
+
+    * pass 1: per-owner histogram + stable rank-within-owner via a running
+      one-hot count (O(Q·S) vectorized work, the MoE dispatch idiom —
+      cheap for mesh/tenant-scale S, and it removes the router's argsort
+      from every routed op's budget);
+    * pass 2: scatter key i to ``send[owner[i], rank[i]]`` — with a fixed
+      cap the exclusive prefix sum of the capped histogram is the row
+      stride, so the 2-D scatter IS the prefix-summed placement.
+
+    Keys with ``rank >= cap`` are NOT silently zeroed: ``kept`` marks them
+    and ``overflow[s] = max(hist[s] - cap, 0)`` counts them exactly, so
+    callers can cond-gate a full-width retry on ``overflow.sum() > 0``.
     """
     q = keys.shape[0]
     cap = q if cap is None else cap
-    order = jnp.argsort(owner)
-    sk, so = keys[order], owner[order]
-    first = jnp.searchsorted(so, so, side="left")
-    rank = jnp.arange(q, dtype=I32) - first.astype(I32)
+    owner = owner.astype(I32)
+    onehot = (owner[:, None] == jnp.arange(nshards, dtype=I32)[None, :]
+              ).astype(I32)
+    hist = onehot.sum(axis=0)                                     # [S]
+    rank = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - 1,
+                               owner[:, None], axis=1)[:, 0]      # [Q]
     kept = rank < cap
-    crank = jnp.where(kept, rank, 0)
-    cso = jnp.where(kept, so, nshards)
-    send = jnp.zeros((nshards, cap), keys.dtype).at[cso, crank].set(
-        sk, mode="drop")
-    smask = jnp.zeros((nshards, cap), bool).at[cso, crank].set(
+    # out-of-cap ranks scatter out of bounds and mode="drop" discards them
+    send = jnp.zeros((nshards, cap), keys.dtype).at[owner, rank].set(
+        keys, mode="drop")
+    smask = jnp.zeros((nshards, cap), bool).at[owner, rank].set(
         kept, mode="drop")
-    return send, smask, order, so, rank, kept
+    overflow = jnp.maximum(hist - cap, 0)
+    return Route(send, smask, owner, rank, kept, overflow)
 
 
-def _route_payload(payload: jax.Array, order, so, rank, kept, nshards: int,
-                   cap: int):
-    """Scatter a per-key payload (values, masks) into the [S, cap] send
-    buffer produced by ``_route`` for the same batch — dropped keys (beyond
-    an owner's cap) stay zero.  Shared by the distributed router and the
+def _route_payload(payload: jax.Array, rt: Route) -> jax.Array:
+    """Scatter a per-key payload (values, masks) into the [S, cap] layout
+    of a ``Route`` computed for the same batch — spilled keys (beyond an
+    owner's cap) stay zero.  Shared by the distributed router and the
     serving tenant router."""
-    cso = jnp.where(kept, so, nshards)
-    crank = jnp.where(kept, rank, 0)
-    return jnp.zeros((nshards, cap), payload.dtype).at[cso, crank].set(
-        payload[order], mode="drop")
+    nshards, cap = rt.send.shape
+    return jnp.zeros((nshards, cap), payload.dtype).at[rt.owner, rt.rank].set(
+        payload, mode="drop")
 
 
-def _unroute(resp_local: jax.Array, order, so, rank, kept, q, fill=0):
-    """Invert _route for a [S, cap] response."""
-    gathered = jnp.where(
-        kept,
-        resp_local[jnp.where(kept, so, 0), jnp.where(kept, rank, 0)],
-        jnp.asarray(fill, resp_local.dtype))
-    inv = jnp.zeros((q,), I32).at[order].set(jnp.arange(q, dtype=I32))
-    return gathered[inv]
+def _unroute(resp_local: jax.Array, rt: Route, fill=None) -> jax.Array:
+    """Invert a ``Route`` for a [S, cap] response: gather each key's slot
+    back to batch order.  Spilled keys take ``fill`` — by default 0 for
+    integer/bool responses and NaN for floats, so a dropped float payload
+    can never be mistaken for a real 0.0 value."""
+    if fill is None:
+        fill = jnp.nan if jnp.issubdtype(resp_local.dtype, jnp.floating) else 0
+    gathered = resp_local[rt.owner, jnp.where(rt.kept, rt.rank, 0)]
+    return jnp.where(rt.kept, gathered, jnp.asarray(fill, resp_local.dtype))
+
+
+def shard_of(keys: jax.Array, nshards: int,
+             owner_hfn: hashing.HashFn) -> jax.Array:
+    """Owning shard of each key under the FIXED (never-rebuilt) owner hash."""
+    return (hashing.hash_u32(owner_hfn, keys) % jnp.uint32(nshards)).astype(I32)
 
 
 def routed_lookup(d: dhash.DHashState, keys: jax.Array, axis: str,
                   owner_hfn: hashing.HashFn, cap: int | None = None):
     """DHash lookup across shards. Call inside shard_map."""
     s = _axis_size(axis)
-    q = keys.shape[0]
-    owner = (hashing.hash_u32(owner_hfn, keys) % jnp.uint32(s)).astype(I32)
-    send, smask, order, so, rank, kept = _route(keys, owner, s, cap)
-    c = send.shape[1]
-    rk = lax.all_to_all(send, axis, split_axis=0, concat_axis=0)
-    rm = lax.all_to_all(smask, axis, split_axis=0, concat_axis=0)
+    owner = shard_of(keys, s, owner_hfn)
+    rt = _route(keys, owner, s, cap)
+    c = rt.send.shape[1]
+    rk = lax.all_to_all(rt.send, axis, split_axis=0, concat_axis=0)
+    rm = lax.all_to_all(rt.smask, axis, split_axis=0, concat_axis=0)
     found, vals = dhash.lookup(d, rk.reshape(-1))
     found = found & rm.reshape(-1)
     rf = lax.all_to_all(found.reshape(s, c), axis, split_axis=0, concat_axis=0)
     rv = lax.all_to_all(vals.reshape(s, c), axis, split_axis=0, concat_axis=0)
-    return (_unroute(rf, order, so, rank, kept, q).astype(bool),
-            _unroute(rv, order, so, rank, kept, q))
+    return _unroute(rf, rt, fill=False).astype(bool), _unroute(rv, rt, fill=0)
 
 
 def routed_update(d: dhash.DHashState, keys: jax.Array, vals: jax.Array,
@@ -111,13 +155,12 @@ def routed_update(d: dhash.DHashState, keys: jax.Array, vals: jax.Array,
                   op: Callable = dhash.insert, cap: int | None = None):
     """DHash insert/delete across shards. Returns (d', ok). Call inside shard_map."""
     s = _axis_size(axis)
-    q = keys.shape[0]
-    owner = (hashing.hash_u32(owner_hfn, keys) % jnp.uint32(s)).astype(I32)
-    send, smask, order, so, rank, kept = _route(keys, owner, s, cap)
-    c = send.shape[1]
-    sendv = _route_payload(vals, order, so, rank, kept, s, c)
-    sm2 = _route_payload(mask, order, so, rank, kept, s, c)
-    rk = lax.all_to_all(send, axis, split_axis=0, concat_axis=0)
+    owner = shard_of(keys, s, owner_hfn)
+    rt = _route(keys, owner, s, cap)
+    c = rt.send.shape[1]
+    sendv = _route_payload(vals, rt)
+    sm2 = _route_payload(mask, rt)
+    rk = lax.all_to_all(rt.send, axis, split_axis=0, concat_axis=0)
     rv = lax.all_to_all(sendv, axis, split_axis=0, concat_axis=0)
     rm = lax.all_to_all(sm2, axis, split_axis=0, concat_axis=0)
     if op is dhash.insert:
@@ -125,12 +168,95 @@ def routed_update(d: dhash.DHashState, keys: jax.Array, vals: jax.Array,
     else:
         d, ok = op(d, rk.reshape(-1), rm.reshape(-1))
     rok = lax.all_to_all(ok.reshape(s, c), axis, split_axis=0, concat_axis=0)
-    return d, _unroute(rok, order, so, rank, kept, q).astype(bool)
+    return d, _unroute(rok, rt, fill=False).astype(bool)
 
 
 def routed_rebuild_step(d: dhash.DHashState, axis: str) -> dhash.DHashState:
     """One rebuild transition on every shard (SPMD-synchronized epochs)."""
     return dhash.rebuild_step(d)
+
+
+# -- mesh x stack: the [S shards x T tenants] grid ---------------------------
+#
+# Owner of a key is the PAIR (shard_of(key), tenant): flat owner id
+# ``shard * T + tenant`` routes through ONE capped all_to_all pair into
+# per-shard tenant stacks.  Each shard holds a ``dhash.make_stack(T, ...)``
+# whose per-tenant rebuild epochs stay fully independent (the stack ops
+# don't change under routing); the received buffer is reshaped
+# tenant-major so one vmapped stack op serves every (source shard, tenant)
+# cell at once.  The router itself is sort-free, so the whole routed fused
+# stack op keeps the single-op kernel budget: ONE sort + ONE pallas_call.
+
+
+def grid_owner(keys: jax.Array, tenant: jax.Array, nshards: int,
+               ntenants: int, owner_hfn: hashing.HashFn) -> jax.Array:
+    """Flat [S·T] owner id of each key: ``shard_of(key) * T + tenant``."""
+    return shard_of(keys, nshards, owner_hfn) * ntenants + tenant.astype(I32)
+
+
+def _grid_exchange(buf: jax.Array, axis: str, s: int, t: int, cap: int):
+    """all_to_all a [S*T, cap] owner-major buffer and return it tenant-major
+    [T, S*cap] for the stack op (each row = one tenant's queries from every
+    source shard)."""
+    rx = lax.all_to_all(buf.reshape(s, t, cap), axis,
+                        split_axis=0, concat_axis=0)      # [src S, T, cap]
+    return rx.transpose(1, 0, 2).reshape(t, s * cap)
+
+
+def _grid_return(resp: jax.Array, axis: str, s: int, t: int, cap: int):
+    """Inverse of ``_grid_exchange`` for a [T, S*cap] response: back to the
+    querying shards, owner-major [S*T, cap]."""
+    tx = resp.reshape(t, s, cap).transpose(1, 0, 2)       # [src S, T, cap]
+    return lax.all_to_all(tx, axis, split_axis=0,
+                          concat_axis=0).reshape(s * t, cap)
+
+
+def routed_stack_lookup(d: dhash.DHashState, keys: jax.Array,
+                        tenant: jax.Array, axis: str,
+                        owner_hfn: hashing.HashFn,
+                        cap_factor: float = 2.0):
+    """Lookup a [Q] batch against the S×T grid.  ``d`` is THIS shard's
+    T-table tenant stack; call inside shard_map.  Returns
+    (found[Q], vals[Q], overflow[S·T]) — ``overflow`` is this shard's exact
+    per-owner spill count (keys past ``cap = ceil(c·Q/(S·T))``, reported
+    not silently dropped; spilled keys come back not-found)."""
+    s = _axis_size(axis)
+    t = dhash.stack_size(d)
+    q = keys.shape[0]
+    cap = route_cap(cap_factor, q, s * t)
+    rt = _route(keys, grid_owner(keys, tenant, s, t, owner_hfn), s * t, cap)
+    qk = _grid_exchange(rt.send, axis, s, t, cap)
+    qm = _grid_exchange(rt.smask, axis, s, t, cap)
+    f, v = dhash.stack_lookup(d, qk, qm)
+    rf = _grid_return(f, axis, s, t, cap)
+    rv = _grid_return(v, axis, s, t, cap)
+    return (_unroute(rf, rt, fill=False).astype(bool),
+            _unroute(rv, rt, fill=0), rt.overflow)
+
+
+def routed_stack_update(d: dhash.DHashState, keys: jax.Array,
+                        vals: jax.Array, mask: jax.Array, tenant: jax.Array,
+                        axis: str, owner_hfn: hashing.HashFn,
+                        op: Callable = dhash.stack_insert,
+                        cap_factor: float = 2.0):
+    """Insert/delete a [Q] batch into the S×T grid (``op`` is
+    ``dhash.stack_insert`` or ``dhash.stack_delete``).  Returns
+    (d', ok[Q], overflow[S·T]); spilled keys report ok=False and are
+    counted in ``overflow``.  Call inside shard_map."""
+    s = _axis_size(axis)
+    t = dhash.stack_size(d)
+    q = keys.shape[0]
+    cap = route_cap(cap_factor, q, s * t)
+    rt = _route(keys, grid_owner(keys, tenant, s, t, owner_hfn), s * t, cap)
+    qk = _grid_exchange(rt.send, axis, s, t, cap)
+    qm = _grid_exchange(_route_payload(mask, rt) & rt.smask, axis, s, t, cap)
+    if op is dhash.stack_insert:
+        qv = _grid_exchange(_route_payload(vals, rt), axis, s, t, cap)
+        d, ok = op(d, qk, qv, qm)
+    else:
+        d, ok = op(d, qk, qm)
+    rok = _grid_return(ok, axis, s, t, cap)
+    return d, _unroute(rok, rt, fill=False).astype(bool), rt.overflow
 
 
 def make_stacked(nshards: int, backend: str = "linear", capacity: int = 1024,
@@ -164,10 +290,10 @@ def routed_service_step(d: dhash.DHashState, lookup_keys: jax.Array,
     a lookup batch + insert batch + delete batch + one rebuild transition.
     This is what the dry-run lowers for the dhash_paper 'architecture'.
 
-    cap_factor > 0 bounds the routing buffers at cap = cap_factor * Q / S
+    cap_factor > 0 bounds the routing buffers at cap = ceil(cap_factor*Q/S)
     (§Perf lever: S x fewer wire bytes and S x smaller remote batches)."""
     s = _axis_size(axis)
-    capof = (lambda q: max(int(cap_factor * q / s), 1)) if cap_factor > 0 \
+    capof = (lambda q: route_cap(cap_factor, q, s)) if cap_factor > 0 \
         else (lambda q: None)
     found, vals = routed_lookup(d, lookup_keys, axis, owner_hfn,
                                 cap=capof(lookup_keys.shape[0]))

@@ -50,6 +50,10 @@ class ServeConfig:
     n_tenants: int = 1            # > 1: per-tenant page-table stack
                                   # (tenant = seq_id % n_tenants) with
                                   # INDEPENDENT live rehash epochs
+    cap_factor: float = 2.0       # tenant-router send buffers are
+                                  # [T, ceil(c*N/T)] (<= 0: full width);
+                                  # overflow under skew is exact — a
+                                  # cond-gated full-width retry serves it
 
 
 def paged_decode_step(params: dict, cfg: ArchConfig, kv: PagedKV,
@@ -113,6 +117,7 @@ class ServingEngine:
     queue: list = field(default_factory=list)     # list[(seq_id, prompt np.array)]
     finished: dict = field(default_factory=dict)  # seq_id -> list[int]
     rehashes: int = 0
+    router_spills: int = 0        # cumulative tenant-router overflow keys
     _next_id: int = 1
 
     def __post_init__(self):
@@ -120,14 +125,15 @@ class ServingEngine:
         self.kv = kvcache.make(c.n_layers, s.page_size, s.n_pages,
                                c.n_kv_heads, c.head_dim,
                                max_blocks=s.max_blocks, dtype=jnp.dtype(c.dtype),
-                               n_tenants=s.n_tenants)
+                               n_tenants=s.n_tenants, cap_factor=s.cap_factor)
         self._tenant_epochs0 = (np.asarray(
             jax.device_get(self.kv.table.epoch)) if s.n_tenants > 1 else None)
         if s.n_tenants > 1:
             # one fused poll -> ONE host sync per decode step (loads +
-            # rebuilding flags + epoch counters together)
+            # router-spill counters + rebuilding flags + epochs together)
             self._tenant_poll = jax.jit(lambda kv: (
-                kvcache.table_load(kv), kv.table.rebuilding, kv.table.epoch))
+                *kvcache.table_load(kv, with_spill=True),
+                kv.table.rebuilding, kv.table.epoch))
         b = s.max_seqs
         self.seq_ids = np.zeros((b,), np.int32)
         self.lengths = np.zeros((b,), np.int32)
@@ -237,9 +243,13 @@ class ServingEngine:
         tenants whose load degraded start an epoch; completed epochs swap
         on-device inside ``kvcache.rehash_step``, so no host-side finish is
         needed.  ``rehashes`` counts COMPLETIONS (epoch deltas across the
-        stack) — the same semantics as the single-tenant path."""
-        loads, rebuilding, epochs = (
+        stack) — the same semantics as the single-tenant path.  The same
+        poll surfaces the router-spill counters (``router_spills``) so
+        skewed tenant traffic blowing the routing cap is observable
+        separately from table load."""
+        loads, spill, rebuilding, epochs = (
             np.asarray(x) for x in jax.device_get(self._tenant_poll(self.kv)))
+        self.router_spills = int(spill.sum())
         self.rehashes = int((epochs - self._tenant_epochs0).sum())
         want = (loads > self.sc.rehash_load_factor) & ~rebuilding
         if want.any():

@@ -16,6 +16,19 @@ tenants whose load degraded; a noisy neighbour's rebuild never touches the
 others' tables).  The page POOL stays shared — pages are fungible; only the
 mapping is isolated per tenant.
 
+**Capped tenant routing**: table ops group a flat [N] key batch by tenant
+through the counting-sort router (``distributed._route``) into a
+``[T, ceil(c·N/T)]`` send buffer (``c = cap_factor``) instead of the
+full-width ``[T, N]`` baseline — T/c x fewer buffer bytes and scatter
+work, and the sort-free router keeps the fused stack op at its single
+1-sort/1-pallas_call budget.  Correctness is unconditional: keys past a
+tenant's cap (zipf skew, adversarial single-tenant batches) are counted
+exactly by the router and served by a ``lax.cond``-gated SECOND pass that
+re-routes only the spill at full width — the balanced common case never
+executes it.  ``PagedKV.route_spill`` accumulates the per-tenant spill
+counts, so "the router overflowed (and the retry paid full width)" is
+observable and distinct from "the table rejected the insert" (``ok``).
+
 Attention over pages is flash-decoding style: a scan over blocks with a
 running (max, denominator) accumulator — no materialization of the gathered
 KV, so the memory roofline term stays at one pass over the live pages.
@@ -26,9 +39,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.core import buckets, dhash
-from repro.core.distributed import _route, _route_payload, _unroute
+from repro.core.distributed import _route, _route_payload, _unroute, route_cap
 from repro.core.struct_utils import pytree_dataclass, replace
 
 F32 = jnp.float32
@@ -42,7 +56,8 @@ def block_key(seq_id: jax.Array, block_idx: jax.Array) -> jax.Array:
 
 
 @pytree_dataclass(meta_fields=("layers", "page_size", "n_pages", "kv_heads",
-                               "head_dim", "max_blocks", "n_tenants"))
+                               "head_dim", "max_blocks", "n_tenants",
+                               "cap_factor"))
 class PagedKV:
     layers: int
     page_size: int
@@ -52,17 +67,22 @@ class PagedKV:
     max_blocks: int              # blocks per sequence bound
     n_tenants: int               # 1 = single shared page table; T > 1 = a
                                  # dhash stack of per-tenant tables
+    cap_factor: float            # tenant-router cap c: send buffers are
+                                 # [T, ceil(c*N/T)]; <= 0 = full width
     pool_k: jax.Array            # [L, n_pages, page, KV, HD]
     pool_v: jax.Array
     table: dhash.DHashState      # block_key -> page id ([T]-stacked if T > 1)
     free_stack: jax.Array        # [n_pages] i32
     free_top: jax.Array          # scalar i32
+    route_spill: jax.Array       # [T] i32 cumulative router overflow (keys
+                                 # past a tenant's cap, served by the
+                                 # full-width retry pass)
 
 
 def make(layers: int, page_size: int, n_pages: int, kv_heads: int,
          head_dim: int, *, max_blocks: int = 4096, dtype=jnp.bfloat16,
          table_chunk: int = 256, seed: int = 3,
-         n_tenants: int = 1) -> PagedKV:
+         n_tenants: int = 1, cap_factor: float = 2.0) -> PagedKV:
     shp = (layers, n_pages, page_size, kv_heads, head_dim)
     if n_tenants == 1:
         table = dhash.make("linear", capacity=2 * n_pages, chunk=table_chunk,
@@ -75,10 +95,12 @@ def make(layers: int, page_size: int, n_pages: int, kv_heads: int,
     return PagedKV(
         layers=layers, page_size=page_size, n_pages=n_pages, kv_heads=kv_heads,
         head_dim=head_dim, max_blocks=max_blocks, n_tenants=n_tenants,
+        cap_factor=cap_factor,
         pool_k=jnp.zeros(shp, dtype), pool_v=jnp.zeros(shp, dtype),
         table=table,
         free_stack=jnp.arange(n_pages, dtype=I32),
-        free_top=jnp.asarray(n_pages, I32))
+        free_top=jnp.asarray(n_pages, I32),
+        route_spill=jnp.zeros((n_tenants,), I32))
 
 
 def tenant_of(kv: PagedKV, seq_ids: jax.Array) -> jax.Array:
@@ -87,50 +109,93 @@ def tenant_of(kv: PagedKV, seq_ids: jax.Array) -> jax.Array:
 
 
 # -- tenant-routed table access: group a flat key batch by owning tenant
-# (the distributed module's routing buffers), run ONE vmapped stack op,
-# scatter results back to batch order.  n_tenants == 1 short-circuits to
-# the plain single-table op — the historical layout, zero overhead --------
+# through the counting-sort router into CAPPED [T, ceil(c*N/T)] buffers,
+# run ONE vmapped stack op, scatter results back to batch order.  Keys
+# past a tenant's cap (skewed batches) are exactly counted by the router
+# and served by a lax.cond-gated full-width retry pass — the balanced
+# common case never executes it.  n_tenants == 1 short-circuits to the
+# plain single-table op — the historical layout, zero overhead -----------
+
+def _tenant_route(kv: PagedKV, tenant: jax.Array, keys: jax.Array):
+    """Capped first-pass route of a [N] batch by owning tenant."""
+    return _route(keys, tenant, kv.n_tenants,
+                  route_cap(kv.cap_factor, keys.shape[0], kv.n_tenants))
+
 
 def table_lookup(kv: PagedKV, tenant: jax.Array, keys: jax.Array):
     """(found[N], vals[N]) across the tenant stack; ``tenant`` aligns with
-    ``keys``."""
+    ``keys``.  Exact under any skew: spilled keys are resolved by the
+    gated full-width retry."""
     if kv.n_tenants == 1:
         return dhash.lookup(kv.table, keys)
-    n = keys.shape[0]
-    send, smask, order, so, rank, kept = _route(keys, tenant, kv.n_tenants)
-    f, v = dhash.stack_lookup(kv.table, send)
-    f = f & smask
-    return (_unroute(f, order, so, rank, kept, n).astype(bool),
-            _unroute(v, order, so, rank, kept, n))
+    rt = _tenant_route(kv, tenant, keys)
+    f, v = dhash.stack_lookup(kv.table, rt.send, rt.smask)
+    found = _unroute(f, rt, fill=False).astype(bool)
+    vals = _unroute(v, rt, fill=0)
+
+    def retry(args):
+        found, vals = args
+        full = _route(keys, tenant, kv.n_tenants)        # cap=N, no spill
+        f2, v2 = dhash.stack_lookup(kv.table, full.send, full.smask)
+        return (jnp.where(rt.kept, found,
+                          _unroute(f2, full, fill=False).astype(bool)),
+                jnp.where(rt.kept, vals, _unroute(v2, full, fill=0)))
+
+    return lax.cond(rt.overflow.sum() > 0, retry, lambda a: a, (found, vals))
 
 
 def table_insert(kv: PagedKV, tenant: jax.Array, keys: jax.Array,
                  vals: jax.Array, mask: jax.Array):
-    """(table', ok[N]) across the tenant stack."""
+    """(kv', ok[N]) across the tenant stack.  ``ok=False`` always means the
+    TABLE rejected (or the key was masked out) — router overflow is never
+    a silent drop: the retry pass inserts the spill at full width, and the
+    spill count lands in ``kv.route_spill`` (see ``table_load``)."""
     if kv.n_tenants == 1:
-        return dhash.insert(kv.table, keys, vals, mask)
-    t = kv.n_tenants
-    n = keys.shape[0]
-    send, smask, order, so, rank, kept = _route(keys, tenant, t)
-    c = send.shape[1]
-    sendv = _route_payload(vals, order, so, rank, kept, t, c)
-    sendm = _route_payload(mask, order, so, rank, kept, t, c)
-    table, ok = dhash.stack_insert(kv.table, send, sendv, sendm)
-    return table, _unroute(ok, order, so, rank, kept, n).astype(bool)
+        table, ok = dhash.insert(kv.table, keys, vals, mask)
+        return replace(kv, table=table), ok
+    rt = _tenant_route(kv, tenant, keys)
+    table, ok = dhash.stack_insert(kv.table, rt.send, _route_payload(vals, rt),
+                                   _route_payload(mask, rt))
+    okb = _unroute(ok, rt, fill=False).astype(bool)
+
+    def retry(args):
+        table, okb = args
+        full = _route(keys, tenant, kv.n_tenants)
+        table2, ok2 = dhash.stack_insert(
+            table, full.send, _route_payload(vals, full),
+            _route_payload(mask & ~rt.kept, full))       # ONLY the spill
+        ok2b = _unroute(ok2, full, fill=False).astype(bool) & ~rt.kept
+        return table2, okb | ok2b
+
+    table, okb = lax.cond(rt.overflow.sum() > 0, retry, lambda a: a,
+                          (table, okb))
+    return replace(kv, table=table,
+                   route_spill=kv.route_spill + rt.overflow), okb
 
 
 def table_delete(kv: PagedKV, tenant: jax.Array, keys: jax.Array,
                  mask: jax.Array):
-    """(table', ok[N]) across the tenant stack."""
+    """(kv', ok[N]) across the tenant stack — same capped-route + gated
+    full-width retry contract as ``table_insert``."""
     if kv.n_tenants == 1:
-        return dhash.delete(kv.table, keys, mask)
-    t = kv.n_tenants
-    n = keys.shape[0]
-    send, smask, order, so, rank, kept = _route(keys, tenant, t)
-    c = send.shape[1]
-    sendm = _route_payload(mask, order, so, rank, kept, t, c)
-    table, ok = dhash.stack_delete(kv.table, send, sendm)
-    return table, _unroute(ok, order, so, rank, kept, n).astype(bool)
+        table, ok = dhash.delete(kv.table, keys, mask)
+        return replace(kv, table=table), ok
+    rt = _tenant_route(kv, tenant, keys)
+    table, ok = dhash.stack_delete(kv.table, rt.send, _route_payload(mask, rt))
+    okb = _unroute(ok, rt, fill=False).astype(bool)
+
+    def retry(args):
+        table, okb = args
+        full = _route(keys, tenant, kv.n_tenants)
+        table2, ok2 = dhash.stack_delete(
+            table, full.send, _route_payload(mask & ~rt.kept, full))
+        ok2b = _unroute(ok2, full, fill=False).astype(bool) & ~rt.kept
+        return table2, okb | ok2b
+
+    table, okb = lax.cond(rt.overflow.sum() > 0, retry, lambda a: a,
+                          (table, okb))
+    return replace(kv, table=table,
+                   route_spill=kv.route_spill + rt.overflow), okb
 
 
 def resolve_blocks(kv: PagedKV, seq_ids: jax.Array, n_blocks: int):
@@ -157,9 +222,9 @@ def alloc_pages(kv: PagedKV, seq_ids: jax.Array, block_idx: jax.Array,
     rank = jnp.cumsum(want.astype(I32)) - 1
     can = want & (rank < kv.free_top)
     page = kv.free_stack[jnp.where(can, kv.free_top - 1 - rank, 0)]
-    table, ok = table_insert(kv, tenant, keys, page, can)
+    kv, ok = table_insert(kv, tenant, keys, page, can)
     used = jnp.sum((can & ok).astype(I32))
-    return replace(kv, table=table, free_top=kv.free_top - used), \
+    return replace(kv, free_top=kv.free_top - used), \
         jnp.where(can, page, -1)
 
 
@@ -240,13 +305,13 @@ def free_sequences(kv: PagedKV, seq_ids: jax.Array, max_blocks: int):
     tenant = jnp.broadcast_to(tenant_of(kv, seq_ids)[:, None],
                               (b, max_blocks)).reshape(-1)
     found, pages = table_lookup(kv, tenant, keys)
-    table, ok = table_delete(kv, tenant, keys, found)
+    kv, ok = table_delete(kv, tenant, keys, found)
     # push freed pages (deterministic order)
     rank = jnp.cumsum(ok.astype(I32)) - 1
     dst = jnp.where(ok, kv.free_top + rank, kv.n_pages)
     free_stack = kv.free_stack.at[dst].set(pages, mode="drop")
     freed = jnp.sum(ok.astype(I32))
-    return replace(kv, table=table, free_stack=free_stack,
+    return replace(kv, free_stack=free_stack,
                    free_top=kv.free_top + freed)
 
 
@@ -274,15 +339,23 @@ def start_rehash(kv: PagedKV, mask: jax.Array | None = None) -> PagedKV:
     return replace(kv, table=dhash.stack_autostart(kv.table, mask))
 
 
-def table_load(kv: PagedKV):
+def table_load(kv: PagedKV, *, with_spill: bool = False):
     """Active-table load factor per tenant table ([T] f32; scalar for a
     single table) — the serving engine's rehash trigger.  Both shapes use
     the SAME metric, live entries in the active (old) table over its
     capacity, so a trigger threshold means one thing regardless of
-    tenancy."""
+    tenancy.
+
+    ``with_spill=True`` returns ``(load, route_spill)`` — the cumulative
+    per-tenant router-overflow counters alongside the loads, so a caller
+    polling table health can tell "this tenant's traffic keeps blowing the
+    routing cap (retry passes are firing — raise cap_factor or rebalance
+    tenants)" apart from "this tenant's TABLE is filling up (rehash)"."""
     if kv.n_tenants == 1:
         cap = buckets.capacity_of(kv.table.old)
-        return buckets.count_live(kv.table.old) / cap
-    peel = jax.tree_util.tree_map(lambda x: x[0], kv.table)
-    cap = buckets.capacity_of(peel.old)
-    return jax.vmap(lambda d: buckets.count_live(d.old))(kv.table) / cap
+        load = buckets.count_live(kv.table.old) / cap
+    else:
+        peel = jax.tree_util.tree_map(lambda x: x[0], kv.table)
+        cap = buckets.capacity_of(peel.old)
+        load = jax.vmap(lambda d: buckets.count_live(d.old))(kv.table) / cap
+    return (load, kv.route_spill) if with_spill else load

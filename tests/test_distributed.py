@@ -75,3 +75,158 @@ def test_distributed_dhash_8dev():
                        text=True, env=env, cwd=os.path.dirname(os.path.dirname(__file__)))
     assert r.returncode == 0, r.stderr[-3000:]
     assert "DIST-OK" in r.stdout
+
+
+# -- the S×T grid: routed stack ops over mesh-sharded tenant stacks ----------
+SCRIPT_GRID = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+import jax.tree_util as jtu
+from functools import partial
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.core import backend, dhash, distributed as dd, hashing
+
+if hasattr(jax, "shard_map"):
+    shard_map, _smap_kw = jax.shard_map, {"check_vma": False}
+else:
+    from jax.experimental.shard_map import shard_map
+    _smap_kw = {"check_rep": False}
+
+S, T, QL = 2, 3, 48                      # 2 shards x 3 tenants, 48 queries/shard
+mesh = jax.sharding.Mesh(np.array(jax.devices()[:S]), ("grid",))
+owner = hashing.fresh("tabulation", 7)
+rng = np.random.default_rng(0)
+keys = jnp.asarray(rng.choice(100_000, S * QL, replace=False).astype(np.int32)) + 1
+tenant = jnp.asarray(rng.integers(0, T, S * QL).astype(np.int32))
+vals = keys * 5
+own_np = np.asarray(dd.grid_owner(keys, tenant, S, T, owner))
+
+for name in backend.names():
+    for fused in ((False, True) if backend.get(name).fused else (False,)):
+        full = dhash.make_stack(S * T, name, 128, chunk=64, seed=5, fused=fused)
+        grid = jtu.tree_map(lambda x: x.reshape((S, T) + x.shape[1:]), full)
+        gspec = jtu.tree_map(lambda _: P("grid"), grid)
+        sh = lambda x: jax.device_put(x, NamedSharding(mesh, P("grid")))
+        grid = jtu.tree_map(sh, grid)
+
+        @partial(shard_map, mesh=mesh, **_smap_kw,
+                 in_specs=(gspec, P("grid"), P("grid"), P("grid")),
+                 out_specs=(gspec, P("grid"), P("grid")))
+        def g_insert(g, k, v, tn):
+            d = dd.peel(g)
+            d, ok, ov = dd.routed_stack_update(
+                d, k, v, jnp.ones(k.shape, bool), tn, "grid", owner,
+                op=dhash.stack_insert, cap_factor=0.0)
+            return dd.unpeel(d), ok, ov[None]
+
+        @partial(shard_map, mesh=mesh, **_smap_kw,
+                 in_specs=(gspec, P("grid"), P("grid")),
+                 out_specs=(P("grid"), P("grid"), P("grid")))
+        def g_lookup(g, k, tn):
+            f, v, ov = dd.routed_stack_lookup(
+                dd.peel(g), k, tn, "grid", owner, cap_factor=0.0)
+            return f, v, ov[None]
+
+        @partial(shard_map, mesh=mesh, **_smap_kw,
+                 in_specs=(gspec, P("grid")), out_specs=gspec)
+        def g_autostart(g, m):
+            return dd.unpeel(dhash.stack_autostart(dd.peel(g), m[0]))
+
+        @partial(shard_map, mesh=mesh, **_smap_kw,
+                 in_specs=(gspec,), out_specs=gspec)
+        def g_step(g):
+            return dd.unpeel(dhash.stack_finish_same_shape(
+                dhash.stack_rebuild_step(dd.peel(g))))
+
+        grid, ok, ov = jax.jit(g_insert)(grid, keys, vals, tenant)
+        assert bool(np.asarray(ok).all()), (name, fused, "insert dropped keys")
+        assert int(np.asarray(ov).sum()) == 0
+
+        # staggered epochs: (shard 0, tenant 0) and (shard 1, tenant 2) only
+        started = np.array([[True, False, False], [False, False, True]])
+        grid = jax.jit(g_autostart)(grid, jnp.asarray(started))
+        lk = jax.jit(g_lookup)
+        st = jax.jit(g_step)
+        for step in range(16):
+            grid = st(grid)
+            if step in (0, 7, 15):     # mid-rebuild resolution never blocks
+                f, v, _ = lk(grid, keys, tenant)
+                assert bool(np.asarray(f).all()), (name, fused, step)
+                np.testing.assert_array_equal(np.asarray(v), np.asarray(vals))
+        ep = np.asarray(jax.device_get(grid.epoch))
+        np.testing.assert_array_equal(ep, started.astype(ep.dtype))
+        reb = np.asarray(jax.device_get(grid.rebuilding))
+        assert not reb.any(), (name, fused, "rebuilds must complete")
+
+        # parity vs the single-device stack_* ops on the SAME final tables
+        merged = jtu.tree_map(
+            lambda x: jnp.reshape(jax.device_get(x), (S * T,) + x.shape[2:]),
+            grid)
+        rt = dd._route(keys, jnp.asarray(own_np), S * T)
+        f1, v1 = dhash.stack_lookup(merged, rt.send, rt.smask)
+        f, v, _ = lk(grid, keys, tenant)
+        np.testing.assert_array_equal(
+            np.asarray(f), np.asarray(dd._unroute(f1, rt, fill=False)))
+        np.testing.assert_array_equal(
+            np.asarray(v)[np.asarray(f)],
+            np.asarray(dd._unroute(v1, rt, fill=0))[np.asarray(f)])
+
+print("GRID-PARITY-OK")
+
+# adversarial all-keys-one-tenant batch on the CAPPED path: overflow counts
+# are exact per shard-local batch and kept keys are exactly the ones served
+grid = jtu.tree_map(lambda x: x.reshape((S, T) + x.shape[1:]),
+                    dhash.make_stack(S * T, "linear", 128, chunk=64, seed=9))
+gspec = jtu.tree_map(lambda _: P("grid"), grid)
+grid = jtu.tree_map(lambda x: jax.device_put(
+    x, NamedSharding(mesh, P("grid"))), grid)
+akeys = jnp.asarray(rng.choice(100_000, S * QL, replace=False)
+                    .astype(np.int32)) + 200_000
+atn = jnp.ones((S * QL,), jnp.int32)            # 100% skew: tenant 1
+CF = 2.0
+cap = dd.route_cap(CF, QL, S * T)
+
+@partial(shard_map, mesh=mesh, **_smap_kw,
+         in_specs=(gspec, P("grid"), P("grid"), P("grid")),
+         out_specs=(gspec, P("grid"), P("grid")))
+def g_insert_capped(g, k, v, tn):
+    d = dd.peel(g)
+    d, ok, ov = dd.routed_stack_update(
+        d, k, v, jnp.ones(k.shape, bool), tn, "grid", owner,
+        op=dhash.stack_insert, cap_factor=CF)
+    return dd.unpeel(d), ok, ov[None]
+
+grid, ok, ov = jax.jit(g_insert_capped)(grid, akeys, akeys * 5, atn)
+ok, ov = np.asarray(ok), np.asarray(ov)
+aown = np.asarray(dd.grid_owner(akeys, atn, S, T, owner))
+exp_ov = np.stack([np.maximum(np.bincount(
+    aown[i * QL:(i + 1) * QL], minlength=S * T) - cap, 0) for i in range(S)])
+np.testing.assert_array_equal(ov, exp_ov)       # EXACT per-owner overflow
+assert exp_ov.sum() > 0, "adversarial batch must overflow the cap"
+assert ok.sum() == S * QL - exp_ov.sum()        # spilled keys report ok=False
+
+@partial(shard_map, mesh=mesh, **_smap_kw,
+         in_specs=(gspec, P("grid"), P("grid")),
+         out_specs=(P("grid"), P("grid"), P("grid")))
+def g_lookup_full(g, k, tn):
+    f, v, ov = dd.routed_stack_lookup(
+        dd.peel(g), k, tn, "grid", owner, cap_factor=0.0)
+    return f, v, ov[None]
+
+f, v, _ = jax.jit(g_lookup_full)(grid, akeys, atn)
+f = np.asarray(f)
+np.testing.assert_array_equal(f, ok)            # present iff insert kept it
+np.testing.assert_array_equal(np.asarray(v)[f], np.asarray(akeys * 5)[f])
+print("GRID-CAP-OK")
+"""
+
+
+def test_routed_stack_grid_8dev():
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", SCRIPT_GRID],
+                       capture_output=True, text=True, env=env,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "GRID-PARITY-OK" in r.stdout
+    assert "GRID-CAP-OK" in r.stdout

@@ -163,6 +163,52 @@ def test_multi_tenant_page_tables_independent_rehash():
     assert int(kv.free_top) == 64 - 6
 
 
+def test_capped_router_adversarial_skew_retry_exact():
+    """The acceptance adversarial case: EVERY key lands in one tenant
+    (100% skew), so the capped router overflows hard — the gated full-width
+    retry must serve the spill exactly, the spill must be accounted in
+    ``route_spill`` (distinct from table rejections), and the outcome must
+    be bit-identical to a full-width (cap_factor <= 0) run."""
+    def run(cap_factor):
+        kv = kvcache.make(layers=1, page_size=4, n_pages=64, kv_heads=1,
+                          head_dim=8, max_blocks=8, n_tenants=8,
+                          cap_factor=cap_factor)
+        # 16 sequences, ALL in tenant 3 (seq_id % 8 == 3):
+        # cap = ceil(2*16/8) = 4 slots for 16 keys -> overflow 12
+        sids = jnp.asarray([3 + 8 * i for i in range(16)], jnp.int32)
+        blk = jnp.zeros((16,), jnp.int32)
+        kv, pages = jax.jit(kvcache.alloc_pages)(kv, sids, blk,
+                                                 jnp.ones((16,), bool))
+        return kv, sids, blk, np.asarray(pages)
+
+    kv, sids, blk, pages = run(cap_factor=2.0)
+    # nothing silently dropped: every seq got a page, all distinct
+    assert (pages >= 0).all()
+    assert len(set(pages.tolist())) == 16
+    # overflow path exercised and accounted on exactly the hot tenant
+    spill = np.asarray(jax.device_get(kv.route_spill))
+    assert spill[3] == 12 and (spill[np.arange(8) != 3] == 0).all(), spill
+    load, spill2 = (np.asarray(x) for x in
+                    jax.device_get(kvcache.table_load(kv, with_spill=True)))
+    np.testing.assert_array_equal(spill2, spill)
+    assert load[3] > 0 and (load[np.arange(8) != 3] == 0).all()
+    # lookup retry is exact: every skewed key resolves to its page
+    pg, fnd = kvcache.resolve_blocks_at(kv, sids, blk)
+    assert bool(np.asarray(fnd).all())
+    np.testing.assert_array_equal(np.asarray(pg), pages)
+    # capped + retry is bit-identical to the overflow-proof full width
+    _, _, _, pages_full = run(cap_factor=0.0)
+    np.testing.assert_array_equal(pages, pages_full)
+    # delete retry: freeing routes 16*8 = 128 keys into tenant 3
+    # (cap 32 -> spill 96); every page must come home
+    kv = jax.jit(kvcache.free_sequences, static_argnums=2)(kv, sids, 8)
+    assert int(kv.free_top) == 64, "router spill must not leak pages"
+    _, fnd2 = kvcache.resolve_blocks_at(kv, sids, blk)
+    assert not bool(np.asarray(fnd2).any())
+    spill3 = np.asarray(jax.device_get(kv.route_spill))
+    assert spill3[3] > spill[3], "delete retry must also be accounted"
+
+
 def test_multi_tenant_engine_matches_single_tenant(small):
     """ServingEngine with a tenant stack decodes EXACTLY like the
     single-table engine (page-table layout is invisible to the model), while
