@@ -11,12 +11,21 @@ Gate semantics, per leaf key:
 * **pass counts** (``sort``, ``pallas_call``, ``passes``) are STRUCTURAL:
   they come from jaxpr inspection, are machine-independent, and any
   increase is a regression — the fused paths grew an extra sort or kernel
-  launch, or a jnp probe loop crept back in.  Compared exactly.
-* **pass ratios** (``pass_ratio``, ``send_bytes_ratio``) must not drop by
-  more than ``--ratio-tolerance`` (default 15%): the fused-vs-jnp
-  advantage and the capped router's wire-bytes reduction (full-width
-  buffer bytes over capped, T/c — the routed-stack bench) are acceptance
-  criteria.
+  launch, or a jnp probe loop crept back in.  Compared exactly.  The
+  elastic-burst scenario's **resize counts** (``grows``, ``shrinks``,
+  ``flaps``) are STRUCTURAL for the same reason: the policy's watermark
+  decisions are deterministic arithmetic over a pinned workload, so an
+  extra resize — and above all a nonzero flap count, a resize fired
+  inside a constant-population hold window — is a hysteresis regression,
+  not noise.
+* **pass ratios** (``pass_ratio``, ``send_bytes_ratio``,
+  ``cliff_ratio``) must not drop by more than ``--ratio-tolerance``
+  (default 15%): the fused-vs-jnp advantage, the capped router's
+  wire-bytes reduction (full-width buffer bytes over capped, T/c — the
+  routed-stack bench), and the elastic scenario's worst-phase-over-steady
+  throughput floor are acceptance criteria.  ``cliff_ratio`` divides two
+  min-of-steps walls from the SAME run, so host contention largely
+  cancels out of it.
 * **escape rates** (``escape_rate``, ``overflow_rate``) are
   lower-is-better fractions — rebuild-epoch queries overflowing to the
   jnp fallback (growth-escape bench), and zipf-batch keys past their
@@ -54,8 +63,8 @@ import json
 import pathlib
 import sys
 
-STRUCTURAL = ("sort", "pallas_call", "passes")
-RATIOS = ("pass_ratio", "send_bytes_ratio")
+STRUCTURAL = ("sort", "pallas_call", "passes", "grows", "shrinks", "flaps")
+RATIOS = ("pass_ratio", "send_bytes_ratio", "cliff_ratio")
 TIMINGS = ("wall_us",)
 RATES = ("escape_rate", "overflow_rate")
 

@@ -51,6 +51,18 @@ def s62_oversubscribe():
         _row(f"s62/{name}/q{q}", 1.0 / mops, f"{mops:.3f}Mops_s")
 
 
+def elastic():
+    from benchmarks.bench_oversubscribe import run_elastic
+    r = run_elastic(quiet=True)
+    for ph in ("steady", "burst", "drain", "recovered"):
+        _row(f"elastic/{ph}/q{r['q']}", 1.0 / r[ph]["mops"],
+             f"{r[ph]['mops']:.3f}Mops_s")
+    _row("elastic/cliff", 0.0, f"{r['cliff_ratio']:.2f}x_of_steady")
+    _row("elastic/resizes", 0.0,
+         f"{r['grows']}grows_{r['shrinks']}shrinks_{r['flaps']}flaps_"
+         f"load{r['final_load']:.2f}")
+
+
 def s1_attack():
     from benchmarks.bench_attack import run
     r = run(quiet=True)
@@ -134,16 +146,17 @@ def routed_stack():
 
 
 TABLES = [fig2_throughput, fig3_rebuild, fig4_portability, s62_oversubscribe,
-          s1_attack, moe_router, kvcache_rehash, fused_probe, fused_writes,
-          chain_fused, growth_escape, table_stack, routed_stack]
+          elastic, s1_attack, moe_router, kvcache_rehash, fused_probe,
+          fused_writes, chain_fused, growth_escape, table_stack, routed_stack]
 
 
 def quick() -> None:
     """CI smoke mode: exercises the perf harness end-to-end in minutes —
     the fused-probe, fused-writes, chain-fused, growth-escape, table-stack,
-    and routed-stack acceptance checks (pass counts + escape rates + their
-    BENCH_*.json artifacts) plus a tiny fig3 rebuild sweep so perf code
-    can't silently rot."""
+    routed-stack, and elastic-burst acceptance checks (pass counts + escape
+    rates + resize/flap counts + their BENCH_*.json artifacts) plus a tiny
+    fig3 rebuild sweep and a shrunk §6.2 oversubscription sweep so perf
+    code can't silently rot."""
     print("name,us_per_call,derived")
     t0 = time.time()
     fused_probe()
@@ -152,6 +165,10 @@ def quick() -> None:
     growth_escape()
     table_stack()
     routed_stack()
+    elastic()
+    from benchmarks.bench_oversubscribe import run as oversub_run
+    for name, q, mops in oversub_run(alpha=20, qs=(512, 2048), quiet=True):
+        _row(f"s62/{name}/q{q}", 1.0 / mops, f"{mops:.3f}Mops_s")
     from benchmarks.bench_rebuild import run as rebuild_run
     for name, n, dt in rebuild_run(ns=(2_000,), quiet=True):
         _row(f"fig3/{name}/n{n}", dt * 1e6, f"{dt*1e3:.1f}ms_full_rebuild")

@@ -42,6 +42,7 @@ import dataclasses
 from typing import Any, Callable
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import buckets, hashing
@@ -78,11 +79,27 @@ class BucketBackend:
       delete(t, keys, mask) -> (t', ok)
       extract_chunk(t, cursor, n) -> (t', hkeys, hvals, hlive, cursor')
       count_live(t) -> scalar
+      count_tomb(t) -> scalar                  tombstoned slots/nodes (the
+                                               elastic policy's reclaim
+                                               trigger, core/policy.py)
       clear(t) -> t'
+      probe_cost(t, keys, found, loc) -> i32[Q]  probe-length cost of each
+                                               hit, from the loc output of
+                                               the backend's lookup (probe
+                                               telemetry for the policy's
+                                               expensive-lookup counter)
+      slots_for(capacity) -> int               slot count make(capacity)
+                                               would allocate (host-side
+                                               resize planning; None =
+                                               derive by building a table)
 
     Fused set (``None`` = no kernel path; all-or-none per backend):
 
       lookup_fused(t, keys) -> (found, vals)
+      lookup_fused_loc(t, keys) -> (found, vals, loc)   the same single
+                                               kernel pass with its loc
+                                               output kept (probe
+                                               telemetry; no extra pass)
       insert_fused(t, keys, vals, mask) -> (t', ok)   folds the backend's
                                                post-insert maintenance (chain
                                                re-sorts past its dirty_cap)
@@ -113,8 +130,13 @@ class BucketBackend:
     extract_chunk: Callable[..., Any]
     count_live: Callable[..., Any]
     clear: Callable[..., Any]
+    # occupancy / probe telemetry (elastic policy inputs, core/policy.py)
+    count_tomb: Callable[..., Any] = None
+    probe_cost: Callable[..., Any] = None
+    slots_for: Callable[[int], int] | None = None
     # fused kernel ops
     lookup_fused: Callable[..., Any] | None = None
+    lookup_fused_loc: Callable[..., Any] | None = None
     insert_fused: Callable[..., Any] | None = None
     delete_fused: Callable[..., Any] | None = None
     extract_chunk_fused: Callable[..., Any] | None = None
@@ -130,7 +152,8 @@ class BucketBackend:
         return self.lookup_fused is not None
 
     def __post_init__(self):
-        fused_set = (self.lookup_fused, self.insert_fused, self.delete_fused,
+        fused_set = (self.lookup_fused, self.lookup_fused_loc,
+                     self.insert_fused, self.delete_fused,
                      self.extract_chunk_fused, self.ordered_lookup_fused,
                      self.ordered_delete_fused)
         have = [f is not None for f in fused_set]
@@ -180,6 +203,18 @@ def linear_lookup_fused(t: LinearTable, keys: jax.Array, *,
     h0 = hashing.bucket_of(t.hfn, keys, t.capacity)
     return ops.probe_lookup(t.key, t.val, t.state, h0, keys,
                             max_probes=t.max_probes, interpret=interpret)
+
+
+def linear_lookup_fused_loc(t: LinearTable, keys: jax.Array, *,
+                            interpret: bool = True):
+    """Kernel-backed lookup keeping the kernel's loc output: the SAME single
+    sort + pallas_call as ``linear_lookup_fused``, returning
+    (found, vals, loc) for probe telemetry (core/policy.py)."""
+    from repro.kernels import ops
+    h0 = hashing.bucket_of(t.hfn, keys, t.capacity)
+    return ops.probe_lookup(t.key, t.val, t.state, h0, keys,
+                            max_probes=t.max_probes, with_loc=True,
+                            interpret=interpret)
 
 
 def linear_insert_fused(t: LinearTable, keys: jax.Array, vals: jax.Array,
@@ -553,6 +588,64 @@ def _reseed_twochoice(t: TwoChoiceTable, salt: jax.Array) -> TwoChoiceTable:
                    hfn_b=hashing.reseed(t.hfn_b, salt + 0x5851F42))
 
 
+# ---------------------------------------------------------------------------
+# occupancy / probe telemetry (elastic policy inputs)
+# ---------------------------------------------------------------------------
+
+def _linear_count_tomb(t: LinearTable) -> jax.Array:
+    return (t.state == buckets.TOMB).sum(dtype=jnp.int32)
+
+
+def _twochoice_count_tomb(t: TwoChoiceTable) -> jax.Array:
+    return (t.state == buckets.TOMB).sum(dtype=jnp.int32)
+
+
+def _chain_count_tomb(t: ChainTable) -> jax.Array:
+    return (t.astate == buckets.TOMB).sum(dtype=jnp.int32)
+
+
+def _linear_probe_cost(t: LinearTable, keys, found, loc) -> jax.Array:
+    """Probe distance of each hit.  Works for BOTH loc conventions: the
+    plain lookup's wrapped table coordinate and the fused kernel's unwrapped
+    padded coordinate (``loc >= h0``) — the mod folds either to the probe
+    index."""
+    h0 = hashing.bucket_of(t.hfn, keys, t.capacity)
+    dist = jnp.mod(loc - h0, t.capacity)
+    return jnp.where(found & (loc >= 0), dist, 0).astype(jnp.int32)
+
+
+def _twochoice_probe_cost(t: TwoChoiceTable, keys, found, loc) -> jax.Array:
+    """Cost = lane depth within the hit's row (both the plain and fused
+    lookups emit loc = row * width + lane).  Two-choice inserts target the
+    LESS loaded of the two candidate rows, so which row hit carries no
+    signal — but a hit deep in its row means that row is saturating, the
+    clustering symptom the expensive-lookup trigger exists to catch."""
+    cost = loc % t.width
+    return jnp.where(found & (loc >= 0), cost, 0).astype(jnp.int32)
+
+
+def _chain_probe_cost(t: ChainTable, keys, found, loc) -> jax.Array:
+    """Chain depth of the hit: exact offset inside the sorted-arena segment;
+    a dirty-tail hit (appended since the last compaction) is charged the
+    full chain length + 1 — it IS the end of its chain."""
+    b = hashing.bucket_of(t.hfn, keys, t.nbuckets)
+    in_sorted = loc < t.sorted_upto
+    depth = jnp.where(in_sorted, loc - t.bstart[b], t.blen[b] + 1)
+    return jnp.where(found & (loc >= 0), depth, 0).astype(jnp.int32)
+
+
+def _linear_slots_for(capacity: int) -> int:
+    return _next_pow2(int(capacity / 0.75) + 1)          # mirrors _make_linear
+
+
+def _twochoice_slots_for(capacity: int) -> int:
+    return _next_pow2(int(capacity / (0.75 * 8)) + 1) * 8   # _make_twochoice
+
+
+def _chain_slots_for(capacity: int) -> int:
+    return int(capacity)                                 # arena = capacity
+
+
 def _drop_loc(fn):
     """Normalize a loc-returning lookup to the descriptor's (found, vals)."""
     def wrapped(t, keys, **kw):
@@ -581,7 +674,11 @@ LINEAR = register(BucketBackend(
     extract_chunk=buckets.linear_extract_chunk,
     count_live=buckets.linear_count_live,
     clear=buckets.linear_clear,
+    count_tomb=_linear_count_tomb,
+    probe_cost=_linear_probe_cost,
+    slots_for=_linear_slots_for,
     lookup_fused=linear_lookup_fused,
+    lookup_fused_loc=linear_lookup_fused_loc,
     insert_fused=linear_insert_fused,
     delete_fused=linear_delete_fused,
     extract_chunk_fused=linear_extract_chunk_fused,
@@ -606,7 +703,11 @@ TWOCHOICE = register(BucketBackend(
     extract_chunk=buckets.twochoice_extract_chunk,
     count_live=buckets.twochoice_count_live,
     clear=buckets.twochoice_clear,
+    count_tomb=_twochoice_count_tomb,
+    probe_cost=_twochoice_probe_cost,
+    slots_for=_twochoice_slots_for,
     lookup_fused=_drop_loc(twochoice_lookup_fused),
+    lookup_fused_loc=twochoice_lookup_fused,
     insert_fused=twochoice_insert_fused,
     delete_fused=twochoice_delete_fused,
     extract_chunk_fused=twochoice_extract_chunk_fused,
@@ -630,7 +731,11 @@ CHAIN = register(BucketBackend(
     extract_chunk=buckets.chain_extract_chunk,
     count_live=buckets.chain_count_live,
     clear=buckets.chain_clear,
+    count_tomb=_chain_count_tomb,
+    probe_cost=_chain_probe_cost,
+    slots_for=_chain_slots_for,
     lookup_fused=_drop_loc(chain_lookup_fused),
+    lookup_fused_loc=chain_lookup_fused,
     insert_fused=_chain_insert_fused_compacting,
     delete_fused=chain_delete_fused,
     extract_chunk_fused=chain_extract_chunk_fused,

@@ -91,6 +91,12 @@ class DHashState:
     cursor: jax.Array           # scalar i32 - scan position in old table
     rebuilding: jax.Array       # scalar bool
     epoch: jax.Array            # scalar i32
+    lookups: jax.Array          # scalar i32 - queries sampled by
+                                # lookup_counted since the last policy
+                                # action / epoch swap (probe telemetry)
+    expensive: jax.Array        # scalar i32 - sampled queries whose probe
+                                # cost crossed the policy threshold
+                                # (small_hash.c expensive_lookup_count)
 
 
 def _be(d: DHashState) -> backends.BucketBackend:
@@ -142,7 +148,9 @@ def make(backend: str = "linear", capacity: int = 1024, *, chunk: int = 256,
                       hazard_val=jnp.zeros((chunk,), I32),
                       hazard_live=jnp.zeros((chunk,), bool),
                       cursor=jnp.asarray(0, I32), rebuilding=jnp.asarray(False),
-                      epoch=jnp.asarray(0, I32))
+                      epoch=jnp.asarray(0, I32),
+                      lookups=jnp.asarray(0, I32),
+                      expensive=jnp.asarray(0, I32))
 
 
 # ---------------------------------------------------------------------------
@@ -156,6 +164,34 @@ def _hazard_probe(d: DHashState, keys: jax.Array):
     return found, jnp.where(found, val, 0)
 
 
+def _slow_lookup(dd: DHashState, keys: jax.Array):
+    """Rebuild-epoch lookup body: the full old -> hazard -> new ordered
+    check (shared by ``lookup`` and ``lookup_counted``)."""
+    be = _be(dd)
+    if dd.fused:
+        return be.ordered_lookup_fused(
+            dd.old, dd.new, dd.hazard_key, dd.hazard_val,
+            dd.hazard_live, keys, nres_cap=dd.nres_cap)
+    if dd.fwd_hazard and be.lookup_fwd is not None:
+        # beyond-paper: the old-table probe already passes over the
+        # MIGRATED slots of the in-flight chunk, so the hazard check is
+        # a forwarding index, not a second pass (§Perf dhash-service)
+        f_old, v_old, _, mig = be.lookup_fwd(dd.old, keys)
+        base = dd.cursor - dd.chunk
+        hz_idx = mig - base
+        inwin = (mig >= 0) & (hz_idx >= 0) & (hz_idx < dd.chunk)
+        safe = jnp.clip(hz_idx, 0, dd.chunk - 1)
+        f_hz = inwin & dd.hazard_live[safe] & (dd.hazard_key[safe] == keys)
+        v_hz = dd.hazard_val[safe]
+    else:
+        f_old, v_old, _ = be.lookup(dd.old, keys)        # (1) old table
+        f_hz, v_hz = _hazard_probe(dd, keys)             # (2) rebuild_cur
+    f_new, v_new, _ = be.lookup(dd.new, keys)            # (3) new table
+    found = f_old | f_hz | f_new
+    val = jnp.where(f_old, v_old, jnp.where(f_hz, v_hz, v_new))
+    return found, val
+
+
 def lookup(d: DHashState, keys: jax.Array):
     """Batched lookup honouring the rebuild protocol. Returns (found, vals).
 
@@ -165,37 +201,47 @@ def lookup(d: DHashState, keys: jax.Array):
     check, with the two-level tile map keeping grown new tables resident."""
     be = _be(d)
 
-    def fast(dd: DHashState):
+    def fast(dd: DHashState, kk):
         if dd.fused:
-            return be.lookup_fused(dd.old, keys)
-        f, v, _ = be.lookup(dd.old, keys)
+            return be.lookup_fused(dd.old, kk)
+        f, v, _ = be.lookup(dd.old, kk)
         return f, v
 
-    def slow(dd: DHashState):
-        if dd.fused:
-            return be.ordered_lookup_fused(
-                dd.old, dd.new, dd.hazard_key, dd.hazard_val,
-                dd.hazard_live, keys, nres_cap=dd.nres_cap)
-        if dd.fwd_hazard and be.lookup_fwd is not None:
-            # beyond-paper: the old-table probe already passes over the
-            # MIGRATED slots of the in-flight chunk, so the hazard check is
-            # a forwarding index, not a second pass (§Perf dhash-service)
-            f_old, v_old, _, mig = be.lookup_fwd(dd.old, keys)
-            base = dd.cursor - dd.chunk
-            hz_idx = mig - base
-            inwin = (mig >= 0) & (hz_idx >= 0) & (hz_idx < dd.chunk)
-            safe = jnp.clip(hz_idx, 0, dd.chunk - 1)
-            f_hz = inwin & dd.hazard_live[safe] & (dd.hazard_key[safe] == keys)
-            v_hz = dd.hazard_val[safe]
-        else:
-            f_old, v_old, _ = be.lookup(dd.old, keys)        # (1) old table
-            f_hz, v_hz = _hazard_probe(dd, keys)             # (2) rebuild_cur
-        f_new, v_new, _ = be.lookup(dd.new, keys)            # (3) new table
-        found = f_old | f_hz | f_new
-        val = jnp.where(f_old, v_old, jnp.where(f_hz, v_hz, v_new))
-        return found, val
+    return jax.lax.cond(d.rebuilding, _slow_lookup, fast, d, keys)
 
-    return jax.lax.cond(d.rebuilding, slow, fast, d)
+
+def lookup_counted(d: DHashState, keys: jax.Array, *,
+                   probe_hi: int = 7):
+    """Lookup that also feeds the elastic policy's probe telemetry.
+    Returns ``(state', (found, vals))``.
+
+    The steady-state branch runs the backend's loc-emitting probe (the same
+    single kernel pass — ``loc`` is an extra output, not an extra pass),
+    converts ``loc`` to a probe cost through the descriptor's
+    ``probe_cost``, and bumps ``DHashState.lookups`` / ``.expensive``
+    (queries whose cost crossed ``probe_hi``, small_hash.c's
+    EXPENSIVE_LOOKUP_THRESHOLD).  The rebuild-epoch branch answers through
+    the ordered check WITHOUT sampling: the fused ordered probe has no loc
+    output, and mid-epoch probe lengths reflect the dying table anyway —
+    the policy resets the counters at every action/epoch, so the sample
+    window is always steady-state."""
+    be = _be(d)
+
+    def fast(dd: DHashState, kk):
+        if dd.fused and be.lookup_fused_loc is not None:
+            f, v, loc = be.lookup_fused_loc(dd.old, kk)
+        else:
+            f, v, loc = be.lookup(dd.old, kk)
+        cost = be.probe_cost(dd.old, kk, f, loc)
+        exp = (f & (cost >= probe_hi)).sum(dtype=I32)
+        dd = replace(dd, lookups=dd.lookups + I32(kk.size),
+                     expensive=dd.expensive + exp)
+        return dd, (f, v)
+
+    def slow(dd: DHashState, kk):
+        return dd, _slow_lookup(dd, kk)
+
+    return jax.lax.cond(d.rebuilding, slow, fast, d, keys)
 
 
 def _ins_table(dd: DHashState, t, kk, vv, mm):
@@ -332,12 +378,32 @@ def rebuild_land(d: DHashState) -> DHashState:
 
     With ``fused`` the landing runs through the SAME claim kernel as user
     inserts, so the whole rebuild epoch — extract -> land -> swap — stays
-    on-device inside the jitted engine step."""
+    on-device inside the jitted engine step.
+
+    A landing insert can fail two ways and they MUST be told apart: the key
+    is already in the new table (a user re-inserted it during the hazard
+    window — the new copy wins, drop the hazard entry), or the new table
+    had no slot within the probe bound (a burst filling the target
+    mid-migration — the hazard entry is the ONLY copy of an acknowledged
+    insert, so it stays live and the next transition retries).  The
+    disambiguating presence check is the plain jnp probe — elementwise, no
+    extra sort or kernel pass — and cond-gated so clean landings never pay
+    it."""
+    be = _be(d)
 
     def go(dd: DHashState):
-        t, _ok = _ins_table(dd, dd.new, dd.hazard_key, dd.hazard_val,
-                            dd.hazard_live)
-        return replace(dd, new=t, hazard_live=jnp.zeros_like(dd.hazard_live))
+        t, ok = _ins_table(dd, dd.new, dd.hazard_key, dd.hazard_val,
+                           dd.hazard_live)
+        failed = dd.hazard_live & ~ok
+
+        def reconcile(args):
+            t_, failed_ = args
+            present, _, _ = be.lookup(t_, dd.hazard_key)
+            return failed_ & ~present          # keep only the capacity fails
+
+        keep = jax.lax.cond(failed.any(), reconcile,
+                            lambda args: jnp.zeros_like(failed), (t, failed))
+        return replace(dd, new=t, hazard_live=keep)
 
     return jax.lax.cond(d.rebuilding, go, lambda dd: dd, d)
 
@@ -358,8 +424,10 @@ def rebuild_finish(d: DHashState) -> DHashState:
     """Host-level epoch swap (Alg. 3 lines 41-46). old/new may differ in
     static shape, so this is not jittable in general; O(1) pytree shuffle."""
     assert bool(jax.device_get(rebuild_done(d))), "rebuild not complete"
+    # probe telemetry is per-table-generation: a fresh epoch samples afresh
     return replace(d, old=d.new, new=d.old, cursor=jnp.asarray(0, I32),
-                   rebuilding=jnp.asarray(False), epoch=d.epoch + 1)
+                   rebuilding=jnp.asarray(False), epoch=d.epoch + 1,
+                   lookups=jnp.asarray(0, I32), expensive=jnp.asarray(0, I32))
 
 
 def finish_same_shape(d: DHashState) -> DHashState:
@@ -375,7 +443,9 @@ def finish_same_shape(d: DHashState) -> DHashState:
                    new=jax.tree_util.tree_unflatten(treedef, sw_new),
                    cursor=jnp.where(done, 0, d.cursor).astype(I32),
                    rebuilding=d.rebuilding & ~done,
-                   epoch=d.epoch + done.astype(I32))
+                   epoch=d.epoch + done.astype(I32),
+                   lookups=jnp.where(done, 0, d.lookups).astype(I32),
+                   expensive=jnp.where(done, 0, d.expensive).astype(I32))
 
 
 def rebuild_step(d: DHashState) -> DHashState:

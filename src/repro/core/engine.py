@@ -53,13 +53,17 @@ tenants) — through the same donation + K-step polling treatment.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from functools import partial
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import backend as backends
 from repro.core import dhash
+from repro.core import policy as elastic
+from repro.core.struct_utils import replace
 
 I32 = jnp.int32
 
@@ -74,6 +78,30 @@ class EngineStats:
     rebuilds_completed: int = 0
     rebuild_transitions: int = 0
     host_syncs: int = 0         # engine-internal device_get round-trips
+    grows: int = 0              # policy-applied capacity increases
+    shrinks: int = 0            # policy-applied capacity decreases
+
+
+@partial(jax.jit, static_argnames=("swap_on_device",), donate_argnums=(0, 1))
+def _policy_engine_step(d, pol, lk, ik, iv, dk, imask, dmask, *,
+                        swap_on_device: bool):
+    """The policy-driven engine step (module level so every engine instance
+    shares ONE jit cache — a resize retrace warms the cache for all engines
+    with the same geometry, e.g. a bench's warmup and timed engines).
+
+    Identical op sequence to the plain step, with the lookup routed through
+    ``lookup_counted`` (probe telemetry is a kernel output, not an extra
+    pass) and one ``policy_step`` evaluation appended.  While old/new are
+    shape-mismatched mid-resize (``swap_on_device=False``) the policy is
+    plan-only: no on-device autostart against the wrong geometry."""
+    d, (found, vals) = dhash.lookup_counted(d, lk, probe_hi=pol.probe_hi)
+    d, ok_i = dhash.insert(d, ik, iv, imask)
+    d, ok_d = dhash.delete(d, dk, dmask)
+    d = dhash.rebuild_step(d)
+    if swap_on_device:
+        d = dhash.finish_same_shape(d)
+    pol, d = elastic.policy_step(pol, d, allow_autostart=swap_on_device)
+    return d, pol, (found, vals, ok_i, ok_d)
 
 
 @dataclass
@@ -84,6 +112,7 @@ class DHashEngine:
     continuous_rebuild: bool = False   # paper Fig 2: rebuild forever
     rebuild_seed: int = 1234
     poll_every: int = DEFAULT_POLL_EVERY   # host polls 1 of every K steps
+    policy: elastic.ElasticPolicy | None = None   # elastic capacity decisions
     _stats: EngineStats = field(default_factory=EngineStats, repr=False)
     _step_fns: dict = field(default_factory=dict, init=False, repr=False)
     _poll_fn: Callable | None = field(default=None, init=False, repr=False)
@@ -93,11 +122,20 @@ class DHashEngine:
     _last_poll_step: int = field(default=-1, init=False, repr=False)
 
     def __post_init__(self):
+        if self.policy is not None and self.continuous_rebuild:
+            raise ValueError("policy and continuous_rebuild are exclusive: "
+                             "the policy decides when to rebuild")
         # take ownership: copy so donation never sees aliased or shared
         # buffers (e.g. a caller-held reference or zeros reused across leaves)
         self.state = jax.tree_util.tree_map(jnp.copy, self.state)
-        self._poll_fn = jax.jit(
-            lambda d: (d.epoch, d.rebuilding, dhash.rebuild_done(d)))
+        if self.policy is not None:
+            self.policy = jax.tree_util.tree_map(jnp.copy, self.policy)
+            self._poll_fn = jax.jit(
+                lambda d, p: (d.epoch, d.rebuilding, dhash.rebuild_done(d),
+                              p.want_grow, p.want_shrink, p.target_capacity))
+        else:
+            self._poll_fn = jax.jit(
+                lambda d: (d.epoch, d.rebuilding, dhash.rebuild_done(d)))
         self._lookup_fn = jax.jit(dhash.lookup)
         self._count_fn = jax.jit(dhash.count_items)
         self._epoch0 = int(jax.device_get(self.state.epoch))
@@ -145,8 +183,13 @@ class DHashEngine:
         dk = jnp.asarray(del_keys, I32)
         im = jnp.ones(ik.shape, bool) if ins_mask is None else jnp.asarray(ins_mask)
         dm = jnp.ones(dk.shape, bool) if del_mask is None else jnp.asarray(del_mask)
-        fn = self._get_step_fn(self._swap_on_device())
-        self.state, out = fn(self.state, lk, ik, iv, dk, im, dm)
+        if self.policy is not None:
+            self.state, self.policy, out = _policy_engine_step(
+                self.state, self.policy, lk, ik, iv, dk, im, dm,
+                swap_on_device=self._swap_on_device())
+        else:
+            fn = self._get_step_fn(self._swap_on_device())
+            self.state, out = fn(self.state, lk, ik, iv, dk, im, dm)
         self._stats.steps += 1
         self._stats.ops += lk.size + ik.size + dk.size
         if self.poll_every <= 1 or self._stats.steps % self.poll_every == 0:
@@ -158,9 +201,16 @@ class DHashEngine:
     def _poll(self):
         """One batched device_get: refresh stats; finish a shape-changing
         rebuild; (re)start a rebuild in continuous mode if the on-device
-        autostart could not (shape-changing tables)."""
-        epoch, rebuilding, done = (
-            int(x) for x in jax.device_get(self._poll_fn(self.state)))
+        autostart could not (shape-changing tables); apply the policy's
+        published resize plan (policy engines)."""
+        if self.policy is not None:
+            epoch, rebuilding, done, wg, ws, tgt = (
+                int(x) for x in
+                jax.device_get(self._poll_fn(self.state, self.policy)))
+        else:
+            epoch, rebuilding, done = (
+                int(x) for x in jax.device_get(self._poll_fn(self.state)))
+            wg = ws = 0
         self._stats.host_syncs += 1
         self._last_poll_step = self._stats.steps
         if done:
@@ -168,9 +218,57 @@ class DHashEngine:
             self.state = dhash.rebuild_finish(self.state)
             epoch += 1
             rebuilding = False
+            # the published plan predates the swap we just applied — drop
+            # it; the device policy re-evaluates against the new geometry
+            # before the next poll can act
+            wg = ws = 0
+            if self.policy is not None:
+                # a finished shape-changing resize leaves the dead table as
+                # the standby; restore a same-shape standby so the epoch
+                # swap (and tombstone-reclaim autostarts) return on-device
+                be = backends.get(self.state.backend)
+                self.state = replace(
+                    self.state, new=be.fresh_like(self.state.old,
+                                                  self.rebuild_seed))
+                self.rebuild_seed += 1
         self._stats.rebuilds_completed = epoch - self._epoch0
         if self.continuous_rebuild and not rebuilding:
             self.request_rebuild()
+        if self.policy is not None and not rebuilding and (wg or ws):
+            self._apply_resize(grow=bool(wg), target_entries=tgt)
+
+    def _apply_resize(self, *, grow: bool, target_entries: int):
+        """Materialize the policy's published plan: size the new table,
+        adapt the tile-map residency to the slot ratio, and begin the live
+        migration.  Skips plans that round to the CURRENT slot count (the
+        power-of-two sizing makes repeated wants at a capacity floor free) —
+        except a probe-triggered grow, which is force-bumped to the next
+        size up: clustering wants more slots even when the load does not."""
+        be = backends.get(self.state.backend)
+        cur_slots = int(be.capacity_of(self.state.old))
+        tgt = int(target_entries)
+        new_slots = elastic.resolve_slots(be, tgt)
+        if grow and new_slots <= cur_slots:
+            tgt = int(cur_slots * 0.75) + 1
+            new_slots = elastic.resolve_slots(be, tgt)
+        if new_slots == cur_slots or (not grow and new_slots > cur_slots):
+            return
+        nres = elastic.adapt_nres_cap(self.policy, cur_slots, new_slots,
+                                      base=be.nres_cap)
+        new_table = be.make(tgt, self.rebuild_seed)
+        if not self.request_rebuild(new_table=new_table):
+            return   # lost the trylock (a reclaim rehash is mid-flight)
+        # the resize consumes the plan and the probe sample window
+        self.state = replace(self.state, nres_cap=nres,
+                             lookups=jnp.asarray(0, I32),
+                             expensive=jnp.asarray(0, I32))
+        self.policy = replace(self.policy,
+                              want_grow=jnp.asarray(False),
+                              want_shrink=jnp.asarray(False))
+        if grow:
+            self._stats.grows += 1
+        else:
+            self._stats.shrinks += 1
 
     @property
     def stats(self) -> EngineStats:
@@ -230,6 +328,7 @@ class DHashStackEngine:
     state: dhash.DHashState                # stacked: every leaf leads with [T]
     continuous_rebuild: bool = False
     poll_every: int = DEFAULT_POLL_EVERY
+    policy: elastic.ElasticPolicy | None = None   # in-place mode; [T]-stacked
     _stats: EngineStats = field(default_factory=EngineStats, repr=False)
     _step_fn: Callable | None = field(default=None, init=False, repr=False)
     _start_fn: Callable | None = field(default=None, init=False, repr=False)
@@ -242,6 +341,19 @@ class DHashStackEngine:
         self.state = jax.tree_util.tree_map(jnp.copy, self.state)
         self.n_tables = dhash.stack_size(self.state)
         autostart = self.continuous_rebuild
+        if self.policy is not None:
+            if self.continuous_rebuild:
+                raise ValueError("policy and continuous_rebuild are "
+                                 "exclusive: the policy decides when to "
+                                 "rebuild")
+            if not self.policy.in_place:
+                raise ValueError("stack engines need an in_place policy: "
+                                 "vmapped tables cannot change static shape")
+            # accept a single (unstacked) policy and broadcast it
+            if self.policy.armed.ndim == 0:
+                self.policy = elastic.stack(self.policy, self.n_tables)
+            self.policy = jax.tree_util.tree_map(jnp.copy, self.policy)
+        probe_hi = None if self.policy is None else self.policy.probe_hi
 
         def fused(d, lk, ik, iv, dk, imask, dmask):
             found, vals = dhash.stack_lookup(d, lk)
@@ -253,7 +365,24 @@ class DHashStackEngine:
                 d = dhash.stack_autostart(d)
             return d, (found, vals, ok_i, ok_d)
 
-        self._step_fn = jax.jit(fused, donate_argnums=(0,))
+        def fused_policy(d, pol, lk, ik, iv, dk, imask, dmask):
+            d, (found, vals) = jax.vmap(
+                lambda dd, kk: dhash.lookup_counted(dd, kk,
+                                                    probe_hi=probe_hi))(d, lk)
+            d, ok_i = dhash.stack_insert(d, ik, iv, imask)
+            d, ok_d = dhash.stack_delete(d, dk, dmask)
+            d = dhash.stack_rebuild_step(d)
+            d = dhash.stack_finish_same_shape(d)
+            # per-table triggers: each tenant fires its own same-shape
+            # rehash independently (in-place mode), latched by its own
+            # armed hysteresis
+            pol, d = elastic.stack_policy_step(pol, d)
+            return d, pol, (found, vals, ok_i, ok_d)
+
+        if self.policy is not None:
+            self._step_fn = jax.jit(fused_policy, donate_argnums=(0, 1))
+        else:
+            self._step_fn = jax.jit(fused, donate_argnums=(0,))
         self._start_fn = jax.jit(dhash.stack_autostart)
         self._lookup_fn = jax.jit(dhash.stack_lookup)
         self._count_fn = jax.jit(dhash.stack_count_items)
@@ -268,7 +397,11 @@ class DHashStackEngine:
         dk = jnp.asarray(del_keys, I32)
         im = jnp.ones(ik.shape, bool) if ins_mask is None else jnp.asarray(ins_mask)
         dm = jnp.ones(dk.shape, bool) if del_mask is None else jnp.asarray(del_mask)
-        self.state, out = self._step_fn(self.state, lk, ik, iv, dk, im, dm)
+        if self.policy is not None:
+            self.state, self.policy, out = self._step_fn(
+                self.state, self.policy, lk, ik, iv, dk, im, dm)
+        else:
+            self.state, out = self._step_fn(self.state, lk, ik, iv, dk, im, dm)
         self._stats.steps += 1
         self._stats.ops += lk.size + ik.size + dk.size
         if self.poll_every <= 1 or self._stats.steps % self.poll_every == 0:

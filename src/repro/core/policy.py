@@ -1,0 +1,271 @@
+"""ElasticPolicy: watermark-driven grow/shrink decisions for DHash tables.
+
+The paper's rebuild machinery can *execute* a capacity change (live
+migration, Lemma 4.1 ordered check), but nothing in PR 1-6 *decides*
+capacity — rebuild targets were chosen manually.  This module is that
+decision layer, a pure-pytree rendering of the trigger set in SNIPPETS.md
+snippet 3 (``small_hash.c``):
+
+* **Load-factor watermarks with hysteresis.**  ``small_hash`` sets a
+  desired count per anchor and derives a high watermark at
+  ``MIN_EXPAND_WATERMARK_FACTOR``x desired (grow above it) and a low
+  watermark at ``desired / SHRINK_WATERMARK_FACTOR`` (shrink below it).
+  Here the same math runs in load-factor terms over the backend's slot
+  capacity: grow when ``live > grow_load * slots``, shrink when
+  ``live < grow_load / (expand_headroom * shrink_factor) * slots``.  The
+  resize target is ``live * expand_headroom`` entries, which lands the
+  post-resize load strictly *between* the watermarks for every power-of-two
+  slot rounding the backends' ``make`` applies — grow/shrink cannot flap at
+  a boundary by construction (see docs/KERNELS.md for the band arithmetic).
+
+* **Expensive-lookup counter.**  ``small_hash`` enlarges even below the
+  watermark when ``expensive_lookup_count`` crosses
+  ``ENLARGE_DUE_TO_EXPENSIVE_LOOKUP_AFTER`` per
+  ``BETWEEN_LOOKUP_REPORT_COUNT`` lookups (probe chains past
+  ``EXPENSIVE_LOOKUP_THRESHOLD`` hops — clustering the load factor alone
+  does not see).  ``DHashState`` carries the two counters
+  (``lookups`` / ``expensive``); ``dhash.lookup_counted`` feeds them from
+  the probe-length telemetry of the backend's loc-emitting lookup (the
+  fused kernels' ``loc`` output — zero extra passes), and ``policy_step``
+  fires the growth trigger when the expensive fraction crosses
+  ``enlarge_after / report_every``.
+
+* **Adaptive nres_cap.**  A grown rebuild target spreads a query tile's
+  windows over ~``new_slots / old_slots`` new-table slabs; past the
+  two-level tile map's residency cap the fused probe escapes to the jnp
+  fallback.  ``adapt_nres_cap`` grows the residency with the planned ratio
+  (bounded by ``nres_cap_max``) so a policy-driven resize stays
+  kernel-resident instead of escaping — applied host-side by the engine
+  when it materializes the resize (nres_cap is static table metadata).
+
+Two execution modes:
+
+* **resize mode** (``in_place=False``, single tables): ``policy_step``
+  publishes a *plan* (``want_grow`` / ``want_shrink`` / ``target_capacity``)
+  that the engine's host poll turns into a physical ``rebuild_start`` into a
+  re-sized table; tombstone pressure alone fires an on-device same-shape
+  rehash (``rebuild_autostart``).
+* **in-place mode** (``in_place=True``, vmapped stacks / tenant tables —
+  static shapes cannot change under vmap): every trigger fires the
+  on-device same-shape rehash, reclaiming tombstones and re-randomizing the
+  hash function, with an ``armed`` latch providing the hysteresis (a fired
+  table must drain below the re-arm watermark before it may fire again).
+
+Everything device-side is shape-stable and vmappable; all configuration is
+static aux-data, so a policy travels inside jitted steps for free.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import backend as backends
+from repro.core import dhash
+from repro.core.struct_utils import pytree_dataclass, replace
+
+I32 = jnp.int32
+
+# small_hash.c trigger constants (SNIPPETS.md snippet 3)
+MIN_EXPAND_WATERMARK_FACTOR = 2.0
+SHRINK_WATERMARK_FACTOR = 4.0
+EXPENSIVE_LOOKUP_THRESHOLD = 7
+ENLARGE_DUE_TO_EXPENSIVE_LOOKUP_AFTER = 2
+BETWEEN_LOOKUP_REPORT_COUNT = 10
+
+
+@pytree_dataclass(meta_fields=("grow_load", "expand_headroom", "shrink_factor",
+                               "probe_hi", "enlarge_after", "report_every",
+                               "min_lookups", "tomb_load", "min_capacity",
+                               "max_capacity", "nres_cap_max", "in_place"))
+class ElasticPolicy:
+    """Pure-pytree elastic-capacity policy (configuration static, state
+    arrays vmappable — a stack of tables stacks its policies)."""
+
+    # -- static configuration (jit aux-data) --
+    grow_load: float        # high watermark as a load factor over slots
+    expand_headroom: float  # MIN_EXPAND_WATERMARK_FACTOR: resize target is
+                            # live * headroom entries, so the post-resize
+                            # load sits 1/headroom under the high watermark
+    shrink_factor: float    # SHRINK_WATERMARK_FACTOR: low watermark is
+                            # high / (headroom * shrink_factor)
+    probe_hi: int           # EXPENSIVE_LOOKUP_THRESHOLD (probe hops)
+    enlarge_after: int      # ENLARGE_DUE_TO_EXPENSIVE_LOOKUP_AFTER
+    report_every: int       # BETWEEN_LOOKUP_REPORT_COUNT
+    min_lookups: int        # sample floor before the probe trigger may fire
+    tomb_load: float        # tombstone fraction that fires a reclaim rehash
+    min_capacity: int       # entries floor for shrink targets
+    max_capacity: int       # entries ceiling for grow targets
+    nres_cap_max: int       # adapt_nres_cap upper bound
+    in_place: bool          # True: triggers fire same-shape rehashes only
+    # -- device state --
+    armed: jax.Array            # bool: hysteresis latch for in-place fires
+    want_grow: jax.Array        # bool: plan published for the host poll
+    want_shrink: jax.Array      # bool
+    target_capacity: jax.Array  # i32 entries (be.make units)
+    fires: jax.Array            # i32: on-device autostart rehashes fired
+
+
+def make(*, grow_load: float = 0.7,
+         expand_headroom: float = MIN_EXPAND_WATERMARK_FACTOR,
+         shrink_factor: float = SHRINK_WATERMARK_FACTOR,
+         probe_hi: int = EXPENSIVE_LOOKUP_THRESHOLD,
+         enlarge_after: int = ENLARGE_DUE_TO_EXPENSIVE_LOOKUP_AFTER,
+         report_every: int = BETWEEN_LOOKUP_REPORT_COUNT,
+         min_lookups: int = 256, tomb_load: float = 0.25,
+         min_capacity: int = 64, max_capacity: int = 1 << 22,
+         nres_cap_max: int = 64, in_place: bool = False) -> ElasticPolicy:
+    """Fresh policy with the small_hash.c defaults (armed, no plan)."""
+    if not 0.0 < grow_load <= 1.0:
+        raise ValueError(f"grow_load must be in (0, 1], got {grow_load}")
+    if expand_headroom <= 1.0 or shrink_factor <= 1.0:
+        raise ValueError("expand_headroom and shrink_factor must exceed 1 "
+                         "(the hysteresis band would be empty)")
+    return ElasticPolicy(
+        grow_load=grow_load, expand_headroom=expand_headroom,
+        shrink_factor=shrink_factor, probe_hi=probe_hi,
+        enlarge_after=enlarge_after, report_every=report_every,
+        min_lookups=min_lookups, tomb_load=tomb_load,
+        min_capacity=min_capacity, max_capacity=max_capacity,
+        nres_cap_max=nres_cap_max, in_place=in_place,
+        armed=jnp.asarray(True),
+        want_grow=jnp.asarray(False), want_shrink=jnp.asarray(False),
+        target_capacity=jnp.asarray(min_capacity, I32),
+        fires=jnp.asarray(0, I32))
+
+
+def stack(pol: ElasticPolicy, n_tables: int) -> ElasticPolicy:
+    """[T]-stacked copy of a policy (one latch/plan per table) for use with
+    ``dhash.make_stack`` states under ``jax.vmap``."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.stack([x] * n_tables), pol)
+
+
+def watermarks(pol: ElasticPolicy, slots: int) -> tuple[int, int]:
+    """(high, low) live-entry watermarks for a table with ``slots`` slots —
+    the small_hash.c ``set_watermarks`` math in load-factor terms."""
+    high = int(slots * pol.grow_load)
+    low = int(slots * pol.grow_load / (pol.expand_headroom * pol.shrink_factor))
+    return high, low
+
+
+def policy_step(pol: ElasticPolicy, d: dhash.DHashState, *,
+                allow_autostart: bool = True):
+    """One on-device policy evaluation.  Returns ``(pol', d')``.
+
+    Reads the table's occupancy (live / tombstones, exact O(C) reductions)
+    and the probe counters ``dhash.lookup_counted`` maintains, evaluates the
+    trigger set, and either fires a same-shape ``rebuild_autostart``
+    (in-place mode, or tombstone reclaim in resize mode) or publishes a
+    grow/shrink plan for the engine's host poll.  All decisions are gated on
+    ``~d.rebuilding`` — a table mid-epoch never re-triggers.
+
+    ``allow_autostart=False`` suppresses the on-device rehash (plan only) —
+    the engine passes this while old/new are shape-mismatched mid-resize,
+    when an autostart would target the wrong geometry.
+    """
+    be = backends.get(d.backend)
+    slots = be.capacity_of(d.old)          # static int (table metadata)
+    live = be.count_live(d.old).astype(I32)
+    tombs = be.count_tomb(d.old).astype(I32)
+    high, low = watermarks(pol, slots)
+
+    idle = ~d.rebuilding
+    over = live > high
+    under = live < low
+    sampled = d.lookups >= pol.min_lookups
+    # expensive/lookups >= enlarge_after/report_every, in integers
+    probe_hot = sampled & (d.expensive * pol.report_every
+                           >= d.lookups * pol.enlarge_after)
+    tomb_hot = tombs > I32(int(slots * pol.tomb_load))
+    # re-arm once the load has drained back inside the band (and the probe
+    # telemetry is quiet) — the fired->drained->fired cycle of small_hash.
+    # Gated on idle: mid-epoch extraction empties the OLD table, and that
+    # transient low count must not re-arm the latch (a still-hot table
+    # would refire the instant its rehash lands, churning forever).
+    rearm = idle & (live <= I32(int(high / pol.expand_headroom))) & ~probe_hot
+    armed = pol.armed | rearm
+
+    target = jnp.clip(
+        jnp.ceil(live.astype(jnp.float32) * pol.expand_headroom).astype(I32),
+        pol.min_capacity, pol.max_capacity)
+
+    if pol.in_place:
+        # vmapped stacks cannot change static shape: every trigger becomes a
+        # same-shape rehash (tombstone reclaim + fresh hash function), with
+        # the armed latch as the hysteresis
+        fire = idle & armed & (over | probe_hot | tomb_hot)
+        want_grow = idle & (over | probe_hot)
+        want_shrink = idle & under
+    else:
+        # grow/shrink are host-applied resizes (the plan below); only
+        # tombstone pressure fires the on-device same-shape rehash
+        fire = idle & armed & tomb_hot & ~over & ~under
+        want_grow = idle & (over | probe_hot)
+        want_shrink = idle & under & ~probe_hot
+
+    if allow_autostart:
+        d = jax.lax.cond(fire, dhash.rebuild_autostart, lambda x: x, d)
+    # a fire consumes the probe sample window (small_hash zeroes the
+    # counters at every report boundary; we zero on action)
+    d = replace(d,
+                lookups=jnp.where(fire, 0, d.lookups).astype(I32),
+                expensive=jnp.where(fire, 0, d.expensive).astype(I32))
+    pol = replace(pol, armed=armed & ~fire,
+                  want_grow=want_grow, want_shrink=want_shrink,
+                  target_capacity=target,
+                  fires=pol.fires + fire.astype(I32))
+    return pol, d
+
+
+def stack_policy_step(pol: ElasticPolicy, d: dhash.DHashState):
+    """Vmapped ``policy_step`` over a [T] table stack + [T] policy stack
+    (in-place mode: per-table same-shape rehashes, independent latches)."""
+    return jax.vmap(lambda p, dd: policy_step(p, dd, allow_autostart=True)
+                    )(pol, d)
+
+
+# ---------------------------------------------------------------------------
+# host-side helpers (plain python / numpy — used at poll boundaries)
+# ---------------------------------------------------------------------------
+
+def adapt_nres_cap(pol: ElasticPolicy, old_slots: int, new_slots: int, *,
+                   base: int) -> int:
+    """Tile-map residency for a rebuild into ``new_slots``: a query tile of
+    old-sorted queries spans ~1 old slab, whose keys rehash into
+    ~``new_slots/old_slots`` new-table blocks (+1 for window straddle).
+    Growing the residency keeps the fused probe kernel-resident instead of
+    escaping to the jnp fallback past the default 16 slabs; bounded by the
+    policy's ``nres_cap_max``.  Never shrinks below the descriptor default
+    ``base`` (shrink rebuilds concentrate, they don't spread)."""
+    ratio = -(-int(new_slots) // max(int(old_slots), 1))
+    return int(min(max(base, ratio + 1), pol.nres_cap_max))
+
+
+def resolve_slots(be: backends.BucketBackend, target_entries: int) -> int:
+    """Host: slot count ``be.make(target_entries)`` would allocate."""
+    if be.slots_for is not None:
+        return int(be.slots_for(int(target_entries)))
+    probe = be.make(int(target_entries), 0)
+    return int(be.capacity_of(probe))
+
+
+def rehash_wanted(live_load, tomb_load, armed, rebuilding, *,
+                  grow_load: float,
+                  expand_headroom: float = MIN_EXPAND_WATERMARK_FACTOR,
+                  tomb_load_hi: float = 0.25):
+    """Host-side armed rehash trigger over load factors (numpy arrays or
+    scalars — the serving engine's per-tenant poll).  Returns
+    ``(want, armed')``: fire when armed and either the live load crossed
+    ``grow_load`` or tombstones crossed ``tomb_load_hi``; re-arm only once
+    the live load drains below ``grow_load / expand_headroom`` — the same
+    hysteresis as the device-side latch, so a hot tenant rehashes once per
+    excursion instead of every poll."""
+    live_load = np.asarray(live_load)
+    tomb_load = np.asarray(tomb_load)
+    armed = np.asarray(armed, bool)
+    rebuilding = np.asarray(rebuilding, bool)
+    hot = (live_load > grow_load) | (tomb_load > tomb_load_hi)
+    want = armed & hot & ~rebuilding
+    rearm = live_load <= grow_load / expand_headroom
+    return want, (armed | rearm) & ~want

@@ -120,11 +120,14 @@ def _resident_blockmap(blk_sorted: jax.Array, tiles: int, nblocks: int,
     return jnp.minimum(top.astype(I32), nblocks - 2).T
 
 
-@partial(jax.jit, static_argnames=("max_probes", "interpret"))
+@partial(jax.jit, static_argnames=("max_probes", "with_loc", "interpret"))
 def probe_lookup(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
                  h0: jax.Array, qkey: jax.Array, *, max_probes: int = 64,
-                 interpret: bool = True):
-    """Batched linear-probe lookup. Returns (found[Q], val[Q]).
+                 with_loc: bool = False, interpret: bool = True):
+    """Batched linear-probe lookup. Returns (found[Q], val[Q]), or
+    (found, val, loc[Q]) when ``with_loc`` — ``loc`` is the hit's
+    padded-table coordinate (unwrapped, >= h0; -1 on miss), the probe
+    telemetry input for the elastic policy's expensive-lookup counter.
 
     Args:
       tkey/tval/tstate: table arrays [C].
@@ -142,7 +145,7 @@ def probe_lookup(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
     tiles = qpad // QT
     slab_base = _tile_base(h0s, tiles, tk.shape[0])
 
-    found_s, val_s, _loc_s, complete_s = probe_lookup_tiles(
+    found_s, val_s, loc_s, complete_s = probe_lookup_tiles(
         tk, tv, ts, h0s, qks, slab_base, max_probes=max_probes,
         interpret=interpret)
 
@@ -150,6 +153,25 @@ def probe_lookup(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
     # the no-skew steady state skips the oracle pass entirely (h0s is already
     # in [0, C), so no re-mod either; the oracle wraps internally).
     need = ~complete_s
+
+    if with_loc:
+        def fallback(fvl):
+            f0, v0, l0 = fvl
+            fb_f, fb_v = ref.probe_lookup_ref(tkey, tval, tstate, h0s, qks,
+                                              max_probes)
+            # a query that escaped the resident window genuinely probed past
+            # it: report max cost so the policy sees it as expensive
+            fb_l = jnp.where(fb_f, h0s + (max_probes - 1), -1).astype(I32)
+            return (jnp.where(need, fb_f, f0), jnp.where(need, fb_v, v0),
+                    jnp.where(need, fb_l, l0))
+
+        found_s, val_s, loc_s = jax.lax.cond(need.any(), fallback,
+                                             lambda fvl: fvl,
+                                             (found_s, val_s, loc_s))
+        found = jnp.zeros((q,), jnp.bool_).at[order].set(found_s[:q])
+        val = jnp.zeros((q,), I32).at[order].set(val_s[:q])
+        loc = jnp.full((q,), -1, I32).at[order].set(loc_s[:q].astype(I32))
+        return found, val, loc
 
     def fallback(fv):
         f0, v0 = fv

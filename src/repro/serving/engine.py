@@ -28,7 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core import buckets, dhash
+from repro.core import dhash
+from repro.core import policy as elastic
 from repro.models import transformer
 from repro.models.attention import project_qkv
 from repro.models.layers import apply_rope, rms_norm, swiglu
@@ -128,12 +129,21 @@ class ServingEngine:
                                n_tenants=s.n_tenants, cap_factor=s.cap_factor)
         self._tenant_epochs0 = (np.asarray(
             jax.device_get(self.kv.table.epoch)) if s.n_tenants > 1 else None)
+        # armed hysteresis latches for the elastic rehash trigger
+        # (core.policy.rehash_wanted): a hot tenant rehashes once per load
+        # excursion instead of on every poll above the threshold
+        self._armed = True
+        self._tenant_armed = np.ones((s.n_tenants,), bool)
         if s.n_tenants > 1:
-            # one fused poll -> ONE host sync per decode step (loads +
-            # router-spill counters + rebuilding flags + epochs together)
+            # one fused poll -> ONE host sync per decode step (live/tomb
+            # loads + router-spill counters + rebuilding flags + epochs)
             self._tenant_poll = jax.jit(lambda kv: (
-                *kvcache.table_load(kv, with_spill=True),
+                *kvcache.table_health(kv), kv.route_spill,
                 kv.table.rebuilding, kv.table.epoch))
+        else:
+            self._single_poll = jax.jit(lambda kv: (
+                *kvcache.table_health(kv), kv.table.rebuilding,
+                dhash.rebuild_done(kv.table)))
         b = s.max_seqs
         self.seq_ids = np.zeros((b,), np.int32)
         self.lengths = np.zeros((b,), np.int32)
@@ -224,33 +234,47 @@ class ServingEngine:
 
     # -- live rehash ----------------------------------------------------------
     def _maybe_rehash(self):
+        """Elastic rehash trigger (``core.policy.rehash_wanted``): fire when
+        the live load crosses ``sc.rehash_load_factor`` OR tombstone churn
+        (freed sequences) crosses the reclaim threshold, latched by an
+        armed-hysteresis bit so a hot table rehashes once per excursion —
+        the manual always-refire load check this replaces restarted a
+        same-shape rehash on every poll while the load stayed high."""
         if self.sc.n_tenants > 1:
             return self._maybe_rehash_tenants()
-        t = self.kv.table
-        if bool(jax.device_get(t.rebuilding)):
-            if bool(jax.device_get(dhash.rebuild_done(t))):
-                self.kv = kvcache.replace(self.kv, table=dhash.rebuild_finish(t))
+        live, tomb, rebuilding, done = (
+            np.asarray(x)
+            for x in jax.device_get(self._single_poll(self.kv)))
+        if bool(rebuilding):
+            if bool(done):
+                self.kv = kvcache.replace(
+                    self.kv, table=dhash.rebuild_finish(self.kv.table))
                 self.rehashes += 1
             return
-        cap = buckets.capacity_of(t.old)
-        live = int(jax.device_get(buckets.count_live(t.old)))
-        if live / cap > self.sc.rehash_load_factor:
+        want, self._armed = elastic.rehash_wanted(
+            float(live), float(tomb), self._armed, False,
+            grow_load=self.sc.rehash_load_factor)
+        if want:
             self.kv = kvcache.replace(
-                self.kv, table=dhash.rebuild_start(t, seed=live + 1))
+                self.kv, table=dhash.rebuild_start(self.kv.table,
+                                                   seed=self.rehashes + 1))
 
     def _maybe_rehash_tenants(self):
-        """Per-tenant rehash triggers over the page-table stack: only the
-        tenants whose load degraded start an epoch; completed epochs swap
-        on-device inside ``kvcache.rehash_step``, so no host-side finish is
-        needed.  ``rehashes`` counts COMPLETIONS (epoch deltas across the
-        stack) — the same semantics as the single-tenant path.  The same
-        poll surfaces the router-spill counters (``router_spills``) so
-        skewed tenant traffic blowing the routing cap is observable
-        separately from table load."""
-        loads, spill, rebuilding, epochs = (
+        """Per-tenant elastic rehash over the page-table stack: each tenant
+        has its own armed latch, so only tenants whose load/tombstone churn
+        degraded start an epoch — and only once per excursion.  Completed
+        epochs swap on-device inside ``kvcache.rehash_step``; no host-side
+        finish is needed.  ``rehashes`` counts COMPLETIONS (epoch deltas
+        across the stack) — the same semantics as the single-tenant path.
+        The same poll surfaces the router-spill counters
+        (``router_spills``) so skewed tenant traffic blowing the routing
+        cap is observable separately from table load."""
+        loads, tombs, spill, rebuilding, epochs = (
             np.asarray(x) for x in jax.device_get(self._tenant_poll(self.kv)))
         self.router_spills = int(spill.sum())
         self.rehashes = int((epochs - self._tenant_epochs0).sum())
-        want = (loads > self.sc.rehash_load_factor) & ~rebuilding
+        want, self._tenant_armed = elastic.rehash_wanted(
+            loads, tombs, self._tenant_armed, rebuilding,
+            grow_load=self.sc.rehash_load_factor)
         if want.any():
             self.kv = kvcache.start_rehash(self.kv, jnp.asarray(want))

@@ -359,3 +359,22 @@ def table_load(kv: PagedKV, *, with_spill: bool = False):
         cap = buckets.capacity_of(peel.old)
         load = jax.vmap(lambda d: buckets.count_live(d.old))(kv.table) / cap
     return (load, kv.route_spill) if with_spill else load
+
+
+def table_health(kv: PagedKV):
+    """(live_load, tomb_load) per tenant table ([T] f32 pair; scalars for a
+    single table) — the elastic rehash trigger's inputs
+    (``core.policy.rehash_wanted``).  ``tomb_load`` is the tombstoned
+    fraction of the active table: page churn (sequences freed) leaves
+    tombstones that degrade probe lengths without raising the live load,
+    so the trigger needs both."""
+    from repro.core import backend as backends
+    be = backends.get(kv.table.backend)
+    if kv.n_tenants == 1:
+        cap = buckets.capacity_of(kv.table.old)
+        return (be.count_live(kv.table.old) / cap,
+                be.count_tomb(kv.table.old) / cap)
+    peel = jax.tree_util.tree_map(lambda x: x[0], kv.table)
+    cap = buckets.capacity_of(peel.old)
+    return (jax.vmap(lambda d: be.count_live(d.old))(kv.table) / cap,
+            jax.vmap(lambda d: be.count_tomb(d.old))(kv.table) / cap)

@@ -1,0 +1,393 @@
+"""ElasticPolicy test suite: the small_hash.c trigger set on DHash tables.
+
+Covers the four behaviours the policy layer promises (core/policy.py):
+
+* hysteresis — a table sitting exactly AT the high watermark never fires,
+  one past it fires exactly once, and the fired latch stays down while the
+  load holds (no flap at the boundary), across all three backends;
+* the expensive-lookup counter — host-precomputed colliding keys drive the
+  probe-length telemetry past ``enlarge_after / report_every`` and trigger
+  growth with the load far BELOW the watermark (fused on and off);
+* engine-level shrink — a drained ``DHashEngine`` resizes down and the
+  remaining keys survive the migration;
+* per-tenant independence — on an 8-table stack only the overloaded
+  tenants fire, their latches drop independently, and every tenant's keys
+  stay readable (all three backends, fused on and off).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backend as backends
+from repro.core import dhash, engine, hashing
+from repro.core import policy as elastic
+
+ALL_BACKENDS = backends.names()
+FUSED_AXIS = [(b, f) for b in ALL_BACKENDS
+              for f in ((False, True) if backends.get(b).fused else (False,))]
+
+
+def _live(d):
+    return int(jax.device_get(backends.get(d.backend).count_live(d.old)))
+
+
+def _fill_to(d, n, *, start=1):
+    """Insert sequential keys until the old table holds exactly ``n`` live
+    entries (retries around backend insert failure, e.g. a full twochoice
+    row pair).  Returns (state, inserted_keys)."""
+    inserted = []
+    nxt = start
+    for _ in range(50):
+        need = n - _live(d)
+        if need == 0:
+            break
+        ks = jnp.arange(nxt, nxt + need, dtype=jnp.int32)
+        nxt += need
+        d, ok = dhash.insert(d, ks, ks)
+        inserted.extend(np.asarray(ks)[np.asarray(ok)].tolist())
+    assert _live(d) == n, f"could not reach {n} live entries"
+    return d, inserted
+
+
+def _complete_rebuild(d, max_steps=200):
+    for _ in range(max_steps):
+        if not bool(jax.device_get(d.rebuilding)):
+            return d
+        d = dhash.rebuild_step(d)
+        d = dhash.finish_same_shape(d)
+    raise AssertionError("same-shape rebuild did not finish")
+
+
+# ---------------------------------------------------------------------------
+# hysteresis at the watermark boundary
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_no_flap_at_watermark_boundary(name):
+    """live == high: never fires.  live == high + 1: fires exactly once,
+    and the consumed latch keeps it down while the load holds — then
+    re-arms (without firing) once the load drains below high/headroom."""
+    d = dhash.make(name, capacity=64, chunk=32, seed=0, fused=False)
+    slots = backends.get(d.backend).capacity_of(d.old)
+    pol = elastic.make(in_place=True, tomb_load=1.0)   # isolate the watermark
+    high, low = elastic.watermarks(pol, slots)
+    assert 0 < low < high < slots
+
+    d, keys = _fill_to(d, high)
+    for _ in range(5):
+        pol, d = elastic.policy_step(pol, d)
+    assert int(pol.fires) == 0 and bool(pol.armed)
+
+    d, more = _fill_to(d, high + 1, start=1_000_000)
+    keys += more
+    pol, d = elastic.policy_step(pol, d)
+    assert int(pol.fires) == 1 and bool(jax.device_get(d.rebuilding))
+    d = _complete_rebuild(d)
+    for _ in range(10):
+        pol, d = elastic.policy_step(pol, d)
+    assert int(pol.fires) == 1, "latch flapped while the load held"
+    assert not bool(pol.armed)
+
+    # drain below the re-arm watermark: latch returns, still no fire
+    rearm_at = int(high / pol.expand_headroom)
+    drop = jnp.asarray(keys[:len(keys) - rearm_at], jnp.int32)
+    d, ok = dhash.delete(d, drop)
+    assert bool(ok.all()) and _live(d) == rearm_at
+    pol, d = elastic.policy_step(pol, d)
+    assert bool(pol.armed) and int(pol.fires) == 1
+
+    kept = jnp.asarray(keys[len(keys) - rearm_at:], jnp.int32)
+    found, vals = dhash.lookup(d, kept)
+    assert bool(found.all()) and bool((vals == kept).all())
+
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_latch_holds_across_epoch_under_sustained_load(name):
+    """policy_step interleaved with the rehash (the engine's step order):
+    mid-epoch extraction empties the OLD table, and that transient low
+    count must not re-arm the latch — a still-hot table fires ONCE per
+    excursion, not once per completed epoch."""
+    d = dhash.make(name, capacity=64, chunk=32, seed=0, fused=False)
+    slots = backends.get(d.backend).capacity_of(d.old)
+    pol = elastic.make(in_place=True, tomb_load=1.0)
+    high, _ = elastic.watermarks(pol, slots)
+
+    d, keys = _fill_to(d, high + 1)
+    epochs = 0
+    for _ in range(120):   # load never drains: epoch completes, no refire
+        d = dhash.rebuild_step(d)
+        d = dhash.finish_same_shape(d)
+        pol, d = elastic.policy_step(pol, d)
+    assert int(jax.device_get(d.epoch)) == 1, "first fire must complete"
+    assert int(pol.fires) == 1, "latch re-armed mid-epoch and refired"
+    assert not bool(pol.armed)
+    found, _ = dhash.lookup(d, jnp.asarray(keys, jnp.int32))
+    assert bool(found.all())
+
+
+def test_stack_engine_latch_holds_across_epoch():
+    """The same guarantee through DHashStackEngine: a tenant held past the
+    watermark rebuilds exactly once over a long idle drive."""
+    stk = dhash.make_stack(4, "linear", 64, chunk=32, fused=True)
+    seng = engine.DHashStackEngine(
+        stk, policy=elastic.make(grow_load=0.5, in_place=True, tomb_load=1.0))
+    T, Q = 4, 65   # linear cap 64 -> 128 slots, high = 64 at grow_load 0.5
+    kq = jnp.zeros((T, Q), jnp.uint32)
+    nomask = jnp.zeros((T, Q), bool)
+    ins = kq.at[2].set(jnp.arange(1, Q + 1, dtype=jnp.uint32))
+    seng.step(kq, ins, ins * 2, kq,
+              ins_mask=nomask.at[2].set(True), del_mask=nomask)
+    for _ in range(60):
+        seng.step(kq, kq, kq, kq, ins_mask=nomask, del_mask=nomask)
+    ep = np.asarray(jax.device_get(seng.state.epoch))
+    assert ep.tolist() == [0, 0, 1, 0], ep
+    found, vals = seng.lookup(ins)
+    fn = np.asarray(jax.device_get(found))
+    assert fn[2].all() and not fn[[0, 1, 3]].any()
+    assert (np.asarray(jax.device_get(vals))[2]
+            == np.arange(1, Q + 1) * 2).all()
+
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_resize_target_lands_inside_band(name):
+    """target = ceil(live * headroom) entries puts the post-resize load
+    strictly between the watermarks for every slot rounding ``be.make``
+    applies — grow/shrink cannot flap at a boundary by construction."""
+    be = backends.get(name)
+    pol = elastic.make()
+    for live in (64, 100, 200, 500, 1000, 5000, 20000):
+        target = int(np.clip(int(np.ceil(live * pol.expand_headroom)),
+                             pol.min_capacity, pol.max_capacity))
+        slots = elastic.resolve_slots(be, target)
+        high, low = elastic.watermarks(pol, slots)
+        assert low < live < high, (name, live, slots, low, high)
+
+
+def test_tombstone_pressure_fires_reclaim_inside_band():
+    """Resize mode: deletes leave the live load inside the band but the
+    tombstone fraction past ``tomb_load`` — fires a same-shape reclaim,
+    once, and stays quiet after the rebuild scrubs the tombs."""
+    d = dhash.make("linear", capacity=256, chunk=64, seed=1, fused=False)
+    d, keys = _fill_to(d, 300)
+    d, ok = dhash.delete(d, jnp.asarray(keys[:200], jnp.int32))
+    assert bool(ok.all())
+    pol = elastic.make()
+    pol, d = elastic.policy_step(pol, d)
+    assert int(pol.fires) == 1 and bool(jax.device_get(d.rebuilding))
+    assert not bool(pol.want_grow) and not bool(pol.want_shrink)
+    d = _complete_rebuild(d)
+    assert int(jax.device_get(backends.get(d.backend).count_tomb(d.old))) == 0
+    for _ in range(5):
+        pol, d = elastic.policy_step(pol, d)
+    assert int(pol.fires) == 1
+
+
+# ---------------------------------------------------------------------------
+# expensive-lookup trigger (probe-length telemetry)
+# ---------------------------------------------------------------------------
+
+def _colliding_keys(t, want):
+    """Host-precompute ``want`` keys that hash to one linear bucket — the
+    probe chain the load factor alone cannot see."""
+    cand = np.arange(1, 20_001, dtype=np.int32)
+    h0 = np.asarray(jax.device_get(
+        hashing.bucket_of(t.hfn, jnp.asarray(cand), t.capacity)))
+    vals, counts = np.unique(h0, return_counts=True)
+    assert counts.max() >= want, "universe too small for the collision set"
+    return cand[h0 == vals[np.argmax(counts)]][:want]
+
+
+@pytest.mark.parametrize("fused", (False, True))
+def test_expensive_lookups_grow_below_watermark(fused):
+    d = dhash.make("linear", capacity=256, chunk=64, seed=3, fused=fused)
+    pol = elastic.make(min_lookups=32)
+    slots = backends.get(d.backend).capacity_of(d.old)
+    high, _ = elastic.watermarks(pol, slots)
+
+    keys = _colliding_keys(d.old, 12)   # probe distances 0..11 at one bucket
+    d, ok = dhash.insert(d, jnp.asarray(keys), jnp.asarray(keys))
+    assert bool(ok.all()) and _live(d) == 12 < high
+
+    q = jnp.asarray(np.tile(keys, 3))   # 36 >= min_lookups samples
+    d, (found, vals) = dhash.lookup_counted(d, q, probe_hi=pol.probe_hi)
+    assert bool(found.all()) and bool((vals == q).all())
+    assert int(jax.device_get(d.lookups)) == 36
+    assert int(jax.device_get(d.expensive)) == 15   # distances 7..11, tiled
+
+    pol, d = elastic.policy_step(pol, d)
+    assert bool(pol.want_grow), "probe trigger must fire below the watermark"
+    assert not bool(pol.want_shrink)
+
+    # in-place flavour: same telemetry fires the on-device rehash and
+    # consumes the sample window
+    d2 = dhash.make("linear", capacity=256, chunk=64, seed=3, fused=fused)
+    d2, _ = dhash.insert(d2, jnp.asarray(keys), jnp.asarray(keys))
+    p2 = elastic.make(min_lookups=32, in_place=True)
+    d2, _ = dhash.lookup_counted(d2, q, probe_hi=p2.probe_hi)
+    p2, d2 = elastic.policy_step(p2, d2)
+    assert int(p2.fires) == 1 and bool(jax.device_get(d2.rebuilding))
+    assert int(jax.device_get(d2.lookups)) == 0
+
+    # control: the same population spread over distinct buckets stays quiet
+    d3 = dhash.make("linear", capacity=256, chunk=64, seed=3, fused=fused)
+    spread, picked = [], set()
+    for k in range(1, 20_001):
+        b = int(jax.device_get(hashing.bucket_of(
+            d3.old.hfn, jnp.asarray([k], jnp.int32), d3.old.capacity))[0])
+        if b not in picked:
+            picked.add(b)
+            spread.append(k)
+        if len(spread) == 12:
+            break
+    d3, _ = dhash.insert(d3, jnp.asarray(spread, jnp.int32),
+                         jnp.asarray(spread, jnp.int32))
+    p3 = elastic.make(min_lookups=32)
+    d3, _ = dhash.lookup_counted(d3, jnp.asarray(np.tile(spread, 3),
+                                                 jnp.int32),
+                                 probe_hi=p3.probe_hi)
+    assert int(jax.device_get(d3.expensive)) == 0
+    p3, d3 = elastic.policy_step(p3, d3)
+    assert not bool(p3.want_grow)
+
+
+# ---------------------------------------------------------------------------
+# engine-level shrink after a drain
+# ---------------------------------------------------------------------------
+
+def test_engine_shrinks_after_drain():
+    eng = engine.DHashEngine(
+        dhash.make("linear", capacity=256, chunk=64, seed=1, fused=False),
+        policy=elastic.make(tomb_load=1.0), poll_every=1)
+    be = backends.get(eng.state.backend)
+    slots0 = int(be.capacity_of(eng.state.old))
+
+    keys = np.arange(1, 301, dtype=np.int32)
+    none = np.zeros(64, np.int32)
+    nm = np.zeros(64, bool)
+    for i in range(0, 300, 64):
+        k = np.resize(keys[i:i + 64], 64)
+        eng.step(none, k, k, none, np.arange(64) < min(64, 300 - i), nm)
+    assert eng.stats.grows == 0          # 300 live sits below the watermark
+
+    for i in range(0, 280, 64):          # drain to 20 live (< low watermark)
+        k = np.resize(keys[i:i + 64], 64)
+        eng.step(none, none, none, k, nm, np.arange(64) < min(64, 280 - i))
+    for _ in range(120):                 # let the shrink start + migrate
+        eng.step(none, none, none, none, nm, nm)
+        if eng.stats.shrinks >= 1 and not bool(
+                jax.device_get(eng.state.rebuilding)):
+            break
+    assert eng.stats.shrinks == 1 and eng.stats.grows == 0
+    slots1 = int(be.capacity_of(eng.state.old))
+    assert slots1 < slots0
+
+    survivors = jnp.asarray(keys[280:], jnp.int32)
+    found, vals = eng.lookup(survivors)
+    assert bool(found.all()) and bool((vals == survivors).all())
+
+    resizes = eng.stats.grows + eng.stats.shrinks
+    for _ in range(20):                  # inside the new band: no flapping
+        eng.step(none, none, none, none, nm, nm)
+    assert eng.stats.grows + eng.stats.shrinks == resizes
+
+
+# ---------------------------------------------------------------------------
+# per-tenant independence on a stack
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,fused", FUSED_AXIS)
+def test_stack_tenants_fire_independently(name, fused):
+    """8 tenants, two loaded past the watermark: exactly those fire, each
+    under its own latch, and every tenant's keys survive its rehash."""
+    T, cap = 8, 64
+    d = dhash.make_stack(T, name, capacity=cap, chunk=32, seed=0, fused=fused)
+    be = backends.get(name)
+    slots = int(be.capacity_of(jax.tree_util.tree_map(lambda x: x[0], d).old))
+    # grow_load=0.5: past-the-watermark tenants must complete a SAME-SHAPE
+    # rehash, and near saturation a bounded-placement backend (twochoice)
+    # can legitimately park unplaceable keys in the hazard buffer instead
+    # of finishing (see docs/KERNELS.md) — the behaviour under test here is
+    # per-tenant independence, so keep the reload comfortably placeable
+    cfg = elastic.make(grow_load=0.5, in_place=True, tomb_load=1.0)
+    pol = elastic.stack(cfg, T)
+    high, low = elastic.watermarks(cfg, slots)
+
+    hot = np.array([False, True, False, False, False, True, False, False])
+    target = np.where(hot, high + 1, max(low + 2, 8))
+    held: list[list[int]] = [[] for _ in range(T)]
+    nxt = 1
+    for _ in range(12):   # top up with FRESH keys: an unplaceable key (full
+        live = np.asarray(jax.device_get(jax.vmap(be.count_live)(d.old)))
+        need = target - live                # twochoice row pair) never
+        if (need <= 0).all():               # lands however often retried
+            break
+        q = int(need.max())
+        keys = np.zeros((T, q), np.int32)
+        mask = np.zeros((T, q), bool)
+        for t in range(T):
+            if need[t] > 0:
+                keys[t, :need[t]] = np.arange(nxt, nxt + need[t]) + 100_000 * t
+                mask[t, :need[t]] = True
+        nxt += q
+        d, ok = dhash.stack_insert(d, jnp.asarray(keys), jnp.asarray(keys),
+                                   jnp.asarray(mask))
+        okn = np.asarray(jax.device_get(ok)) & mask
+        for t in range(T):
+            held[t].extend(keys[t][okn[t]].tolist())
+    live0 = np.asarray(jax.device_get(jax.vmap(be.count_live)(d.old)))
+    assert (live0 == target).all(), live0
+
+    pol, d = elastic.stack_policy_step(pol, d)
+    fires = np.asarray(jax.device_get(pol.fires))
+    assert (fires == hot.astype(np.int32)).all(), fires
+    assert (np.asarray(jax.device_get(d.rebuilding)) == hot).all()
+
+    for _ in range(50):                  # run the masked rehashes to done
+        if not bool(jax.device_get(d.rebuilding.any())):
+            break
+        d = dhash.stack_rebuild_step(d)
+        d = dhash.stack_finish_same_shape(d)
+    assert not bool(jax.device_get(d.rebuilding.any()))
+    epochs = np.asarray(jax.device_get(d.epoch))
+    assert (epochs == hot.astype(np.int32)).all(), epochs
+
+    # latches are independent: the fired tenants stay down (load unchanged),
+    # the light tenants stay armed, and nobody re-fires
+    pol, d = elastic.stack_policy_step(pol, d)
+    assert (np.asarray(jax.device_get(pol.fires))
+            == hot.astype(np.int32)).all()
+    armed = np.asarray(jax.device_get(pol.armed))
+    assert (armed == ~hot).all(), armed
+
+    qf = max(len(h) for h in held)
+    keys = np.zeros((T, qf), np.int32)
+    mask = np.zeros((T, qf), bool)
+    for t, h in enumerate(held):
+        keys[t, :len(h)] = h
+        mask[t, :len(h)] = True
+    found, vals = dhash.stack_lookup(d, jnp.asarray(keys), jnp.asarray(mask))
+    found = np.asarray(jax.device_get(found))
+    vals = np.asarray(jax.device_get(vals))
+    assert (found == mask).all()
+    assert (vals[mask] == keys[mask]).all()
+
+
+# ---------------------------------------------------------------------------
+# nres_cap adaptation
+# ---------------------------------------------------------------------------
+
+def test_adapt_nres_cap():
+    pol = elastic.make()
+    # same-size / small growth: the descriptor default already covers it
+    assert elastic.adapt_nres_cap(pol, 1024, 1024, base=16) == 16
+    assert elastic.adapt_nres_cap(pol, 1024, 4096, base=16) == 16
+    # past base: residency follows ceil(new/old) + 1 window-straddle slab
+    assert elastic.adapt_nres_cap(pol, 1024, 32 * 1024, base=16) == 33
+    assert elastic.adapt_nres_cap(pol, 1000, 32 * 1024, base=16) == 34
+    # bounded by the policy ceiling
+    assert elastic.adapt_nres_cap(pol, 64, 1 << 20, base=16) == pol.nres_cap_max
+    # shrink rebuilds concentrate: never below the descriptor default
+    assert elastic.adapt_nres_cap(pol, 4096, 512, base=16) == 16
