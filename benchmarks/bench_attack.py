@@ -11,6 +11,8 @@ after DHash's live rebuild (vs HT-Split which has no rebuild).
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
@@ -22,6 +24,12 @@ from repro.core import baselines as bl
 from repro.core import dhash, hashing
 
 I32 = jnp.int32
+_REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# the raw recovery factor is O(chain length) ~ 50-100x and jitters with it;
+# the paper's claim is 1.4-6.2x, so the GATED ratio saturates at this cap —
+# any healthy run pins it and only a recovery collapse moves the number
+RECOVER_CAP = 4.0
 
 
 def _tput(lookup_fn, keys, iters=5):
@@ -45,7 +53,8 @@ def _attack_keys_for(hfn, nbuckets, count, rng):
     return np.unique(np.asarray(got[:count], np.int32))
 
 
-def run(*, nbuckets=256, n_normal=4096, n_attack=2048, quiet=False):
+def run(*, nbuckets=256, n_normal=4096, n_attack=2048, quiet=False,
+        out_path=None):
     rng = np.random.default_rng(0)
     normal = rng.choice(UNIVERSE, n_normal, replace=False).astype(np.int32)
     rows = {}
@@ -103,6 +112,28 @@ def run(*, nbuckets=256, n_normal=4096, n_attack=2048, quiet=False):
     resize = jax.jit(bl.split_resize, static_argnums=1)
     s = resize(s, True)     # its only defence: double the buckets
     rows["split_after_resize"] = _tput(lambda k: slook(s, k), mixed_s)
+
+    # BENCH_attack.json: the before/under/after-rebuild recovery curve as
+    # GATED ratios.  recover_ratio (RATIO leaf, capped — see RECOVER_CAP)
+    # is the acceptance criterion: DHash's live rebuild must keep restoring
+    # throughput after the collision attack.  The HT-Split arm is recorded
+    # descriptively (its resize provably cannot recover — mod-2^i keys
+    # re-collide — so gating it would pin a number we claim is meaningless).
+    artifact = {
+        "band": 3.0,
+        "recover_ratio": min(
+            rows["dhash_after_rebuild"] / rows["dhash_under_attack"],
+            RECOVER_CAP),
+        "mid_rebuild_x": (rows["dhash_mid_rebuild"]
+                          / rows["dhash_under_attack"]),
+        "attack_degrade_x": rows["dhash_before"] / rows["dhash_under_attack"],
+        "split_stuck_x": (rows["split_after_resize"]
+                          / rows["split_under_attack"]),
+        "throughput_mlups": dict(rows),
+    }
+    out = (pathlib.Path(out_path) if out_path
+           else _REPO_ROOT / "BENCH_attack.json")
+    out.write_text(json.dumps(artifact, indent=2) + "\n")
 
     if not quiet:
         for k, v in rows.items():

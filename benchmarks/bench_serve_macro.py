@@ -1,0 +1,337 @@
+"""Serving macro-benchmark: live decode under attack and churn (§1, end-to-end).
+
+The micro-benches each prove one claim in isolation; this harness drives
+``serving/engine.py`` + ``prefix_cache.py`` + the kvcache tenant stacks as
+ONE system through a four-phase traffic replay:
+
+* **steady** — continuous batching with zipf prefix reuse (a family of
+  shared prompt prefixes, zipf-weighted) and zipf tenant skew.  Prefix
+  admission adopts cached blocks; published tails exceed the page pool, so
+  the LRU eviction policy (``serving/eviction.py`` — itself a DHash
+  client) is churning from the start.
+* **attack** — a collision attack on the FINGERPRINT index: junk
+  fingerprints that all hash into bucket 0 of the chain-backend prefix
+  table (``bench_attack._attack_keys_for`` — the attacker knows the
+  seed).  Admission lookups and publishes that touch the hot bucket pay
+  the long traversal, so tail latency (p99 = admission steps) degrades
+  while p50 (pure decode) stays flat — the paper's motivating scenario in
+  its serving role.
+* **rebuild** — the response fires WHILE decode streams: a fresh-seed
+  live rehash of the fingerprint index (``start_prefix_rehash``) plus
+  per-tenant ``start_rehash`` on the hot tenants' page tables.  Every
+  decode step advances both epochs (``kvcache.rehash_step``).
+* **recovered** — the new hash function has redistributed the attacker's
+  keys; tail latency and hit rate return to the steady band.
+
+Artifact: ``BENCH_serve_macro.json`` (CI perf gate, ``check_regression``):
+per-phase p50/p99 latency at both layers + miss rate + eviction/spill
+counters.  Gated keys: ``attack_p50_ratio``/``recovered_p50_ratio``
+(decode-flatness floors, RATIO, under a per-artifact ``ratio_band`` of
+0.35 — same-run medians common-mode out hardware speed but still swing
+run to run in interpret mode, measured 0.81–1.26 across idle-box runs,
+so the COMMITTED baseline carries the median ratio of several
+calibration runs rather than one sample; the failure this floors, a
+blocking rehash, moves them ~50x), per-phase
+``miss_rate`` and the replay-wide
+``alloc_fail_rate`` (RATE — bit-deterministic for the pinned seeds), and
+the per-step sort/pallas_call budgets (STRUCTURAL).  The p99 and cacheop
+figures (``recovered_p99_ratio``, ``attack_cacheop_x``,
+``recovered_cacheop_x``) are reported but NOT gated: a p99 of ~200
+samples swings ~2x run-to-run, which no fixed tolerance separates from
+regression.  The replay publishes more distinct blocks than ``n_pages``
+and asserts ``alloc_fail == 0``: eviction, not allocation failure,
+absorbs the pressure.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from functools import partial
+
+import numpy as np
+
+from benchmarks.common import count_primitives, zipf_owners
+
+_REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# chain-backend geometry of the fingerprint index: few buckets so the
+# attacked bucket is hit by a meaningful share of admission batches, and a
+# max_chain that admits the whole junk flood (the attack must LAND to hurt)
+NBUCKETS = 16
+N_ATTACK = 2048
+MAX_CHAIN = N_ATTACK + 128
+
+
+def _build(seed=0):
+    import jax
+
+    from repro.configs.base import ArchConfig
+    from repro.models import transformer
+    from repro.serving.engine import ServeConfig, ServingEngine
+
+    cfg = ArchConfig("bench-serve-macro", "dense", n_layers=2, d_model=32,
+                     n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=128,
+                     dtype="float32", attn_chunk=32, loss_chunk=32)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(seed))
+    sc = ServeConfig(max_seqs=4, page_size=4, n_pages=48, max_blocks=8,
+                     max_new_tokens=4, n_tenants=4, prefix_cache=True,
+                     prefix_backend="chain", prefix_capacity=4096,
+                     evict_batch=8,
+                     prefix_kw=(("nbuckets", NBUCKETS),
+                                ("max_chain", MAX_CHAIN)))
+    return ServingEngine(params, cfg, sc), cfg, sc
+
+
+def _make_requests(rng, n, families, sc):
+    """Zipf family reuse x zipf tenant skew; every prompt = shared family
+    prefix (4 blocks) + unique tail (1-2 blocks) + 1 trigger token."""
+    fam_idx = zipf_owners(rng, n, len(families), a=1.2)
+    tenants = zipf_owners(rng, n, sc.n_tenants, a=1.2)
+    reqs = []
+    for f, t in zip(fam_idx, tenants):
+        tail = rng.integers(1, 127, size=int(rng.integers(1, 3)) * sc.page_size)
+        reqs.append((list(families[f]) + tail.tolist() + [1], int(t)))
+    return reqs
+
+
+class _Probe:
+    """Timing instrumentation at the two layers that matter:
+
+    * ``decode``: every ``_run_slots`` call — one model step for all slots
+      (prefill micro-steps included).  This is the flatness claim: its p50
+      AND p99 must not move through attack or rebuild, because decode never
+      touches the fingerprint index.
+    * ``cacheop``: every jitted adopt/publish call — the admission ops that
+      walk the (attacked) chain buckets.  This is where the collision
+      attack lands and where the live rehash must restore the tail.
+    """
+
+    def __init__(self, eng):
+        import jax
+
+        self.decode: list[float] = []
+        self.cacheop: list[float] = []
+        orig_run = eng._run_slots
+        orig_adopt, orig_pub = eng._adopt, eng._publish
+
+        def run_slots(sample=True):
+            t0 = time.perf_counter()
+            r = orig_run(sample=sample)
+            jax.block_until_ready(eng.kv.free_top)
+            self.decode.append(time.perf_counter() - t0)
+            return r
+
+        def timed(fn, sink):
+            def go(*a):
+                t0 = time.perf_counter()
+                r = fn(*a)
+                jax.block_until_ready(r)
+                sink.append(time.perf_counter() - t0)
+                return r
+            return go
+
+        eng._run_slots = run_slots
+        eng._adopt = timed(orig_adopt, self.cacheop)
+        eng._publish = timed(orig_pub, self.cacheop)
+
+    def take(self):
+        # the timed closures hold references to these exact lists, so clear
+        # in place rather than rebinding
+        d, c = np.asarray(self.decode), np.asarray(self.cacheop)
+        del self.decode[:], self.cacheop[:]
+        return d, c
+
+
+def _drain(eng):
+    while eng.queue or eng.active.any():
+        eng.step()
+
+
+def _phase(eng, probe, reqs, counters0):
+    """Submit + drain one phase; returns (stats, counters_after)."""
+    for prompt, tenant in reqs:
+        eng.submit(prompt, tenant=tenant)
+    _drain(eng)
+    c1 = _counters(eng)
+    lk = c1["lookups"] - counters0["lookups"]
+    hits = c1["hits"] - counters0["hits"]
+    dec, cop = probe.take()
+    stats = {
+        "decode_steps": int(dec.size),
+        "p50_ms": float(np.percentile(dec, 50) * 1e3),
+        "p99_ms": float(np.percentile(dec, 99) * 1e3),
+        "cacheop_p50_ms": float(np.percentile(cop, 50) * 1e3),
+        "cacheop_p99_ms": float(np.percentile(cop, 99) * 1e3),
+        "miss_rate": float((lk - hits) / max(lk, 1)),
+        "blocks_probed": int(lk),
+        "evictions": c1["evictions"] - counters0["evictions"],
+        "route_spill": c1["route_spill"] - counters0["route_spill"],
+        "alloc_fail": c1["alloc_fail"] - counters0["alloc_fail"],
+    }
+    return stats, c1
+
+
+def _counters(eng):
+    return {"lookups": eng.cache_lookups, "hits": eng.cache_hits,
+            "publishes": eng.publishes, "evictions": eng.evictions,
+            "route_spill": eng.router_spills, "alloc_fail": eng.alloc_fails}
+
+
+def _budgets(eng, cfg, sc):
+    """Per-step structural op budget from jaxpr inspection (deterministic,
+    machine-independent): the jitted decode step (alloc + evict-on-pressure
+    + L layers of paged attention) and the admission pair (adopt+publish)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.serving import kvcache
+    from repro.serving.engine import paged_decode_step
+
+    b = sc.max_seqs
+    sids = jnp.arange(b, dtype=jnp.int32)
+    toks = jnp.zeros((b,), jnp.int32)
+    lens = jnp.zeros((b,), jnp.int32)
+    act = jnp.ones((b,), bool)
+    step_j = jax.make_jaxpr(partial(paged_decode_step, cfg=cfg,
+                                    n_blocks=sc.max_blocks))(
+        eng.params, kv=eng.kv, seq_ids=sids, tokens=toks, lengths=lens,
+        active=act)
+    fps = jnp.zeros((sc.max_blocks,), jnp.int32)
+    valid = jnp.zeros((sc.max_blocks,), bool)
+    sid = jnp.asarray(1, jnp.int32)
+    adopt_j = jax.make_jaxpr(kvcache.adopt_prefix)(eng.kv, sid, fps, valid)
+    pub_j = jax.make_jaxpr(kvcache.publish_blocks)(eng.kv, sid, fps, valid)
+    names = ("sort", "pallas_call")
+    adm = count_primitives(adopt_j, names)
+    for k, v in count_primitives(pub_j, names).items():
+        adm[k] += v
+    return {"step_budget": count_primitives(step_j, names),
+            "admission_budget": adm}
+
+
+def run(*, n_per_phase=16, n_families=12, quiet=False, out_path=None):
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.bench_attack import _attack_keys_for
+    from repro.core import dhash
+    from repro.core.struct_utils import replace
+    from repro.serving import kvcache
+
+    rng = np.random.default_rng(0)
+    eng, cfg, sc = _build()
+    families = [rng.integers(1, 127, size=4 * sc.page_size).tolist()
+                for _ in range(n_families)]
+
+    t_start = time.perf_counter()
+    probe = _Probe(eng)
+    # warmup: compile every path (decode, adopt, publish, evict, rehash)
+    for prompt, tenant in _make_requests(rng, 4, families, sc):
+        eng.submit(prompt, tenant=tenant)
+    _drain(eng)
+    probe.take()
+
+    result = {"band": 3.0, "ratio_band": 0.35}
+    phases = {}
+    c = _counters(eng)
+
+    phases["steady"], c = _phase(
+        eng, probe, _make_requests(rng, n_per_phase, families, sc), c)
+
+    # collision attack on the fingerprint index: junk fingerprints that all
+    # hash into bucket 0 of the CURRENT seed (attacker knows it); they carry
+    # a sentinel page and are never adopted — their damage is the bucket-0
+    # chain every admission lookup/publish must traverse
+    ps = eng.kv.prefix
+    atk = _attack_keys_for(ps.table.old.hfn, NBUCKETS, N_ATTACK, rng)
+    table = ps.table
+    ins = jax.jit(dhash.insert)
+    for i in range(0, len(atk), 256):
+        chunk = jnp.asarray(atk[i:i + 256], jnp.int32)
+        table, _ = ins(table, chunk,
+                       jnp.full(chunk.shape, 0x40000000, jnp.int32))
+    eng.kv = replace(eng.kv, prefix=replace(ps, table=table))
+
+    phases["attack"], c = _phase(
+        eng, probe, _make_requests(rng, n_per_phase, families, sc), c)
+
+    # response, live: fresh-seed rehash of the fingerprint index + page-table
+    # rehash on the hot tenants — decode streams while both epochs advance
+    eng.prefix_rehash(seed=20260809)
+    eng.kv = kvcache.start_rehash(
+        eng.kv, jnp.ones((sc.n_tenants,), bool))
+    phases["rebuild"], c = _phase(
+        eng, probe, _make_requests(rng, n_per_phase, families, sc), c)
+
+    # force both rebuilds to quiescence before measuring the recovered band
+    rehash = jax.jit(kvcache.rehash_step)
+    for _ in range(2 * (4096 // eng.kv.prefix.table.chunk + sc.n_pages)):
+        if not bool(jax.device_get(eng.kv.prefix.table.rebuilding)):
+            break
+        eng.kv = rehash(eng.kv)
+
+    phases["recovered"], c = _phase(
+        eng, probe, _make_requests(rng, n_per_phase, families, sc), c)
+
+    wall = time.perf_counter() - t_start
+    steady, attack, rec = (phases["steady"], phases["attack"],
+                           phases["recovered"])
+    result.update({
+        "phases": phases,
+        # decode-flatness floors (RATIO, higher is better): the model step
+        # never touches the fingerprint index, so its p50 must not degrade
+        # under attack or after recovery
+        "attack_p50_ratio": steady["p50_ms"] / attack["p50_ms"],
+        "recovered_p50_ratio": steady["p50_ms"] / rec["p50_ms"],
+        # tail recovery (reported, NOT gated — extreme-quantile jitter):
+        # the recovered decode p99 relative to the steady band
+        "recovered_p99_ratio": steady["p99_ms"] / rec["p99_ms"],
+        # descriptive (ungated): how hard the attack hit the cache-op tail
+        # and how far the live rehash brought it back — the serving analogue
+        # of bench_attack's before/under/after curve
+        "attack_cacheop_x": attack["cacheop_p99_ms"] / steady["cacheop_p99_ms"],
+        "recovered_cacheop_x": rec["cacheop_p99_ms"] / steady["cacheop_p99_ms"],
+        "prefix_epochs": eng.prefix_epoch,
+        "page_table_rehashes": eng.rehashes,
+        "published_blocks": eng.publishes,
+        "pool_exceeded": bool(eng.publishes > sc.n_pages),
+        "alloc_fail_rate": eng.alloc_fails / max(
+            sum(p["decode_steps"] for p in phases.values()), 1),
+        "wall_us": wall * 1e6,
+    })
+    result.update(_budgets(eng, cfg, sc))
+
+    # acceptance self-checks (the bench is the test for its own claims)
+    assert result["pool_exceeded"], (
+        "replay too short: published blocks must exceed n_pages so the "
+        "eviction policy is actually exercised")
+    assert eng.alloc_fails == 0, (
+        f"{eng.alloc_fails} page allocations failed — eviction did not "
+        f"keep up with pool pressure")
+    assert eng.prefix_epoch >= 1, "fingerprint-index rehash never completed"
+    assert (eng.kv.prefix.refcnt >= 0).all(), "refcount went negative"
+
+    out = (pathlib.Path(out_path) if out_path
+           else _REPO_ROOT / "BENCH_serve_macro.json")
+    out.write_text(json.dumps(result, indent=2) + "\n")
+
+    if not quiet:
+        for name, p in phases.items():
+            print(f"{name:10s} decode p50 {p['p50_ms']:6.1f}ms p99 "
+                  f"{p['p99_ms']:6.1f}ms | cacheop p50 "
+                  f"{p['cacheop_p50_ms']:7.1f}ms p99 "
+                  f"{p['cacheop_p99_ms']:7.1f}ms | miss {p['miss_rate']:.3f} "
+                  f"evict {p['evictions']:3d}")
+        victims = sum(p["evictions"] for p in phases.values())
+        print(f"[summary] attack hits the cache-op tail "
+              f"{result['attack_cacheop_x']:.1f}x; live rehash brings it to "
+              f"{result['recovered_cacheop_x']:.1f}x of steady while decode "
+              f"p50 stays {result['recovered_p50_ratio']:.2f}x; "
+              f"{eng.publishes} blocks published into {sc.n_pages} pages "
+              f"({victims} victims), 0 alloc failures; wall {wall:.0f}s")
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -87,6 +87,19 @@ def kvcache_rehash():
          f"p50_over_{r['rehash_steps']}steps")
 
 
+def serve_macro():
+    from benchmarks.bench_serve_macro import run
+    r = run(quiet=True)
+    for ph, p in r["phases"].items():
+        _row(f"serve_macro/{ph}/p50", p["p50_ms"] * 1e3,
+             f"p99_{p['p99_ms']:.1f}ms_miss{p['miss_rate']:.3f}_"
+             f"evict{p['evictions']}")
+    _row("serve_macro/attack_cacheop", 0.0,
+         f"{r['attack_cacheop_x']:.1f}x_of_steady")
+    _row("serve_macro/recovered_p99_ratio", 0.0,
+         f"{r['recovered_p99_ratio']:.2f}")
+
+
 def fused_probe():
     from benchmarks.bench_rebuild import run_fused_probe
     r = run_fused_probe(batch=4096, n_items=3_000, quiet=True)
@@ -146,15 +159,17 @@ def routed_stack():
 
 
 TABLES = [fig2_throughput, fig3_rebuild, fig4_portability, s62_oversubscribe,
-          elastic, s1_attack, moe_router, kvcache_rehash, fused_probe,
-          fused_writes, chain_fused, growth_escape, table_stack, routed_stack]
+          elastic, s1_attack, moe_router, kvcache_rehash, serve_macro,
+          fused_probe, fused_writes, chain_fused, growth_escape, table_stack,
+          routed_stack]
 
 
 def quick() -> None:
     """CI smoke mode: exercises the perf harness end-to-end in minutes —
     the fused-probe, fused-writes, chain-fused, growth-escape, table-stack,
-    routed-stack, and elastic-burst acceptance checks (pass counts + escape
-    rates + resize/flap counts + their BENCH_*.json artifacts) plus a tiny
+    routed-stack, elastic-burst, collision-attack, and serving-macro
+    acceptance checks (pass counts + escape rates + resize/flap counts +
+    recovery/latency ratios + their BENCH_*.json artifacts) plus a tiny
     fig3 rebuild sweep and a shrunk §6.2 oversubscription sweep so perf
     code can't silently rot."""
     print("name,us_per_call,derived")
@@ -166,6 +181,8 @@ def quick() -> None:
     table_stack()
     routed_stack()
     elastic()
+    s1_attack()                 # writes BENCH_attack.json (recover_ratio)
+    serve_macro()               # writes BENCH_serve_macro.json
     from benchmarks.bench_oversubscribe import run as oversub_run
     for name, q, mops in oversub_run(alpha=20, qs=(512, 2048), quiet=True):
         _row(f"s62/{name}/q{q}", 1.0 / mops, f"{mops:.3f}Mops_s")

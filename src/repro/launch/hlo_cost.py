@@ -212,6 +212,40 @@ def _dot_flops(ins: Instr, shapes: dict[str, str]) -> float:
     return 2.0 * n * contract
 
 
+# matmuls that XLA lowered to library calls instead of a `dot` op: oneDNN /
+# Eigen on CPU (the legacy non-thunk runtime does this for every big GEMM),
+# cuBLAS on GPU.  Substring match against custom_call_target.
+_MATMUL_CC = ("__onednn$matmul", "EigenMatMul", "__cublas$gemm",
+              "cublas$lt$matmul")
+_CC_TARGET_RE = re.compile(r'custom_call_target="([^"]+)"')
+
+
+def _matmul_cc_flops(ins: Instr, shapes: dict[str, str]) -> float:
+    """2 x prod(result dims) x contraction size for a GEMM custom-call.
+
+    The call carries no contracting-dims attribute, so recover k from the
+    operand: lhs holds batch x m x k elements and the result batch x m x n,
+    hence k = numel(lhs) / prod(result dims without the last).  This is
+    invariant to transpose flags (numel is) and to batching (lhs and result
+    share the leading dims).  Result may be a (buffer, scratch) tuple —
+    _shape_dims reads the first shape token, which is the real output.
+    """
+    res = _shape_dims(ins.result_shape)
+    ops = _operand_shapes(ins, shapes)
+    if len(res) < 2 or len(ops) < 2 or not ops[0]:
+        return 0.0
+    lhs_n = 1
+    for d in _shape_dims(ops[0]):
+        lhs_n *= d
+    rows = 1
+    for d in res[:-1]:
+        rows *= d
+    n = 1
+    for d in res:
+        n *= d
+    return 2.0 * n * max(lhs_n // max(rows, 1), 1)
+
+
 def _conv_flops(ins: Instr, shapes: dict[str, str]) -> float:
     res = _shape_dims(ins.result_shape)
     ops = _operand_shapes(ins, shapes)
@@ -291,6 +325,10 @@ def analyze(text: str, entry: str | None = None) -> Cost:
                 total.flops += _dot_flops(ins, shapes)
             elif ins.opcode == "convolution":
                 total.flops += _conv_flops(ins, shapes)
+            elif ins.opcode == "custom-call":
+                mt = _CC_TARGET_RE.search(ins.raw)
+                if mt and any(s in mt.group(1) for s in _MATMUL_CC):
+                    total.flops += _matmul_cc_flops(ins, shapes)
             for op in _COLL_OPS:
                 if ins.opcode in (op, op + "-start"):
                     total.coll[op] += _shape_bytes(ins.result_shape)

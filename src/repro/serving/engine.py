@@ -33,7 +33,7 @@ from repro.core import policy as elastic
 from repro.models import transformer
 from repro.models.attention import project_qkv
 from repro.models.layers import apply_rope, rms_norm, swiglu
-from repro.serving import kvcache
+from repro.serving import kvcache, prefix_cache
 from repro.serving.kvcache import PagedKV
 
 F32 = jnp.float32
@@ -55,6 +55,18 @@ class ServeConfig:
                                   # [T, ceil(c*N/T)] (<= 0: full width);
                                   # overflow under skew is exact — a
                                   # cond-gated full-width retry serves it
+    prefix_cache: bool = False    # block-prefix reuse + LRU page eviction
+                                  # (serving/eviction.py); opt-in — off,
+                                  # admission always prefills from scratch
+                                  # and frees reclaim every page
+    prefix_backend: str = "linear"  # fingerprint-index backend (the macro
+                                  # bench runs "chain" — bench_attack's
+                                  # collision surface)
+    prefix_capacity: int = 0      # fingerprint-index capacity (0: 4*n_pages)
+    evict_batch: int = 8          # max victims per evict-on-pressure pass
+    prefix_kw: tuple = ()         # extra backend kwargs as (key, value)
+                                  # pairs (frozen-hashable), e.g.
+                                  # (("nbuckets", 64),) for chain
 
 
 def paged_decode_step(params: dict, cfg: ArchConfig, kv: PagedKV,
@@ -119,6 +131,9 @@ class ServingEngine:
     finished: dict = field(default_factory=dict)  # seq_id -> list[int]
     rehashes: int = 0
     router_spills: int = 0        # cumulative tenant-router overflow keys
+    cache_lookups: int = 0        # prefix-cache: blocks probed at admission
+    cache_hits: int = 0           # prefix-cache: blocks adopted
+    publishes: int = 0            # prefix-cache: blocks published
     _next_id: int = 1
 
     def __post_init__(self):
@@ -126,7 +141,12 @@ class ServingEngine:
         self.kv = kvcache.make(c.n_layers, s.page_size, s.n_pages,
                                c.n_kv_heads, c.head_dim,
                                max_blocks=s.max_blocks, dtype=jnp.dtype(c.dtype),
-                               n_tenants=s.n_tenants, cap_factor=s.cap_factor)
+                               n_tenants=s.n_tenants, cap_factor=s.cap_factor,
+                               prefix_cache=s.prefix_cache,
+                               prefix_backend=s.prefix_backend,
+                               prefix_capacity=s.prefix_capacity or None,
+                               evict_batch=s.evict_batch,
+                               prefix_kw=dict(s.prefix_kw))
         self._tenant_epochs0 = (np.asarray(
             jax.device_get(self.kv.table.epoch)) if s.n_tenants > 1 else None)
         # armed hysteresis latches for the elastic rehash trigger
@@ -155,11 +175,23 @@ class ServingEngine:
                                      n_blocks=s.max_blocks))
         self._rehash = jax.jit(kvcache.rehash_step)
         self._free = jax.jit(kvcache.free_sequences, static_argnums=2)
+        if s.prefix_cache:
+            self._adopt = jax.jit(kvcache.adopt_prefix)
+            self._publish = jax.jit(kvcache.publish_blocks)
+            # fixed [max_blocks*ps] token pad -> [max_blocks] fingerprints:
+            # one compile regardless of prompt length
+            self._fps = jax.jit(lambda toks: prefix_cache.prefix_fingerprints(
+                toks[None, :], s.page_size)[0])
 
     # -- request lifecycle ---------------------------------------------------
-    def submit(self, prompt: list[int]) -> int:
+    def submit(self, prompt: list[int], tenant: int | None = None) -> int:
+        """Queue a prompt; optional ``tenant`` pins the request to a tenant
+        by advancing the id to the right residue class (ids stay unique and
+        increasing — the partition is still ``seq_id % n_tenants``)."""
         sid = self._next_id
-        self._next_id += 1
+        if tenant is not None and self.sc.n_tenants > 1:
+            sid += (tenant - sid) % self.sc.n_tenants
+        self._next_id = sid + 1
         self.queue.append((sid, np.asarray(prompt, np.int32)))
         return sid
 
@@ -174,17 +206,43 @@ class ServingEngine:
         """Prefill token-by-token through the paged step (simple, exact).
         Only THIS slot is active during its prefill — other in-flight
         sequences must not advance (their KV writes are masked and their
-        lengths untouched)."""
+        lengths untouched).
+
+        With the prefix cache enabled, admission first adopts the longest
+        cached block-prefix (pages mapped + pinned, prefill skips those
+        tokens — the cache hit is paid back as admission latency), and the
+        freshly prefilled full blocks are published at the end.  Only
+        blocks covered by ``prompt[:-1]`` take part: the last prompt token
+        always runs through the decode step, so a published block is
+        always fully written."""
         self.seq_ids[slot] = sid
-        self.lengths[slot] = 0
         self.new_count[slot] = 0
         self.outputs[sid] = []
+        start, fps, valid = 0, None, None
+        if self.kv.prefix is not None:
+            ps = self.sc.page_size
+            n_pub = (len(prompt) - 1) // ps
+            pad = np.zeros((self.sc.max_blocks * ps,), np.int32)
+            pad[:len(prompt)] = prompt
+            fps = self._fps(jnp.asarray(pad))
+            valid = jnp.arange(self.sc.max_blocks) < n_pub
+            self.kv, n_adopt, _ = self._adopt(
+                self.kv, jnp.asarray(sid, np.int32), fps, valid)
+            n_adopt = int(jax.device_get(n_adopt))
+            self.cache_lookups += n_pub
+            self.cache_hits += n_adopt
+            start = n_adopt * ps
+        self.lengths[slot] = start
         saved = self.active.copy()
         self.active[:] = False
         self.active[slot] = True
-        for t in prompt[:-1]:
+        for t in prompt[start:-1]:
             self.cur_tok[slot] = t
             self._run_slots(sample=False)
+        if self.kv.prefix is not None:
+            self.kv, n_ok = self._publish(
+                self.kv, jnp.asarray(sid, np.int32), fps, valid)
+            self.publishes += int(jax.device_get(n_ok))
         self.active = saved
         self.active[slot] = True
         self.cur_tok[slot] = prompt[-1]
@@ -278,3 +336,26 @@ class ServingEngine:
             grow_load=self.sc.rehash_load_factor)
         if want.any():
             self.kv = kvcache.start_rehash(self.kv, jnp.asarray(want))
+
+    # -- prefix cache ---------------------------------------------------------
+    def prefix_rehash(self, seed: int | None = None):
+        """Start a live re-seed rehash of the fingerprint index (collision
+        attack response); decode steps drive it via ``kvcache.rehash_step``
+        and the epoch swaps on-device when done."""
+        self.kv = kvcache.start_prefix_rehash(self.kv, seed=seed)
+
+    @property
+    def prefix_epoch(self) -> int:
+        """Completed fingerprint-index rehash epochs."""
+        return int(jax.device_get(self.kv.prefix.table.epoch))
+
+    @property
+    def evictions(self) -> int:
+        """Cumulative prefix-cache pages evicted under pool pressure."""
+        return int(jax.device_get(self.kv.prefix.evictions))
+
+    @property
+    def alloc_fails(self) -> int:
+        """Masked page allocations that found no free page (must stay 0
+        while eviction keeps up with demand)."""
+        return int(jax.device_get(self.kv.alloc_fail))

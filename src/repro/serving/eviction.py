@@ -1,0 +1,176 @@
+"""Clock/LRU eviction for the prefix cache — itself a DHash client.
+
+``prefix_cache.publish_prefix`` only inserts, so any replay longer than the
+page pool saturates it.  This module adds the missing production piece: a
+batched LRU policy over *pages* whose bookkeeping lives in DHash tables, so
+eviction keeps working (and keeps its latency profile) while either index
+is being rehashed live.
+
+State (``PrefixState``):
+
+* ``table`` — the forward prefix index, ``fingerprint -> page`` (what
+  ``prefix_cache.match_prefix`` queries).  Backend-parameterised: the
+  macro-bench runs it on ``chain`` to mirror ``bench_attack``'s
+  collision-attack surface.
+* ``rev`` — the REVERSE index, ``page_key(page) = page + 1 -> fingerprint``
+  (a linear DHash).  Eviction picks victim *pages*; the reverse index is
+  how a victim page finds the fingerprint it must delete from ``table``
+  (via the existing fused delete path) without scanning the table.
+* ``refcnt`` — pin counts per page.  Pages adopted by live sequences are
+  acquired; ``refcnt > 0`` pages are NEVER victims, so decode can keep
+  reading a shared page while the policy churns around it.
+* ``cached``/``stamp``/``clock`` — clock-LRU bookkeeping: every publish or
+  touch stamps the page with the current clock tick; victims are the
+  coldest stamps among ``cached & refcnt == 0``.
+
+Invariant (checked by the differential suite): every ``cached`` page has
+exactly one forward entry and one reverse entry — ``publish`` rolls back
+the forward insert if the reverse insert fails, and ``evict`` deletes both
+or neither.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import dhash
+from repro.core.struct_utils import pytree_dataclass, replace
+
+I32 = jnp.int32
+STAMP_MAX = jnp.iinfo(jnp.int32).max
+
+
+def page_key(pages: jax.Array) -> jax.Array:
+    """Reverse-index key of a page id (shifted so page 0 and the invalid
+    marker -1 stay distinct key values)."""
+    return pages.astype(I32) + 1
+
+
+@pytree_dataclass(meta_fields=("n_pages",))
+class PrefixState:
+    n_pages: int
+    table: dhash.DHashState      # fingerprint -> page (forward prefix index)
+    rev: dhash.DHashState        # page_key(page) -> fingerprint
+    refcnt: jax.Array            # [n_pages] i32 pin counts
+    cached: jax.Array            # [n_pages] bool: page holds a published block
+    stamp: jax.Array             # [n_pages] i32 last-touch clock tick
+    clock: jax.Array             # scalar i32
+    evictions: jax.Array         # scalar i32 cumulative victim count
+
+
+def make(n_pages: int, *, backend: str = "linear", capacity: int | None = None,
+         chunk: int = 256, seed: int = 11, fused: bool | None = None,
+         **backend_kw) -> PrefixState:
+    """Build the eviction state.  ``capacity`` sizes the forward index
+    (default ``4 * n_pages`` — room for tombstone churn); the reverse index
+    is always linear at ``2 * n_pages`` (one entry per cached page)."""
+    if capacity is None:
+        capacity = 4 * n_pages
+    table = dhash.make(backend, capacity=capacity, chunk=chunk, seed=seed,
+                       fused=fused, **backend_kw)
+    rev = dhash.make("linear", capacity=2 * n_pages, chunk=chunk,
+                     seed=seed + 7)
+    return PrefixState(
+        n_pages=n_pages, table=table, rev=rev,
+        refcnt=jnp.zeros((n_pages,), I32),
+        cached=jnp.zeros((n_pages,), bool),
+        stamp=jnp.zeros((n_pages,), I32),
+        clock=jnp.asarray(1, I32),
+        evictions=jnp.asarray(0, I32))
+
+
+def _scatter_hit(ps: PrefixState, pages: jax.Array, mask: jax.Array):
+    """[n_pages] bool: pages named by the masked batch (dup-safe)."""
+    tgt = jnp.clip(pages, 0, ps.n_pages - 1)
+    return jnp.zeros((ps.n_pages,), I32).at[tgt].add(mask.astype(I32)) > 0
+
+
+def publish(ps: PrefixState, fps: jax.Array, pages: jax.Array,
+            mask: jax.Array):
+    """Publish ``fingerprint -> page`` mappings and mark the pages cached.
+
+    Set semantics: a fingerprint that is already published keeps its
+    EXISTING page — the duplicate's page is not marked cached (the caller's
+    page simply stays un-shared).  ``dhash.insert`` only enforces this
+    within the TARGET table (Alg. 6), so mid-rebuild it would happily
+    duplicate a fingerprint whose entry has not migrated out of the old
+    table yet — and evicting either copy's page would then corrupt the
+    other's mapping.  The epoch-consistent pre-lookup (old -> hazard -> new)
+    screens those out.  Returns ``(ps', ok)`` where ``ok`` marks mappings
+    that landed in BOTH indexes.
+    """
+    already, _ = dhash.lookup(ps.table, fps)
+    table, ok = dhash.insert(ps.table, fps, pages, mask & ~already)
+    rev, okr = dhash.insert(ps.rev, page_key(pages), fps, ok)
+    # keep the invariant "cached => discoverable from both sides": a forward
+    # entry whose reverse insert failed is rolled back (cond-gated — the
+    # healthy path never pays the extra delete)
+    bad = ok & ~okr
+    table = lax.cond(bad.any(),
+                     lambda t: dhash.delete(t, fps, bad)[0],
+                     lambda t: t, table)
+    ok = ok & okr
+    hit = _scatter_hit(ps, pages, ok)
+    return replace(ps, table=table, rev=rev,
+                   cached=ps.cached | hit,
+                   stamp=jnp.where(hit, ps.clock, ps.stamp),
+                   clock=ps.clock + 1), ok
+
+
+def touch(ps: PrefixState, pages: jax.Array, mask: jax.Array) -> PrefixState:
+    """Stamp pages with the current clock tick (a cache hit re-warms its
+    pages so the LRU scan skips them)."""
+    hit = _scatter_hit(ps, pages, mask)
+    return replace(ps, stamp=jnp.where(hit, ps.clock, ps.stamp),
+                   clock=ps.clock + 1)
+
+
+def acquire(ps: PrefixState, pages: jax.Array, mask: jax.Array) -> PrefixState:
+    """Pin pages (+1 refcnt each masked reference; duplicates accumulate).
+    A pinned page is never an eviction victim."""
+    tgt = jnp.clip(pages, 0, ps.n_pages - 1)
+    return replace(ps, refcnt=ps.refcnt.at[tgt].add(
+        jnp.where(mask, 1, 0).astype(I32)))
+
+
+def release(ps: PrefixState, pages: jax.Array, mask: jax.Array) -> PrefixState:
+    """Unpin pages (-1 refcnt per masked reference)."""
+    tgt = jnp.clip(pages, 0, ps.n_pages - 1)
+    return replace(ps, refcnt=ps.refcnt.at[tgt].add(
+        jnp.where(mask, -1, 0).astype(I32)))
+
+
+def evictable(ps: PrefixState) -> jax.Array:
+    """[n_pages] bool: cached and unpinned — the victim candidate set."""
+    return ps.cached & (ps.refcnt == 0)
+
+
+def evict(ps: PrefixState, k: int, want: jax.Array):
+    """Evict up to ``want`` (dynamic, ``<= k`` static) coldest unpinned
+    cached pages.
+
+    The victim scan is one ``top_k`` over negated stamps (pinned and
+    uncached pages are masked to ``STAMP_MAX``; ties break to the lowest
+    page id — ``lax.top_k`` is index-stable).  Each victim resolves its
+    fingerprint through the reverse index, deletes it from the forward
+    index (the fused delete path when the backend is fused — this is the
+    op-budget the macro-bench pins), deletes its reverse entry, and drops
+    ``cached``.  Returns ``(ps', pages[k], ok[k])``: ``ok`` marks pages
+    actually evicted — they are safe to hand back to the page pool.
+    """
+    ev = evictable(ps)
+    coldness = jnp.where(ev, ps.stamp, STAMP_MAX)
+    neg, idx = lax.top_k(-coldness, k)                 # coldest first
+    pick = (-neg != STAMP_MAX) & (jnp.arange(k, dtype=I32) < want)
+    found, fps = dhash.lookup(ps.rev, page_key(idx))
+    # a cached page with no reverse entry would leave a live forward mapping
+    # to a freed page — never free it (the invariant makes this unreachable;
+    # the differential suite checks it stays that way)
+    ok = pick & found
+    table, _ = dhash.delete(ps.table, fps, ok)
+    rev, _ = dhash.delete(ps.rev, page_key(idx), ok)
+    hit = _scatter_hit(ps, idx, ok)
+    return replace(ps, table=table, rev=rev,
+                   cached=ps.cached & ~hit,
+                   evictions=ps.evictions + ok.sum(dtype=I32)), idx, ok

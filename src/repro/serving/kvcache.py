@@ -44,6 +44,7 @@ from jax import lax
 from repro.core import buckets, dhash
 from repro.core.distributed import _route, _route_payload, _unroute, route_cap
 from repro.core.struct_utils import pytree_dataclass, replace
+from repro.serving import eviction, prefix_cache
 
 F32 = jnp.float32
 I32 = jnp.int32
@@ -57,7 +58,7 @@ def block_key(seq_id: jax.Array, block_idx: jax.Array) -> jax.Array:
 
 @pytree_dataclass(meta_fields=("layers", "page_size", "n_pages", "kv_heads",
                                "head_dim", "max_blocks", "n_tenants",
-                               "cap_factor"))
+                               "cap_factor", "evict_batch"))
 class PagedKV:
     layers: int
     page_size: int
@@ -69,6 +70,9 @@ class PagedKV:
                                  # dhash stack of per-tenant tables
     cap_factor: float            # tenant-router cap c: send buffers are
                                  # [T, ceil(c*N/T)]; <= 0 = full width
+    evict_batch: int             # max victims per evict-on-pressure pass;
+                                 # must cover the worst per-step block
+                                 # demand (>= batch size) for alloc_fail==0
     pool_k: jax.Array            # [L, n_pages, page, KV, HD]
     pool_v: jax.Array
     table: dhash.DHashState      # block_key -> page id ([T]-stacked if T > 1)
@@ -77,12 +81,20 @@ class PagedKV:
     route_spill: jax.Array       # [T] i32 cumulative router overflow (keys
                                  # past a tenant's cap, served by the
                                  # full-width retry pass)
+    alloc_fail: jax.Array        # scalar i32: masked allocations that found
+                                 # no free page (after eviction, if enabled)
+    prefix: eviction.PrefixState | None  # prefix-cache + eviction state
+                                 # (None = caching disabled, zero overhead)
 
 
 def make(layers: int, page_size: int, n_pages: int, kv_heads: int,
          head_dim: int, *, max_blocks: int = 4096, dtype=jnp.bfloat16,
          table_chunk: int = 256, seed: int = 3,
-         n_tenants: int = 1, cap_factor: float = 2.0) -> PagedKV:
+         n_tenants: int = 1, cap_factor: float = 2.0,
+         prefix_cache: bool = False, prefix_backend: str = "linear",
+         prefix_capacity: int | None = None, prefix_seed: int = 11,
+         prefix_fused: bool | None = None, evict_batch: int = 8,
+         prefix_kw: dict | None = None) -> PagedKV:
     shp = (layers, n_pages, page_size, kv_heads, head_dim)
     if n_tenants == 1:
         table = dhash.make("linear", capacity=2 * n_pages, chunk=table_chunk,
@@ -92,15 +104,23 @@ def make(layers: int, page_size: int, n_pages: int, kv_heads: int,
         # so in the worst case one tenant holds them all)
         table = dhash.make_stack(n_tenants, "linear", capacity=2 * n_pages,
                                  chunk=table_chunk, seed=seed)
+    prefix = None
+    if prefix_cache:
+        prefix = eviction.make(n_pages, backend=prefix_backend,
+                               capacity=prefix_capacity, chunk=table_chunk,
+                               seed=prefix_seed, fused=prefix_fused,
+                               **(prefix_kw or {}))
     return PagedKV(
         layers=layers, page_size=page_size, n_pages=n_pages, kv_heads=kv_heads,
         head_dim=head_dim, max_blocks=max_blocks, n_tenants=n_tenants,
-        cap_factor=cap_factor,
+        cap_factor=cap_factor, evict_batch=evict_batch,
         pool_k=jnp.zeros(shp, dtype), pool_v=jnp.zeros(shp, dtype),
         table=table,
         free_stack=jnp.arange(n_pages, dtype=I32),
         free_top=jnp.asarray(n_pages, I32),
-        route_spill=jnp.zeros((n_tenants,), I32))
+        route_spill=jnp.zeros((n_tenants,), I32),
+        alloc_fail=jnp.asarray(0, I32),
+        prefix=prefix)
 
 
 def tenant_of(kv: PagedKV, seq_ids: jax.Array) -> jax.Array:
@@ -210,21 +230,49 @@ def resolve_blocks(kv: PagedKV, seq_ids: jax.Array, n_blocks: int):
     return page.reshape(b, n_blocks), found.reshape(b, n_blocks)
 
 
+def _evict_for(kv: PagedKV, shortage: jax.Array) -> PagedKV:
+    """Evict up to ``shortage`` cold unpinned cached pages into the free
+    stack (cond-gated: the pressure-free path pays nothing at runtime)."""
+
+    def go(args):
+        ps, free_stack, free_top = args
+        ps, pages, ok = eviction.evict(ps, kv.evict_batch, shortage)
+        rank = jnp.cumsum(ok.astype(I32)) - 1
+        dst = jnp.where(ok, free_top + rank, kv.n_pages)
+        free_stack = free_stack.at[dst].set(pages, mode="drop")
+        return ps, free_stack, free_top + ok.sum(dtype=I32)
+
+    ps, free_stack, free_top = lax.cond(
+        shortage > 0, go, lambda a: a,
+        (kv.prefix, kv.free_stack, kv.free_top))
+    return replace(kv, prefix=ps, free_stack=free_stack, free_top=free_top)
+
+
 def alloc_pages(kv: PagedKV, seq_ids: jax.Array, block_idx: jax.Array,
                 mask: jax.Array):
     """Allocate one page per masked (seq, block) and insert into the table.
     Idempotent: pairs already mapped keep their page (no leak).
-    Returns (kv', pages [B])."""
+
+    With the prefix cache enabled, pool pressure evicts cold unpinned
+    cached pages first (``eviction.evict``) instead of failing the
+    allocation; ``kv.alloc_fail`` counts masked requests that STILL found
+    no page — the macro-bench asserts it stays zero over a replay that
+    exceeds ``n_pages``.  Returns (kv', pages [B])."""
     keys = block_key(seq_ids, block_idx)
     tenant = tenant_of(kv, seq_ids)
     present, _ = table_lookup(kv, tenant, keys)
     want = mask & ~present
+    if kv.prefix is not None:
+        need = jnp.sum(want.astype(I32))
+        kv = _evict_for(kv, need - kv.free_top)
     rank = jnp.cumsum(want.astype(I32)) - 1
     can = want & (rank < kv.free_top)
     page = kv.free_stack[jnp.where(can, kv.free_top - 1 - rank, 0)]
     kv, ok = table_insert(kv, tenant, keys, page, can)
     used = jnp.sum((can & ok).astype(I32))
-    return replace(kv, free_top=kv.free_top - used), \
+    fail = jnp.sum((want & ~can).astype(I32))
+    return replace(kv, free_top=kv.free_top - used,
+                   alloc_fail=kv.alloc_fail + fail), \
         jnp.where(can, page, -1)
 
 
@@ -298,7 +346,14 @@ def paged_decode_attention(kv: PagedKV, layer: jax.Array, q1: jax.Array,
 
 def free_sequences(kv: PagedKV, seq_ids: jax.Array, max_blocks: int):
     """Release all pages of finished sequences back to the free list and
-    delete their table entries (batched)."""
+    delete their table entries (batched).
+
+    With the prefix cache enabled, a finished sequence's CACHED pages
+    (adopted shared pages and its own published blocks — exactly the pages
+    it holds a pin on) are unpinned instead of freed: they stay in the
+    cache for future hits and return to the pool only through eviction.
+    Uncached pages (unpublished tails, failed publishes) are exclusively
+    owned and go straight back to the free stack as before."""
     b = seq_ids.shape[0]
     blk = jnp.arange(max_blocks, dtype=I32)
     keys = block_key(seq_ids[:, None], blk[None, :]).reshape(-1)
@@ -306,13 +361,66 @@ def free_sequences(kv: PagedKV, seq_ids: jax.Array, max_blocks: int):
                               (b, max_blocks)).reshape(-1)
     found, pages = table_lookup(kv, tenant, keys)
     kv, ok = table_delete(kv, tenant, keys, found)
+    push = ok
+    if kv.prefix is not None:
+        tgt = jnp.clip(pages, 0, kv.n_pages - 1)
+        pinned = ok & kv.prefix.cached[tgt]
+        kv = replace(kv, prefix=eviction.release(kv.prefix, pages, pinned))
+        push = ok & ~pinned
     # push freed pages (deterministic order)
-    rank = jnp.cumsum(ok.astype(I32)) - 1
-    dst = jnp.where(ok, kv.free_top + rank, kv.n_pages)
+    rank = jnp.cumsum(push.astype(I32)) - 1
+    dst = jnp.where(push, kv.free_top + rank, kv.n_pages)
     free_stack = kv.free_stack.at[dst].set(pages, mode="drop")
-    freed = jnp.sum(ok.astype(I32))
+    freed = jnp.sum(push.astype(I32))
     return replace(kv, free_stack=free_stack,
                    free_top=kv.free_top + freed)
+
+
+def adopt_prefix(kv: PagedKV, seq_id: jax.Array, fps: jax.Array,
+                 valid: jax.Array):
+    """Adopt the longest cached prefix for ONE admitted sequence.
+
+    ``fps``: [n] padded block fingerprints, ``valid``: [n] bool (False past
+    the prompt's full blocks).  The contiguous run of cached fingerprints
+    is resolved through the prefix index, its pages are mapped into the
+    sequence's page table under its own block keys, pinned (``acquire``)
+    and re-warmed (``touch``).  Page-table inserts that fail truncate the
+    adopted run (and roll back their stragglers) so the mapped prefix is
+    always contiguous from block 0.  Returns ``(kv', n_adopt, pages [n])``
+    with ``-1`` past the adopted length."""
+    ps = kv.prefix
+    found, pages = dhash.lookup(ps.table, fps)
+    run = jnp.cumprod((found & valid).astype(I32)).astype(bool)
+    blk = jnp.arange(fps.shape[0], dtype=I32)
+    keys = block_key(jnp.broadcast_to(seq_id, blk.shape), blk)
+    tenant = jnp.broadcast_to(tenant_of(kv, jnp.asarray(seq_id, I32)),
+                              blk.shape)
+    kv, ok = table_insert(kv, tenant, keys, pages, run)
+    keep = jnp.cumprod((run & ok).astype(I32)).astype(bool)
+    kv, _ = table_delete(kv, tenant, keys, run & ok & ~keep)
+    ps = eviction.touch(eviction.acquire(ps, pages, keep), pages, keep)
+    return replace(kv, prefix=ps), keep.sum(dtype=I32), \
+        jnp.where(keep, pages, -1)
+
+
+def publish_blocks(kv: PagedKV, seq_id: jax.Array, fps: jax.Array,
+                   mask: jax.Array):
+    """Publish ONE sequence's fully-written blocks into the prefix cache.
+
+    ``fps``: [n] fingerprints, ``mask``: [n] bool (blocks to publish).  The
+    pages come from the sequence's OWN page-table entries; successfully
+    published pages become cached and the sequence takes a pin on them
+    (released by ``free_sequences`` — a cached page is never recycled
+    under a reader).  Duplicate fingerprints keep the existing mapping and
+    the local page stays exclusively owned.  Returns ``(kv', n_pub)``."""
+    blk = jnp.arange(fps.shape[0], dtype=I32)
+    keys = block_key(jnp.broadcast_to(seq_id, blk.shape), blk)
+    tenant = jnp.broadcast_to(tenant_of(kv, jnp.asarray(seq_id, I32)),
+                              blk.shape)
+    found, pages = table_lookup(kv, tenant, keys)
+    ps, ok = eviction.publish(kv.prefix, fps, pages, mask & found)
+    ps = eviction.acquire(ps, pages, ok)
+    return replace(kv, prefix=ps), ok.sum(dtype=I32)
 
 
 def rehash_step(kv: PagedKV) -> PagedKV:
@@ -320,12 +428,36 @@ def rehash_step(kv: PagedKV) -> PagedKV:
 
     In multi-tenant mode every tenant advances its own epoch and swaps
     on-device the moment ITS rebuild completes (``finish_same_shape`` under
-    vmap) — rehashes stay fully independent across the stack."""
+    vmap) — rehashes stay fully independent across the stack.  The prefix
+    index and its reverse index (when enabled) advance their own epochs
+    the same way — a fingerprint-index rehash (collision attack response)
+    streams alongside decode exactly like a page-table rehash."""
     if kv.n_tenants == 1:
-        return replace(kv, table=dhash.rebuild_step(kv.table))
-    table = dhash.stack_finish_same_shape(
-        dhash.stack_rebuild_step(kv.table))
-    return replace(kv, table=table)
+        kv = replace(kv, table=dhash.rebuild_step(kv.table))
+    else:
+        kv = replace(kv, table=dhash.stack_finish_same_shape(
+            dhash.stack_rebuild_step(kv.table)))
+    if kv.prefix is not None:
+        ps = kv.prefix
+        kv = replace(kv, prefix=replace(
+            ps,
+            table=dhash.finish_same_shape(dhash.rebuild_step(ps.table)),
+            rev=dhash.finish_same_shape(dhash.rebuild_step(ps.rev))))
+    return kv
+
+
+def start_prefix_rehash(kv: PagedKV, *, seed: int | None = None) -> PagedKV:
+    """Begin a live same-shape rehash of the prefix (fingerprint) index with
+    a fresh hash seed — the engine's response to a collision attack on the
+    fingerprint distribution.  Host-side helper: a no-op if a rebuild is
+    already in flight (``rehash_step`` drives it to completion)."""
+    ps = kv.prefix
+    if ps is None:
+        raise ValueError("prefix cache is disabled (make(prefix_cache=True))")
+    if bool(jax.device_get(ps.table.rebuilding)):
+        return kv
+    table = dhash.rebuild_start(ps.table, seed=seed)
+    return replace(kv, prefix=replace(ps, table=table))
 
 
 def start_rehash(kv: PagedKV, mask: jax.Array | None = None) -> PagedKV:

@@ -38,8 +38,16 @@ def prefix_fingerprints(tokens: jax.Array, page_size: int) -> jax.Array:
 
 def match_prefix(table: dhash.DHashState, fps: jax.Array):
     """Longest cached prefix per row. fps: [B, n].
-    Returns (n_hit [B], pages [B, n] with -1 past the hit length)."""
+    Returns (n_hit [B], pages [B, n] with -1 past the hit length).
+
+    Edge contracts (pinned by tests): a row whose FIRST block misses is a
+    clean miss — ``n_hit == 0`` and every page ``-1`` (the cumprod run
+    never restarts after a gap); a zero-block batch (``n == 0``, prompts
+    shorter than a page — ``prefix_fingerprints`` never fingerprints the
+    ragged tail) short-circuits without touching the table."""
     b, n = fps.shape
+    if n == 0:
+        return jnp.zeros((b,), I32), jnp.full((b, 0), -1, I32)
     found, pages = dhash.lookup(table, fps.reshape(-1))
     found = found.reshape(b, n)
     pages = pages.reshape(b, n)

@@ -1,0 +1,25 @@
+"""Process-level environment setup shared by every test.
+
+Must run before jax creates its CPU client, which is why this lives in
+conftest (imported by pytest ahead of any test module) and touches
+os.environ before importing jax.
+
+The full suite drives several hundred in-process XLA compilations, most
+of them wrapping interpret-mode pallas kernels (i.e. host callbacks).
+Under jaxlib 0.4.36's new CPU *thunk runtime* that combination is
+fragile: deep into a single-process run the next compile of a
+callback-carrying `lax.cond` segfaults inside `backend_compile` — the
+same test passes in isolation, and the crash site moves to whichever
+eager cond compiles next once the cumulative threshold is crossed.
+Opting back into the legacy CPU runtime makes the whole suite stable.
+Revisit when jaxlib is upgraded (the thunk runtime is the long-term
+default and this flag will eventually disappear).
+"""
+from __future__ import annotations
+
+import os
+
+_FLAG = "--xla_cpu_use_thunk_runtime=false"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") + " " +
+                               _FLAG).strip()

@@ -1,0 +1,264 @@
+"""Differential op-sequence fuzz for the prefix-cache eviction policy:
+random interleavings of publish / match / acquire / release / evict /
+rehash-start / rehash-step (``serving/eviction.py``) checked against a
+dict + LRU oracle, across backends x fused on/off.
+
+The oracle is the obvious Python model: ``mapping: fp -> page``, a cached
+set, per-page pin counts, and per-page stamps with a global clock.  Victim
+selection sorts candidates by ``(stamp, page)`` ascending — exactly what
+the kernel side guarantees (``lax.top_k`` over negated stamps is
+index-stable, so ties break to the lowest page id).  Every op checks ok
+flags and membership; every step checks the module invariant: the cached
+count, the forward index, and the reverse index agree in lockstep.
+
+Rehash ops fuzz the "eviction while the fingerprint index is mid-rebuild"
+corner: victim deletes must go through the ordered old->hazard->new check
+and the oracle must never notice.
+
+Encoding is shrink-friendly (small opcodes + small fp indices) and the
+pinned ``CORPUS`` replays without hypothesis installed — grow it by
+pasting any failing ``script`` repr here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:  # the corpus replay below runs even without hypothesis installed
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - dev containers without dev deps
+    HAVE_HYPOTHESIS = False
+
+from repro.core import backend as backends
+from repro.core import dhash
+from repro.serving import eviction
+
+I32 = jnp.int32
+Q = 4                        # fixed batch width (masked), no recompiles
+FPS = list(range(100, 112))  # small fingerprint universe -> dup pressure
+N_PAGES = 8
+
+OP_PUBLISH, OP_MATCH, OP_ACQUIRE, OP_RELEASE, OP_EVICT, OP_START, OP_STEP = \
+    range(7)
+
+if HAVE_HYPOTHESIS:
+    _op = st.tuples(st.integers(0, 6),
+                    st.lists(st.sampled_from(FPS), min_size=1, max_size=Q))
+    _script = st.lists(_op, min_size=3, max_size=20)
+
+_FNS = {
+    "publish": jax.jit(eviction.publish),
+    "touch": jax.jit(eviction.touch),
+    "acquire": jax.jit(eviction.acquire),
+    "release": jax.jit(eviction.release),
+    "evict": jax.jit(eviction.evict, static_argnums=1),
+    "lookup": jax.jit(dhash.lookup),
+    "step": jax.jit(lambda t: dhash.finish_same_shape(dhash.rebuild_step(t))),
+}
+
+# Previously-found failing sequences (shrunk), replayed on every run.
+CORPUS = [
+    # evict then republish the same fingerprint onto a fresh page
+    [(OP_PUBLISH, [100, 101, 102]), (OP_EVICT, [100, 100]),
+     (OP_PUBLISH, [100]), (OP_MATCH, [100, 101, 102])],
+    # pinned page must be skipped; victim order falls to the next-coldest
+    [(OP_PUBLISH, [100, 101]), (OP_PUBLISH, [102, 103]),
+     (OP_ACQUIRE, [100, 101]), (OP_EVICT, [100, 100, 100]),
+     (OP_RELEASE, [100]), (OP_EVICT, [100]), (OP_MATCH, [100, 101, 102])],
+    # duplicate publish (in-batch and cross-batch) keeps the first mapping
+    [(OP_PUBLISH, [104, 104, 105]), (OP_PUBLISH, [104, 106]),
+     (OP_MATCH, [104, 105, 106]), (OP_EVICT, [100, 100])],
+    # eviction mid-rebuild: ordered deletes on the forward index
+    [(OP_PUBLISH, [100, 101, 102, 103]), (OP_START, [100]), (OP_STEP, [100]),
+     (OP_EVICT, [100, 100]), (OP_STEP, [100]), (OP_MATCH, [100, 101, 102]),
+     (OP_STEP, [100]), (OP_STEP, [100]), (OP_PUBLISH, [107]),
+     (OP_MATCH, [100, 101, 102, 103])],
+    # touch re-warms: matched pages must drop to the BACK of the LRU order
+    [(OP_PUBLISH, [100, 101]), (OP_PUBLISH, [102]), (OP_MATCH, [100]),
+     (OP_EVICT, [100, 100]), (OP_MATCH, [100, 101, 102])],
+    # found by fuzz (twochoice, seed 913, shrunk): re-publish of a
+    # still-cached fp mid-rebuild must lose even though its entry has not
+    # migrated to the new table yet — dhash.insert only checks the TARGET
+    # table, so publish must pre-screen with a full ordered lookup
+    [(OP_PUBLISH, [100, 101, 102]), (OP_START, [100]),
+     (OP_PUBLISH, [100, 103]), (OP_MATCH, [100, 101, 103]),
+     (OP_STEP, [100]), (OP_EVICT, [100, 100]),
+     (OP_MATCH, [100, 101, 102, 103])],
+]
+
+BACKEND_PARAMS = [(b, f) for b in ("linear", "twochoice", "chain")
+                  for f in (False, True)]
+
+
+def _pad(fps: list[int]):
+    ks = np.zeros(Q, np.int32)
+    mask = np.zeros(Q, bool)
+    ks[: len(fps)] = fps[:Q]
+    mask[: len(fps)] = True
+    return ks, mask
+
+
+class _Oracle:
+    def __init__(self):
+        self.mapping: dict[int, int] = {}   # fp -> page
+        self.refcnt = [0] * N_PAGES
+        self.stamp = [0] * N_PAGES
+        self.clock = 1
+
+    @property
+    def cached(self):
+        return set(self.mapping.values())
+
+    def publish(self, fps, pages, mask):
+        ok, seen = [], set()
+        for f, p, m in zip(fps, pages, mask):
+            good = bool(m) and f not in self.mapping and f not in seen
+            ok.append(good)
+            seen.add(f)
+            if good:
+                self.mapping[f] = p
+                self.stamp[p] = self.clock
+        self.clock += 1
+        return ok
+
+    def touch(self, pages, mask):
+        for p, m in zip(pages, mask):
+            if m:
+                self.stamp[p] = self.clock
+        self.clock += 1
+
+    def evict(self, want):
+        cand = sorted((p for p in self.cached if self.refcnt[p] == 0),
+                      key=lambda p: (self.stamp[p], p))
+        victims = cand[:want]
+        for p in victims:
+            fp = next(f for f, pp in self.mapping.items() if pp == p)
+            del self.mapping[fp]
+        return victims
+
+
+def _check_invariants(ps, oracle, ctx):
+    cached = np.asarray(jax.device_get(ps.cached))
+    assert set(np.where(cached)[0].tolist()) == oracle.cached, ctx
+    n = len(oracle.mapping)
+    assert int(jax.device_get(dhash.count_items(ps.table))) == n, ctx
+    assert int(jax.device_get(dhash.count_items(ps.rev))) == n, ctx
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(ps.refcnt)), np.asarray(oracle.refcnt),
+        err_msg=str(ctx))
+
+
+def run_script(backend: str, fused: bool, script, seed: int):
+    ps = eviction.make(N_PAGES, backend=backend, capacity=32, chunk=16,
+                       seed=seed % 5, fused=fused)
+    oracle = _Oracle()
+    free = list(range(N_PAGES))          # harness-owned page allocator
+    rb_seed = seed
+
+    for step_no, (opcode, payload) in enumerate(script):
+        ctx = (backend, fused, step_no, opcode, payload)
+        if opcode == OP_PUBLISH:
+            payload = payload[: len(free)]
+            if not payload:
+                continue
+            ks, mask = _pad(payload)
+            pages = np.zeros(Q, np.int32)
+            pages[: len(payload)] = free[: len(payload)]
+            ps, ok = _FNS["publish"](ps, jnp.asarray(ks),
+                                     jnp.asarray(pages), jnp.asarray(mask))
+            exp = oracle.publish(ks.tolist(), pages.tolist(), mask.tolist())
+            assert np.asarray(ok).tolist() == exp, ctx
+            # pages that actually published leave the free pool
+            free = [p for p in free
+                    if p not in {pg for pg, o in zip(pages, ok) if o}]
+        elif opcode == OP_MATCH:
+            ks, mask = _pad(payload)
+            found, pages = _FNS["lookup"](ps.table, jnp.asarray(ks))
+            hits, hit_pages = [], []
+            for f, m, fn, pg in zip(ks.tolist(), mask.tolist(),
+                                    np.asarray(found).tolist(),
+                                    np.asarray(pages).tolist()):
+                if not m:
+                    continue
+                assert fn == (f in oracle.mapping), ctx
+                if fn:
+                    assert pg == oracle.mapping[f], ctx
+                    hits.append(True), hit_pages.append(pg)
+            pad_pg = np.zeros(Q, np.int32)
+            pad_m = np.zeros(Q, bool)
+            pad_pg[: len(hit_pages)] = hit_pages
+            pad_m[: len(hit_pages)] = hits
+            ps = _FNS["touch"](ps, jnp.asarray(pad_pg), jnp.asarray(pad_m))
+            oracle.touch(pad_pg.tolist(), pad_m.tolist())
+        elif opcode in (OP_ACQUIRE, OP_RELEASE):
+            # pin/unpin the pages of mapped fingerprints; releases are only
+            # issued against pins the harness actually holds (the kvcache
+            # caller contract)
+            pgs = []
+            for f in payload:
+                p = oracle.mapping.get(f)
+                if p is None:
+                    continue
+                if opcode == OP_RELEASE and oracle.refcnt[p] - \
+                        pgs.count(p) <= 0:
+                    continue
+                pgs.append(p)
+            pad_pg = np.zeros(Q, np.int32)
+            pad_m = np.zeros(Q, bool)
+            pad_pg[: len(pgs)] = pgs
+            pad_m[: len(pgs)] = True
+            name = "acquire" if opcode == OP_ACQUIRE else "release"
+            ps = _FNS[name](ps, jnp.asarray(pad_pg), jnp.asarray(pad_m))
+            for p in pgs:
+                oracle.refcnt[p] += 1 if opcode == OP_ACQUIRE else -1
+        elif opcode == OP_EVICT:
+            want = len(payload)
+            ps, victims, ok = _FNS["evict"](ps, Q, jnp.asarray(want, I32))
+            got = np.asarray(victims)[np.asarray(ok)].tolist()
+            exp_v = oracle.evict(min(want, Q))
+            assert got == exp_v, (ctx, got, exp_v)
+            free += got
+        elif opcode == OP_START:
+            if not bool(jax.device_get(ps.table.rebuilding)):
+                rb_seed += 1
+                ps = eviction.replace(
+                    ps, table=dhash.rebuild_start(ps.table, seed=rb_seed))
+        elif opcode == OP_STEP:
+            ps = eviction.replace(ps, table=_FNS["step"](ps.table))
+        _check_invariants(ps, oracle, ctx)
+
+    # drain any in-flight rebuild, then final membership over the universe
+    for _ in range(2 * (32 // 16) + 8):
+        if not bool(jax.device_get(ps.table.rebuilding)):
+            break
+        ps = eviction.replace(ps, table=_FNS["step"](ps.table))
+    assert not bool(jax.device_get(ps.table.rebuilding)), (backend, fused)
+    ks = jnp.asarray(np.asarray(FPS, np.int32))
+    found, pages = _FNS["lookup"](ps.table, ks)
+    for i, f in enumerate(FPS):
+        assert bool(found[i]) == (f in oracle.mapping), (backend, fused, f)
+        if f in oracle.mapping:
+            assert int(pages[i]) == oracle.mapping[f], (backend, fused, f)
+
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.parametrize("backend,fused", BACKEND_PARAMS)
+    @settings(max_examples=4, deadline=None)
+    @given(script=_script, seed=st.integers(0, 2**16))
+    def test_prefix_differential_op_sequences(backend, fused, script, seed):
+        if fused and not backends.get(backend).fused:
+            pytest.skip(f"{backend} has no fused kernels")
+        run_script(backend, fused, script, seed)
+
+
+@pytest.mark.parametrize("backend,fused", BACKEND_PARAMS)
+def test_prefix_differential_regression_corpus(backend, fused):
+    """Replay every pinned sequence against every backend config — runs
+    with or without hypothesis installed."""
+    if fused and not backends.get(backend).fused:
+        pytest.skip(f"{backend} has no fused kernels")
+    for i, script in enumerate(CORPUS):
+        run_script(backend, fused, script, seed=500 + i)

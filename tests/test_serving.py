@@ -9,9 +9,10 @@ import numpy as np
 import pytest
 
 from repro.configs.base import ArchConfig
+from repro.core import backend as backends
 from repro.core import dhash
 from repro.models import model, transformer
-from repro.serving import kvcache, prefix_cache
+from repro.serving import eviction, kvcache, prefix_cache
 from repro.serving.engine import ServeConfig, ServingEngine
 
 
@@ -100,6 +101,106 @@ def test_prefix_cache_chain_semantics():
     nhit2, got2 = prefix_cache.match_prefix(table, fps2)
     assert int(nhit2[0]) == 1 and int(nhit2[1]) == 4
     assert int(got2[0, 0]) == 0 and int(got2[0, 1]) == -1
+
+
+def test_match_prefix_edge_contracts():
+    """Pinned edge behavior: a first-block miss is a clean miss (n_hit=0,
+    every page -1 — the run never restarts after a gap), ragged token tails
+    are never fingerprinted, and a zero-block batch short-circuits."""
+    table = dhash.make("linear", capacity=64, chunk=32, seed=0)
+    fps = jnp.asarray([[11, 12, 13], [21, 22, 23]], jnp.int32)
+    pages = jnp.asarray([[0, 1, 2], [3, 4, 5]], jnp.int32)
+    # publish only row 1 — row 0's first block stays unknown
+    table, _ = prefix_cache.publish_prefix(
+        table, fps, pages, jnp.asarray([[False, True, True],
+                                        [True, True, True]]))
+    nhit, got = prefix_cache.match_prefix(table, fps)
+    assert int(nhit[0]) == 0, "first-block miss must yield n_hit=0"
+    np.testing.assert_array_equal(np.asarray(got[0]), [-1, -1, -1])
+    assert int(nhit[1]) == 3
+    # ragged tail: 10 tokens at page_size=4 -> exactly 2 blocks, and the
+    # fingerprints must not see the tail tokens
+    toks = jnp.asarray(np.random.default_rng(0).integers(1, 99, (1, 10)),
+                       jnp.int32)
+    f1 = prefix_cache.prefix_fingerprints(toks, page_size=4)
+    assert f1.shape == (1, 2)
+    f2 = prefix_cache.prefix_fingerprints(toks.at[0, 9].set(7), page_size=4)
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+    # prompts shorter than one page: zero blocks, no table access
+    short = prefix_cache.prefix_fingerprints(toks[:, :3], page_size=4)
+    assert short.shape == (1, 0)
+    nhit0, got0 = prefix_cache.match_prefix(table, short)
+    assert int(nhit0[0]) == 0 and got0.shape == (1, 0)
+    # zero-hit batch: fingerprints never published all miss cleanly
+    nhitz, gotz = prefix_cache.match_prefix(
+        table, jnp.asarray([[91, 92], [93, 94]], jnp.int32))
+    assert (np.asarray(nhitz) == 0).all()
+    assert (np.asarray(gotz) == -1).all()
+
+
+_EVICT_BACKENDS = [(b, f) for b in ("linear", "twochoice", "chain")
+                   for f in (False, True)]
+# jitted once at module scope: the op-by-op eager path recompiles every
+# lax.cond per call, which is both slow and (deep into a full-suite
+# process with hundreds of cached executables) has segfaulted XLA's CPU
+# compiler; the jitted path is also what production callers use
+_EV = {"publish": jax.jit(eviction.publish),
+       "evict": jax.jit(eviction.evict, static_argnums=1),
+       "lookup": jax.jit(dhash.lookup)}
+
+
+@pytest.mark.parametrize("backend,fused", _EVICT_BACKENDS)
+def test_eviction_pinning_and_lru_order(backend, fused):
+    """The acceptance property, per backend x fused: a refcount-pinned page
+    is NEVER victimized; victims come coldest-first; evicted fingerprints
+    miss on the next lookup; duplicate republish keeps the original page."""
+    if fused and not backends.get(backend).fused:
+        pytest.skip(f"{backend} has no fused kernels")
+    ps = eviction.make(8, backend=backend, chunk=32, seed=3, fused=fused)
+    fps = jnp.asarray([100, 200, 300, 400, 500, 600, 700, 800], jnp.int32)
+    pages = jnp.arange(8, dtype=jnp.int32)
+    # publish in two batches -> two stamp generations (0-3 colder than 4-7)
+    ps, ok = _EV["publish"](ps, fps[:4], pages[:4], jnp.ones((4,), bool))
+    assert bool(np.asarray(ok).all())
+    ps, ok = _EV["publish"](ps, fps[4:], pages[4:], jnp.ones((4,), bool))
+    assert bool(np.asarray(ok).all())
+    # duplicate-fingerprint republish: fp 100 from a NEW page 7 must lose
+    ps2, okd = _EV["publish"](ps, fps[:1], jnp.asarray([7], jnp.int32),
+                              jnp.ones((1,), bool))
+    assert not bool(np.asarray(okd)[0])
+    _, got = _EV["lookup"](ps2.table, fps[:1])
+    assert int(got[0]) == 0, "existing mapping must win"
+    # masked publish: mask=False inserts nothing
+    ps3, okm = _EV["publish"](ps, jnp.asarray([999], jnp.int32),
+                              jnp.asarray([3], jnp.int32),
+                              jnp.zeros((1,), bool))
+    assert not bool(np.asarray(okm)[0])
+    assert not bool(np.asarray(_EV["lookup"](ps3.table,
+                                             jnp.asarray([999]))[0])[0])
+    # pin the two coldest pages — eviction must skip PAST them
+    ps = eviction.acquire(ps, pages[:2], jnp.ones((2,), bool))
+    ps, victims, vok = _EV["evict"](ps, 4, jnp.asarray(3, jnp.int32))
+    vset = set(np.asarray(victims)[np.asarray(vok)].tolist())
+    assert len(vset) == 3
+    assert vset.isdisjoint({0, 1}), f"pinned page victimized: {vset}"
+    assert vset == {2, 3, 4}, "victims must be coldest-first, index-stable"
+    # evicted fingerprints now miss; pinned survivors still hit
+    fnd, _ = _EV["lookup"](ps.table, fps)
+    np.testing.assert_array_equal(
+        np.asarray(fnd), [True, True, False, False, False, True, True, True])
+    # reverse index shrank in lockstep with the forward index
+    assert int(jax.device_get(dhash.count_items(ps.rev))) == 5
+    assert int(jax.device_get(dhash.count_items(ps.table))) == 5
+    # fully pinned cache: eviction wants pages but must return none
+    ps = eviction.acquire(ps, jnp.asarray([5, 6, 7], jnp.int32),
+                          jnp.ones((3,), bool))
+    ps, _, vok2 = _EV["evict"](ps, 4, jnp.asarray(4, jnp.int32))
+    assert not bool(np.asarray(vok2).any()), "all pages pinned: no victims"
+    # release makes them victims again
+    ps = eviction.release(ps, jnp.asarray([5, 6, 7], jnp.int32),
+                          jnp.ones((3,), bool))
+    ps, _, vok3 = _EV["evict"](ps, 4, jnp.asarray(4, jnp.int32))
+    assert int(np.asarray(vok3).sum()) == 3
 
 
 def test_paged_attention_vs_reference_random_pages():
@@ -231,3 +332,63 @@ def test_multi_tenant_engine_matches_single_tenant(small):
         if tenants > 1:
             assert eng.rehashes >= 1, "low trigger must start tenant rehashes"
     assert outs[1] == outs[3], "tenant partition must not change decoding"
+
+
+def test_prefix_cache_decode_identity(small):
+    """Prefix-cache adoption must be invisible to decoding: shared-prefix
+    prompts produce bit-identical outputs with the cache on and off, and the
+    second wave of each family actually adopts (hits > 0)."""
+    cfg, params = small
+    rng = np.random.default_rng(7)
+    fam = [rng.integers(1, 255, size=16).tolist() for _ in range(2)]
+    prompts = [f + rng.integers(1, 255, size=4).tolist() + [1]
+               for f in fam for _ in range(3)]
+    outs = {}
+    for on in (False, True):
+        eng = ServingEngine(params, cfg, ServeConfig(
+            max_seqs=2, page_size=4, n_pages=64, max_blocks=8,
+            max_new_tokens=4, prefix_cache=on, prefix_capacity=256))
+        sids = [eng.submit(list(p)) for p in prompts]
+        eng.run(max_steps=2000)
+        assert len(eng.finished) == len(prompts)
+        outs[on] = [eng.finished[s] for s in sids]
+        if on:
+            assert eng.cache_hits > 0, "second wave never adopted"
+            assert eng.publishes > 0
+    assert outs[True] == outs[False], "prefix adoption changed decoding"
+
+
+@pytest.mark.slow
+def test_replay_past_pool_capacity_evicts_not_fails(small):
+    """End-to-end churn replay: publish far more distinct blocks than the
+    page pool holds.  Eviction (never allocation failure) must absorb the
+    pressure, and outputs must stay bit-identical to an unpressured
+    cache-off run — which also proves no in-use (pinned) page was ever
+    victimised and recycled mid-decode."""
+    cfg, params = small
+    rng = np.random.default_rng(11)
+    fam = [rng.integers(1, 255, size=16).tolist() for _ in range(6)]
+    prompts = [fam[int(i)] + rng.integers(1, 255, size=8).tolist() + [1]
+               for i in np.repeat(np.arange(6), 3)]
+    outs = {}
+    for on, n_pages in ((False, 256), (True, 32)):
+        eng = ServingEngine(params, cfg, ServeConfig(
+            max_seqs=4, page_size=4, n_pages=n_pages, max_blocks=8,
+            max_new_tokens=4, prefix_cache=on, prefix_capacity=512,
+            evict_batch=8))
+        sids = [eng.submit(list(p)) for p in prompts]
+        eng.run(max_steps=5000)
+        assert len(eng.finished) == len(prompts)
+        outs[on] = [eng.finished[s] for s in sids]
+    assert outs[True] == outs[False], (
+        "pool pressure corrupted decoding — an in-use page was evicted")
+    assert eng.publishes > 32, "replay too small to pressure the pool"
+    assert eng.alloc_fails == 0, "eviction failed to absorb pool pressure"
+    assert eng.evictions > 0
+    ps = eng.kv.prefix
+    # all sequences freed: every surviving pin released, indexes in lockstep
+    assert int(jax.device_get(ps.refcnt.sum())) == 0
+    n_cached = int(jax.device_get(ps.cached.sum()))
+    assert int(jax.device_get(dhash.count_items(ps.table))) == n_cached
+    assert int(jax.device_get(dhash.count_items(ps.rev))) == n_cached
+    assert int(eng.kv.free_top) + n_cached == 32, "pages leaked"
