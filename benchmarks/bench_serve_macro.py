@@ -12,7 +12,9 @@ ONE system through a four-phase traffic replay:
 * **attack** — a collision attack on the FINGERPRINT index: junk
   fingerprints that all hash into bucket 0 of the chain-backend prefix
   table (``bench_attack._attack_keys_for`` — the attacker knows the
-  seed).  Admission lookups and publishes that touch the hot bucket pay
+  seed; with ``prefix_backend="cuckoo"`` the flood targets one side-A
+  row of the bounded-probe backend instead, where it cannot build a
+  chain).  Admission lookups and publishes that touch the hot bucket pay
   the long traversal, so tail latency (p99 = admission steps) degrades
   while p50 (pure decode) stays flat — the paper's motivating scenario in
   its serving role.
@@ -63,7 +65,7 @@ N_ATTACK = 2048
 MAX_CHAIN = N_ATTACK + 128
 
 
-def _build(seed=0):
+def _build(seed=0, *, prefix_backend="chain"):
     import jax
 
     from repro.configs.base import ArchConfig
@@ -74,12 +76,16 @@ def _build(seed=0):
                      n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=128,
                      dtype="float32", attn_chunk=32, loss_chunk=32)
     params = transformer.init_params(cfg, jax.random.PRNGKey(seed))
+    # chain gets the attack-friendly geometry above; any other fingerprint
+    # backend (e.g. cuckoo, whose probe cost is bounded by construction)
+    # sizes itself from prefix_capacity alone
+    prefix_kw = ((("nbuckets", NBUCKETS), ("max_chain", MAX_CHAIN))
+                 if prefix_backend == "chain" else ())
     sc = ServeConfig(max_seqs=4, page_size=4, n_pages=48, max_blocks=8,
                      max_new_tokens=4, n_tenants=4, prefix_cache=True,
-                     prefix_backend="chain", prefix_capacity=4096,
+                     prefix_backend=prefix_backend, prefix_capacity=4096,
                      evict_batch=8,
-                     prefix_kw=(("nbuckets", NBUCKETS),
-                                ("max_chain", MAX_CHAIN)))
+                     prefix_kw=prefix_kw)
     return ServingEngine(params, cfg, sc), cfg, sc
 
 
@@ -210,7 +216,8 @@ def _budgets(eng, cfg, sc):
             "admission_budget": adm}
 
 
-def run(*, n_per_phase=16, n_families=12, quiet=False, out_path=None):
+def run(*, n_per_phase=16, n_families=12, prefix_backend="chain",
+        quiet=False, out_path=None):
     import jax
     import jax.numpy as jnp
 
@@ -220,7 +227,7 @@ def run(*, n_per_phase=16, n_families=12, quiet=False, out_path=None):
     from repro.serving import kvcache
 
     rng = np.random.default_rng(0)
-    eng, cfg, sc = _build()
+    eng, cfg, sc = _build(prefix_backend=prefix_backend)
     families = [rng.integers(1, 127, size=4 * sc.page_size).tolist()
                 for _ in range(n_families)]
 
@@ -244,7 +251,11 @@ def run(*, n_per_phase=16, n_families=12, quiet=False, out_path=None):
     # a sentinel page and are never adopted — their damage is the bucket-0
     # chain every admission lookup/publish must traverse
     ps = eng.kv.prefix
-    atk = _attack_keys_for(ps.table.old.hfn, NBUCKETS, N_ATTACK, rng)
+    tbl = ps.table.old
+    if hasattr(tbl, "hfn_a"):   # two-hash backends: flood one side-A bucket
+        atk = _attack_keys_for(tbl.hfn_a, int(tbl.nbuckets), N_ATTACK, rng)
+    else:
+        atk = _attack_keys_for(tbl.hfn, NBUCKETS, N_ATTACK, rng)
     table = ps.table
     ins = jax.jit(dhash.insert)
     for i in range(0, len(atk), 256):

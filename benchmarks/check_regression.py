@@ -17,7 +17,13 @@ Gate semantics, per leaf key:
   decisions are deterministic arithmetic over a pinned workload, so an
   extra resize — and above all a nonzero flap count, a resize fired
   inside a constant-population hold window — is a hysteresis regression,
-  not noise.
+  not noise.  ``attack_probe_bound`` (BENCH_attack) joins this class:
+  the cuckoo arm's measured worst-case probe depth under the collision
+  flood, capped at ``width - 1`` by the two-table layout — any increase
+  is a layout regression, exact by construction.
+  A gated key that is MISSING from the fresh artifact, or present with a
+  non-numeric type, is itself a failure: a gate that silently skips what
+  it cannot read is no gate.
 * **pass ratios** (``pass_ratio``, ``send_bytes_ratio``,
   ``cliff_ratio``) must not drop by more than ``--ratio-tolerance``
   (default 15%): the fused-vs-jnp advantage, the capped router's
@@ -82,7 +88,8 @@ import json
 import pathlib
 import sys
 
-STRUCTURAL = ("sort", "pallas_call", "passes", "grows", "shrinks", "flaps")
+STRUCTURAL = ("sort", "pallas_call", "passes", "grows", "shrinks", "flaps",
+              "attack_probe_bound")
 RATIOS = ("pass_ratio", "send_bytes_ratio", "cliff_ratio", "recover_ratio",
           "attack_p50_ratio", "recovered_p50_ratio")
 TIMINGS = ("wall_us",)
@@ -106,6 +113,15 @@ def _compare(base, cur, path: str, failures: list[str], *,
     if isinstance(base, bool) or not isinstance(base, (int, float)):
         return  # strings/bools are descriptive, not gated
     key = path.rsplit("/", 1)[-1]
+    gated = key in STRUCTURAL + RATIOS + RATES + TIMINGS
+    if gated and (isinstance(cur, bool) or not isinstance(cur, (int, float))):
+        # a gated metric that changed TYPE (a bench emitting "n/a"/null/a
+        # nested object where the baseline has a number) must fail, not
+        # skip: silently passing here is how a gate rots
+        failures.append(
+            f"{path}: gated metric is {type(cur).__name__} in the current "
+            f"run, expected a number")
+        return
     if key in STRUCTURAL:
         if cur > base:
             failures.append(

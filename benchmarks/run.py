@@ -5,7 +5,8 @@
   fig3_rebuild        paper Fig 3  (rebuild time vs N)
   fig4_portability    paper Fig 4  (implementation-variant axis, see module)
   s62_oversubscribe   paper §6.2   (scaling past saturation)
-  s1_attack           paper §1     (collision attack + live rebuild recovery)
+  s1_attack           paper §1     (collision attack + live rebuild recovery
+                                    + the bounded-probe cuckoo arm)
   moe_router          framework    (DHash hash-router rebalancing)
   kvcache_rehash      framework    (decode latency through live rehash)
 

@@ -35,7 +35,7 @@ def main():
     print(f"rebuilt live -> epoch {int(d.epoch)}, items {int(dhash.count_items(d))}")
 
     # --- modular backends (paper goal 2) -----------------------------------
-    for backend in ("linear", "twochoice", "chain"):
+    for backend in ("linear", "twochoice", "chain", "cuckoo"):
         e = DHashEngine(dhash.make(backend, capacity=2048, chunk=128, seed=1),
                         continuous_rebuild=True)
         for s in range(5):

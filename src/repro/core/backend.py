@@ -46,9 +46,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import buckets, hashing
-from repro.core.buckets import (ChainTable, LinearTable, TwoChoiceTable,
-                                _chain_parts, _tc_rows, batch_winners,
-                                chain_dirty)
+from repro.core.buckets import (ChainTable, CuckooTable, LinearTable,
+                                TwoChoiceTable, _chain_parts, _ck_rows,
+                                _tc_rows, batch_winners, chain_dirty)
 from repro.core.struct_utils import replace
 # Eager (not in-function like the adapters' ops imports): the registry
 # entries below need the cap values at registration time.  Cost is ~0.2s of
@@ -134,6 +134,12 @@ class BucketBackend:
     count_tomb: Callable[..., Any] = None
     probe_cost: Callable[..., Any] = None
     slots_for: Callable[[int], int] | None = None
+    # True for backends whose placement can fail below physical capacity
+    # (twochoice row pairs, cuckoo kick exhaustion): the elastic policy's
+    # in-place mode holds same-shape rehashes until the load drains below
+    # its placement headroom, so a rehash can never park unplaceable keys
+    # in the hazard buffer indefinitely (core/policy.py)
+    bounded_placement: bool = False
     # fused kernel ops
     lookup_fused: Callable[..., Any] | None = None
     lookup_fused_loc: Callable[..., Any] | None = None
@@ -395,6 +401,117 @@ def twochoice_extract_chunk_fused(t: TwoChoiceTable, cursor: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# cuckoo: fused adapters — the twochoice row-gather kernels verbatim, fed
+# side-offset candidate rows (a-rows [0, B), b-rows [B, 2B) of the [2B, W]
+# array).  Same ONE sort + ONE pallas_call per op; only the insert grows a
+# cond-gated bounded kick-out (pure jnp — zero extra kernel launches)
+# ---------------------------------------------------------------------------
+
+def cuckoo_lookup_fused(t: CuckooTable, keys: jax.Array, *,
+                        interpret: bool = True):
+    """Kernel-backed cuckoo lookup via the twochoice row-gather kernel over
+    side-offset rows.  Returns (found, vals, loc)."""
+    from repro.kernels import ops
+    ra, rb = _ck_rows(t, keys)
+    return ops.twochoice_lookup(t.key, t.val, t.state, ra, rb, keys,
+                                interpret=interpret)
+
+
+def cuckoo_insert_fused(t: CuckooTable, keys: jax.Array, vals: jax.Array,
+                        mask: jax.Array, *, interpret: bool = True):
+    """Kernel-backed cuckoo insert: the twochoice claim kernel places every
+    key whose candidate rows have room (max_rounds=2 — one try per side);
+    anything still unplaced escapes to the cond-gated bounded kick-out
+    (kernels/ref.py::cuckoo_kick_ref) — free when nothing overflows."""
+    from repro.kernels import ops, ref
+    winner = batch_winners(keys, mask)
+    ra, rb = _ck_rows(t, keys)
+    tk, tv, ts, ok = ops.twochoice_insert(t.key, t.val, t.state, ra, rb,
+                                          keys, vals, winner,
+                                          max_rounds=2, interpret=interpret)
+    maybe = winner & ~ok
+
+    def kick(op):
+        k, v, s, ok0 = op
+        # re-check presence inside the branch (ok=False means present OR
+        # both rows full; only the latter may relocate)
+        fa, _, _ = ref.tc_row_lookup_ref(k, v, s, ra, keys)
+        fb, _, _ = ref.tc_row_lookup_ref(k, v, s, rb, keys)
+        pend = maybe & ~(fa | fb)
+        k2, v2, s2, done = ref.cuckoo_kick_ref(
+            k, v, s, ra, rb, t.hfn_a, t.hfn_b, t.nbuckets,
+            keys, vals, pend, t.max_kick)
+        return k2, v2, s2, ok0 | done
+
+    tk, tv, ts, ok = jax.lax.cond(maybe.any(), kick, lambda op: op,
+                                  (tk, tv, ts, ok))
+    return replace(t, key=tk, val=tv, state=ts), ok
+
+
+def cuckoo_delete_fused(t: CuckooTable, keys: jax.Array, mask: jax.Array, *,
+                        interpret: bool = True):
+    """Kernel-backed cuckoo delete: the twochoice location-emitting pass +
+    one tombstone scatter."""
+    from repro.kernels import ops
+    winner = batch_winners(keys, mask)
+    ra, rb = _ck_rows(t, keys)
+    state, ok = ops.twochoice_delete(t.key, t.val, t.state, ra, rb, keys,
+                                     winner, interpret=interpret)
+    return replace(t, state=state), ok
+
+
+def cuckoo_ordered_lookup_fused(t_old: CuckooTable, t_new: CuckooTable,
+                                hazard_key: jax.Array, hazard_val: jax.Array,
+                                hazard_live: jax.Array, keys: jax.Array, *,
+                                nres_cap: int = NRES_CAP,
+                                interpret: bool = True):
+    """Kernel-backed cuckoo rebuild-epoch lookup: the twochoice tc_probe2
+    pass (ONE argsort + ONE pallas_call) over side-offset rows."""
+    from repro.kernels import ops
+    ra_o, rb_o = _ck_rows(t_old, keys)
+    ra_n, rb_n = _ck_rows(t_new, keys)
+    return ops.twochoice_ordered_lookup(
+        (t_old.key, t_old.val, t_old.state),
+        (t_new.key, t_new.val, t_new.state),
+        hazard_key, hazard_val, hazard_live,
+        ra_o, rb_o, ra_n, rb_n, keys, nres_cap=nres_cap, interpret=interpret)
+
+
+def cuckoo_ordered_delete_fused(t_old: CuckooTable, t_new: CuckooTable,
+                                hazard_key: jax.Array, hazard_val: jax.Array,
+                                hazard_live: jax.Array, keys: jax.Array,
+                                mask: jax.Array, *, nres_cap: int = NRES_CAP,
+                                interpret: bool = True):
+    """Kernel-backed cuckoo rebuild-epoch delete (paper Alg. 5) via the
+    twochoice probe2 pass over side-offset rows.  Returns the raw
+    (old_state', new_state', hazard_live', ok[Q])."""
+    from repro.kernels import ops
+    winner = batch_winners(keys, mask)
+    ra_o, rb_o = _ck_rows(t_old, keys)
+    ra_n, rb_n = _ck_rows(t_new, keys)
+    return ops.twochoice_ordered_delete(
+        (t_old.key, t_old.val, t_old.state),
+        (t_new.key, t_new.val, t_new.state),
+        hazard_key, hazard_val, hazard_live,
+        ra_o, rb_o, ra_n, rb_n, keys, winner, nres_cap=nres_cap,
+        interpret=interpret)
+
+
+def cuckoo_extract_chunk_fused(t: CuckooTable, cursor: jax.Array, n: int, *,
+                               interpret: bool = True):
+    """Kernel-backed cuckoo rebuild chunk scan on the row-major flattened
+    [2B*W] arrays (the scan order is identical)."""
+    from repro.kernels import ops
+    if n > ops.SLAB:
+        return buckets.cuckoo_extract_chunk(t, cursor, n)
+    state, hk, hv, hl, cur = ops.extract_chunk_fused(
+        t.key.reshape(-1), t.val.reshape(-1), t.state.reshape(-1), cursor,
+        chunk=n, interpret=interpret)
+    return replace(t, state=state.reshape(2 * t.nbuckets, t.width)), \
+        hk, hv, hl, cur
+
+
+# ---------------------------------------------------------------------------
 # chain: fused adapters over the arena-sorted node layout
 # ---------------------------------------------------------------------------
 
@@ -549,6 +666,15 @@ def _make_twochoice(capacity: int, seed, *, load_factor: float = 0.75,
                                   width=bucket_width)
 
 
+def _make_cuckoo(capacity: int, seed, *, load_factor: float = 0.75,
+                 bucket_width: int = 8, max_kick: int = 32) -> CuckooTable:
+    rng = np.random.default_rng(seed)
+    nb = _next_pow2(int(capacity / (load_factor * 2 * bucket_width)) + 1)
+    return buckets.cuckoo_make(nb, hashing.fresh("mix32", rng),
+                               hashing.fresh("mix32", rng),
+                               width=bucket_width, max_kick=max_kick)
+
+
 def _make_chain(capacity: int, seed, *, load_factor: float = 0.75,
                 max_chain: int = 64, nbuckets: int | None = None,
                 dirty_cap: int | None = None) -> ChainTable:
@@ -573,6 +699,13 @@ def _fresh_twochoice(t: TwoChoiceTable, seed) -> TwoChoiceTable:
                                   max_rounds=t.max_rounds)
 
 
+def _fresh_cuckoo(t: CuckooTable, seed) -> CuckooTable:
+    rng = np.random.default_rng(seed)
+    return buckets.cuckoo_make(t.nbuckets, hashing.fresh("mix32", rng),
+                               hashing.fresh("mix32", rng), width=t.width,
+                               max_kick=t.max_kick)
+
+
 def _fresh_chain(t: ChainTable, seed) -> ChainTable:
     return buckets.chain_make(t.nbuckets, t.arena,
                               hashing.fresh("mix32", seed),
@@ -588,6 +721,11 @@ def _reseed_twochoice(t: TwoChoiceTable, salt: jax.Array) -> TwoChoiceTable:
                    hfn_b=hashing.reseed(t.hfn_b, salt + 0x5851F42))
 
 
+def _reseed_cuckoo(t: CuckooTable, salt: jax.Array) -> CuckooTable:
+    return replace(t, hfn_a=hashing.reseed(t.hfn_a, salt),
+                   hfn_b=hashing.reseed(t.hfn_b, salt + 0x5851F42))
+
+
 # ---------------------------------------------------------------------------
 # occupancy / probe telemetry (elastic policy inputs)
 # ---------------------------------------------------------------------------
@@ -597,6 +735,10 @@ def _linear_count_tomb(t: LinearTable) -> jax.Array:
 
 
 def _twochoice_count_tomb(t: TwoChoiceTable) -> jax.Array:
+    return (t.state == buckets.TOMB).sum(dtype=jnp.int32)
+
+
+def _cuckoo_count_tomb(t: CuckooTable) -> jax.Array:
     return (t.state == buckets.TOMB).sum(dtype=jnp.int32)
 
 
@@ -624,6 +766,16 @@ def _twochoice_probe_cost(t: TwoChoiceTable, keys, found, loc) -> jax.Array:
     return jnp.where(found & (loc >= 0), cost, 0).astype(jnp.int32)
 
 
+def _cuckoo_probe_cost(t: CuckooTable, keys, found, loc) -> jax.Array:
+    """Cost = lane depth within the hit's row (loc = row * width + lane),
+    exactly as for twochoice — and here the depth is also the WORST-CASE
+    bound: a key is only ever in one of its two candidate rows, so no
+    lookup, adversarial or not, can cost more than ``width - 1``.  This is
+    the number ``BENCH_attack.json`` gates as ``attack_probe_bound``."""
+    cost = loc % t.width
+    return jnp.where(found & (loc >= 0), cost, 0).astype(jnp.int32)
+
+
 def _chain_probe_cost(t: ChainTable, keys, found, loc) -> jax.Array:
     """Chain depth of the hit: exact offset inside the sorted-arena segment;
     a dirty-tail hit (appended since the last compaction) is charged the
@@ -640,6 +792,10 @@ def _linear_slots_for(capacity: int) -> int:
 
 def _twochoice_slots_for(capacity: int) -> int:
     return _next_pow2(int(capacity / (0.75 * 8)) + 1) * 8   # _make_twochoice
+
+
+def _cuckoo_slots_for(capacity: int) -> int:
+    return 2 * _next_pow2(int(capacity / (0.75 * 2 * 8)) + 1) * 8  # _make_cuckoo
 
 
 def _chain_slots_for(capacity: int) -> int:
@@ -713,6 +869,36 @@ TWOCHOICE = register(BucketBackend(
     extract_chunk_fused=twochoice_extract_chunk_fused,
     ordered_lookup_fused=twochoice_ordered_lookup_fused,
     ordered_delete_fused=twochoice_ordered_delete_fused,
+    bounded_placement=True,
+))
+
+CUCKOO = register(BucketBackend(
+    name="cuckoo",
+    table_cls=CuckooTable,
+    nres_cap=NRES_CAP,
+    dirty_cap=0,
+    make=_make_cuckoo,
+    fresh_like=_fresh_cuckoo,
+    reseed=_reseed_cuckoo,
+    capacity_of=lambda t: 2 * t.nbuckets * t.width,
+    with_state=lambda t, s: replace(t, state=s),
+    lookup=buckets.cuckoo_lookup,
+    insert=buckets.cuckoo_insert,
+    delete=buckets.cuckoo_delete,
+    extract_chunk=buckets.cuckoo_extract_chunk,
+    count_live=buckets.cuckoo_count_live,
+    clear=buckets.cuckoo_clear,
+    count_tomb=_cuckoo_count_tomb,
+    probe_cost=_cuckoo_probe_cost,
+    slots_for=_cuckoo_slots_for,
+    lookup_fused=_drop_loc(cuckoo_lookup_fused),
+    lookup_fused_loc=cuckoo_lookup_fused,
+    insert_fused=cuckoo_insert_fused,
+    delete_fused=cuckoo_delete_fused,
+    extract_chunk_fused=cuckoo_extract_chunk_fused,
+    ordered_lookup_fused=cuckoo_ordered_lookup_fused,
+    ordered_delete_fused=cuckoo_ordered_delete_fused,
+    bounded_placement=True,
 ))
 
 CHAIN = register(BucketBackend(

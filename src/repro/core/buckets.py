@@ -8,6 +8,11 @@ observable set semantics:
                   bounded vectorized probe sequences, no pointers at all.
 * ``twochoice`` — bucketed 2-choice hashing (cuckoo family without eviction):
                   exactly two vector-width bucket reads per lookup.
+* ``cuckoo``    — two-table multilevel double hashing with bounded kick-out:
+                  the twochoice layout split into two hash-function sides,
+                  plus insert-side relocation bounded by ``max_kick`` — the
+                  worst-case-bounded lookup backend (probe depth <= lane
+                  width even under a collision attack).
 * ``chain``     — arena-based chained buckets: the faithful analogue of the
                   paper's Michael-list buckets (insert-at-head, logical
                   deletion via state tags, deferred physical reclamation).
@@ -56,7 +61,7 @@ from repro.core.struct_utils import pytree_dataclass, replace
 I32 = jnp.int32
 EMPTY, LIVE, TOMB, MIGRATED = I32(0), I32(1), I32(2), I32(3)
 
-BACKENDS = ("linear", "twochoice", "chain")
+BACKENDS = ("linear", "twochoice", "chain", "cuckoo")
 
 
 # ---------------------------------------------------------------------------
@@ -325,6 +330,125 @@ def twochoice_clear(t: TwoChoiceTable) -> TwoChoiceTable:
 
 
 # ---------------------------------------------------------------------------
+# cuckoo: two-table multilevel double hashing with bounded kick-out
+# ---------------------------------------------------------------------------
+#
+# The worst-case-bounded backend ("Cascade hash tables" in PAPERS.md;
+# MAX_KICK_OUT/HASH_FUNC_NUM in SNIPPETS.md snippet 1): one [2B, W] slot
+# array split into side A (rows [0, B), addressed by hfn_a) and side B
+# (rows [B, 2B), addressed by hfn_b).  A key lives in exactly one of its two
+# candidate rows, so EVERY lookup is two W-wide row gathers — probe depth is
+# bounded by the lane width no matter how adversarial the key set, which is
+# the defense DURING a collision attack (bench_attack.py); the insert-side
+# relocation is bounded by ``max_kick`` (kernels/ref.py::cuckoo_kick_ref).
+# Because the candidate rows are plain row indices, the fused path reuses
+# the twochoice row-gather kernels VERBATIM with side-offset rows — same
+# 1-sort/1-pallas_call budget, nothing new to lower.
+
+@pytree_dataclass(meta_fields=("nbuckets", "width", "max_kick"))
+class CuckooTable:
+    nbuckets: int     # rows PER SIDE: the slot arrays are [2 * nbuckets, W]
+    width: int
+    max_kick: int     # bounded kick-out iterations (insert relocation)
+    hfn_a: hashing.HashFn
+    hfn_b: hashing.HashFn
+    key: jax.Array    # [2B, W] i32
+    val: jax.Array    # [2B, W] i32
+    state: jax.Array  # [2B, W] i32
+
+
+def cuckoo_make(nbuckets: int, hfn_a: hashing.HashFn, hfn_b: hashing.HashFn,
+                width: int = 8, max_kick: int = 32) -> CuckooTable:
+    def z():
+        return jnp.zeros((2 * nbuckets, width), I32)
+    return CuckooTable(nbuckets=nbuckets, width=width, max_kick=max_kick,
+                       hfn_a=hfn_a, hfn_b=hfn_b, key=z(), val=z(), state=z())
+
+
+def _ck_rows(t: CuckooTable, keys: jax.Array):
+    """The two candidate rows of each key, side-offset into the [2B, W]
+    array: a-rows in [0, B), b-rows in [B, 2B).  Disjoint row ranges are
+    what let every twochoice row-indexed op drive this table unchanged."""
+    ra = hashing.bucket_of(t.hfn_a, keys, t.nbuckets)
+    rb = t.nbuckets + hashing.bucket_of(t.hfn_b, keys, t.nbuckets)
+    return ra, rb
+
+
+def cuckoo_lookup(t: CuckooTable, keys: jax.Array):
+    ra, rb = _ck_rows(t, keys)
+    hit_a = (t.key[ra] == keys[:, None]) & (t.state[ra] == LIVE)   # [Q, W]
+    hit_b = (t.key[rb] == keys[:, None]) & (t.state[rb] == LIVE)
+    fa, fb = hit_a.any(-1), hit_b.any(-1)
+    va, sa = _argpick(hit_a, t.val[ra])
+    vb, sb = _argpick(hit_b, t.val[rb])
+    found = fa | fb
+    val = jnp.where(fa, va, vb)
+    loc = jnp.where(fa, ra * t.width + sa, jnp.where(fb, rb * t.width + sb, -1))
+    return found, val, loc
+
+
+def cuckoo_insert(t: CuckooTable, keys: jax.Array, vals: jax.Array, mask: jax.Array):
+    """Set-semantic insert: the bounded kick-out loop (plan-A free-lane
+    claim / plan-B victim relocation, per-row arbitration) IS the whole
+    placement — its first iterations are exactly the twochoice direct
+    claims, and only genuinely contended rows pay relocation iterations.
+    ok=False iff present or the kick budget exhausts (no resident is ever
+    displaced without a landing slot)."""
+    from repro.kernels import ref
+    winner = batch_winners(keys, mask)
+    present, _, _ = cuckoo_lookup(t, keys)
+    pending = winner & ~present
+    ra, rb = _ck_rows(t, keys)
+
+    def kick(op):
+        k, v, s, done0 = op
+        k2, v2, s2, done = ref.cuckoo_kick_ref(
+            k, v, s, ra, rb, t.hfn_a, t.hfn_b, t.nbuckets,
+            keys, vals, pending, t.max_kick)
+        return k2, v2, s2, done0 | done
+
+    key, val, state, done = jax.lax.cond(
+        pending.any(), kick, lambda op: op,
+        (t.key, t.val, t.state, jnp.zeros(keys.shape, bool)))
+    return replace(t, key=key, val=val, state=state), done
+
+
+def cuckoo_delete(t: CuckooTable, keys: jax.Array, mask: jax.Array):
+    winner = batch_winners(keys, mask)
+    found, _, loc = cuckoo_lookup(t, keys)
+    ok = winner & found
+    nslots = 2 * t.nbuckets * t.width
+    wloc = jnp.where(ok, loc, nslots)
+    state = t.state.reshape(-1).at[wloc].set(TOMB, mode="drop").reshape(
+        2 * t.nbuckets, t.width)
+    return replace(t, state=state), ok
+
+
+def cuckoo_extract_chunk(t: CuckooTable, cursor: jax.Array, n: int):
+    nslots = 2 * t.nbuckets * t.width
+    pos = cursor + jnp.arange(n, dtype=I32)
+    valid = pos < nslots
+    cpos = jnp.where(valid, pos, 0)
+    ks, vs, ss = t.key.reshape(-1), t.val.reshape(-1), t.state.reshape(-1)
+    live = valid & (ss[cpos] == LIVE)
+    hkeys = jnp.where(live, ks[cpos], 0)
+    hvals = jnp.where(live, vs[cpos], 0)
+    ss = ss.at[jnp.where(live, cpos, nslots)].set(MIGRATED, mode="drop")
+    new_cursor = jnp.minimum(cursor + n, nslots)
+    return replace(t, state=ss.reshape(2 * t.nbuckets, t.width)), \
+        hkeys, hvals, live, new_cursor
+
+
+def cuckoo_count_live(t: CuckooTable):
+    return jnp.sum(t.state == LIVE)
+
+
+def cuckoo_clear(t: CuckooTable) -> CuckooTable:
+    z = jnp.zeros((2 * t.nbuckets, t.width), I32)
+    return replace(t, key=z, val=z, state=z)
+
+
+# ---------------------------------------------------------------------------
 # chain: arena-based chained buckets (paper-faithful Michael-list analogue)
 # ---------------------------------------------------------------------------
 
@@ -574,6 +698,9 @@ _MOVED_TO_BACKEND = (
     "twochoice_lookup_fused", "twochoice_insert_fused",
     "twochoice_delete_fused", "twochoice_ordered_lookup_fused",
     "twochoice_ordered_delete_fused", "twochoice_extract_chunk_fused",
+    "cuckoo_lookup_fused", "cuckoo_insert_fused", "cuckoo_delete_fused",
+    "cuckoo_ordered_lookup_fused", "cuckoo_ordered_delete_fused",
+    "cuckoo_extract_chunk_fused",
     "chain_lookup_fused", "chain_insert_fused", "chain_delete_fused",
     "chain_ordered_lookup_fused", "chain_ordered_delete_fused",
     "chain_extract_chunk_fused", "chain_compact_fused",

@@ -77,7 +77,8 @@ BETWEEN_LOOKUP_REPORT_COUNT = 10
 @pytree_dataclass(meta_fields=("grow_load", "expand_headroom", "shrink_factor",
                                "probe_hi", "enlarge_after", "report_every",
                                "min_lookups", "tomb_load", "min_capacity",
-                               "max_capacity", "nres_cap_max", "in_place"))
+                               "max_capacity", "nres_cap_max", "in_place",
+                               "place_headroom"))
 class ElasticPolicy:
     """Pure-pytree elastic-capacity policy (configuration static, state
     arrays vmappable — a stack of tables stacks its policies)."""
@@ -98,6 +99,12 @@ class ElasticPolicy:
     max_capacity: int       # entries ceiling for grow targets
     nres_cap_max: int       # adapt_nres_cap upper bound
     in_place: bool          # True: triggers fire same-shape rehashes only
+    place_headroom: float   # in-place liveness guard for bounded-placement
+                            # backends (``be.bounded_placement``): a
+                            # same-shape rehash only fires while
+                            # live <= place_headroom * slots, so the reload
+                            # into the fresh table cannot strand
+                            # unplaceable keys in the hazard buffer
     # -- device state --
     armed: jax.Array            # bool: hysteresis latch for in-place fires
     want_grow: jax.Array        # bool: plan published for the host poll
@@ -114,13 +121,17 @@ def make(*, grow_load: float = 0.7,
          report_every: int = BETWEEN_LOOKUP_REPORT_COUNT,
          min_lookups: int = 256, tomb_load: float = 0.25,
          min_capacity: int = 64, max_capacity: int = 1 << 22,
-         nres_cap_max: int = 64, in_place: bool = False) -> ElasticPolicy:
+         nres_cap_max: int = 64, in_place: bool = False,
+         place_headroom: float = 0.85) -> ElasticPolicy:
     """Fresh policy with the small_hash.c defaults (armed, no plan)."""
     if not 0.0 < grow_load <= 1.0:
         raise ValueError(f"grow_load must be in (0, 1], got {grow_load}")
     if expand_headroom <= 1.0 or shrink_factor <= 1.0:
         raise ValueError("expand_headroom and shrink_factor must exceed 1 "
                          "(the hysteresis band would be empty)")
+    if not 0.0 < place_headroom <= 1.0:
+        raise ValueError(f"place_headroom must be in (0, 1], "
+                         f"got {place_headroom}")
     return ElasticPolicy(
         grow_load=grow_load, expand_headroom=expand_headroom,
         shrink_factor=shrink_factor, probe_hi=probe_hi,
@@ -128,6 +139,7 @@ def make(*, grow_load: float = 0.7,
         min_lookups=min_lookups, tomb_load=tomb_load,
         min_capacity=min_capacity, max_capacity=max_capacity,
         nres_cap_max=nres_cap_max, in_place=in_place,
+        place_headroom=place_headroom,
         armed=jnp.asarray(True),
         want_grow=jnp.asarray(False), want_shrink=jnp.asarray(False),
         target_capacity=jnp.asarray(min_capacity, I32),
@@ -195,6 +207,15 @@ def policy_step(pol: ElasticPolicy, d: dhash.DHashState, *,
         # same-shape rehash (tombstone reclaim + fresh hash function), with
         # the armed latch as the hysteresis
         fire = idle & armed & (over | probe_hot | tomb_hot)
+        if be.bounded_placement:
+            # liveness guard: a same-shape rehash of a near-saturated
+            # bounded-placement table (twochoice row pairs, cuckoo kick
+            # exhaustion) can fail to place every extracted key under the
+            # fresh hash functions, parking the remainder in the hazard
+            # buffer indefinitely.  Hold the trigger until the load drains
+            # below the placement headroom — the grow plan below still
+            # publishes, so a host that CAN resize escapes the pressure.
+            fire = fire & (live <= I32(int(slots * pol.place_headroom)))
         want_grow = idle & (over | probe_hot)
         want_shrink = idle & under
     else:

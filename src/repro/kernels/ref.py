@@ -4,6 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import hashing
+
 I32 = jnp.int32
 EMPTY, LIVE, TOMB, MIGRATED = 0, 1, 2, 3
 
@@ -280,3 +282,106 @@ def tc_delete_ref(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
     tstate = tstate.reshape(-1).at[jnp.where(ok, loc, b * w)].set(
         TOMB, mode="drop").reshape(b, w)
     return tstate, ok
+
+
+def cuckoo_kick_ref(tkey: jax.Array, tval: jax.Array, tstate: jax.Array,
+                    rows_a: jax.Array, rows_b: jax.Array,
+                    hfn_a, hfn_b, nbuckets: int,
+                    keys: jax.Array, vals: jax.Array, pending: jax.Array,
+                    max_kick: int):
+    """Batched bounded kick-out over the cuckoo table's [2B, W] rows
+    (side A rows [0, B), side B rows [B, 2B); ``rows_a``/``rows_b`` are the
+    two candidate rows of each query, already side-offset).
+
+    Runs exactly ``max_kick`` fixed iterations (the MAX_KICK_OUT idiom of
+    SNIPPETS.md snippet 1, rendered as a batched fori_loop).  Per iteration
+    each still-pending query forms one of two plans:
+
+    * **plan A** — either candidate row has a free lane: claim it (prefer
+      the a-row, matching the insert tie-break);
+    * **plan B** — both rows full: pick a victim lane whose occupant's
+      ALTERNATE row (the other side, under the other hash function)
+      currently has a free lane, move the victim there, and take its lane.
+      The candidate scan order is rotated by the iteration index so two
+      queries fighting over the same rows do not ping-pong on one victim.
+
+    Arbitration is per-ROW: a scatter-min lock over all 2B rows (lowest
+    batch index wins); a query executes only if it owns every row its plan
+    touches (one row for plan A, victim row + alternate row for plan B).
+    Losers simply retry next iteration — the conflict-escape.  Because a
+    resident entry only ever moves INTO a directly-free lane of its own
+    alternate row, no resident is ever evicted without a landing slot: on
+    kick exhaustion only the NEW key reports ok=False.
+
+    Caller contract: ``pending`` is winner-filtered and presence-checked.
+    Returns (tkey', tval', tstate', done[Q]).
+    """
+    b2, w = tkey.shape
+    q = keys.shape[0]
+    idx = jnp.arange(q, dtype=I32)
+    lane_ids = jnp.arange(2 * w, dtype=I32)
+    nslots = b2 * w
+
+    def body(it, carry):
+        key, val, state, pend, done = carry
+        sa, sb = state[rows_a], state[rows_b]              # [Q, W]
+        free_a, free_b = (sa != LIVE).any(-1), (sb != LIVE).any(-1)
+
+        # plan A: direct claim of a free lane (a-row priority)
+        plan_a = pend & (free_a | free_b)
+        row_a_tgt = jnp.where(free_a, rows_a, rows_b)
+        tgt_free = state[row_a_tgt] != LIVE                # [Q, W]
+        lane_a = jnp.argmax(tgt_free, axis=-1)
+
+        # plan B: move a victim whose alternate row has a free lane.
+        # victim candidates are the 2W lanes (a-row lanes then b-row lanes);
+        # a victim parked in side A relocates to B + hb(victim), side B to
+        # ha(victim) — always the other side, so victim row != alt row.
+        vrow = jnp.concatenate([
+            jnp.broadcast_to(rows_a[:, None], (q, w)),
+            jnp.broadcast_to(rows_b[:, None], (q, w))], axis=-1)  # [Q, 2W]
+        vkey = key[vrow, lane_ids % w]                     # [Q, 2W]
+        alt_a = nbuckets + hashing.bucket_of(hfn_b, vkey, nbuckets)
+        alt_b = hashing.bucket_of(hfn_a, vkey, nbuckets)
+        valt = jnp.where(lane_ids[None, :] < w, alt_a, alt_b)
+        cand = (state[vrow, lane_ids % w] == LIVE) \
+            & (state[valt] != LIVE).any(-1)                # [Q, 2W]
+        rot = (lane_ids + it) % (2 * w)
+        sel = rot[jnp.argmax(jnp.take_along_axis(
+            cand, jnp.broadcast_to(rot[None, :], (q, 2 * w)), axis=-1),
+            axis=-1)]
+        plan_b = pend & ~plan_a & cand.any(-1)
+        b_vrow = jnp.take_along_axis(vrow, sel[:, None], axis=-1)[:, 0]
+        b_valt = jnp.take_along_axis(valt, sel[:, None], axis=-1)[:, 0]
+        b_vlane = sel % w
+        b_vkey = jnp.take_along_axis(vkey, sel[:, None], axis=-1)[:, 0]
+
+        # per-row locks: a query owns a row iff it wins the scatter-min on
+        # it; plan A needs its target row, plan B both victim + alt rows
+        lock = jnp.full((b2,), q, I32)
+        lock = lock.at[jnp.where(plan_a, row_a_tgt, b2)].min(idx, mode="drop")
+        lock = lock.at[jnp.where(plan_b, b_vrow, b2)].min(idx, mode="drop")
+        lock = lock.at[jnp.where(plan_b, b_valt, b2)].min(idx, mode="drop")
+        own_a = plan_a & (lock[row_a_tgt % b2] == idx)
+        own_b = plan_b & (lock[b_vrow % b2] == idx) & (lock[b_valt % b2] == idx)
+
+        # plan B execution: victim lands in its alternate row's first free
+        # lane, then the new key takes the vacated lane
+        alt_lane = jnp.argmax(state[b_valt] != LIVE, axis=-1)
+        b_vval = val[b_vrow, b_vlane]
+        mv = jnp.where(own_b, b_valt * w + alt_lane, nslots)
+        key = key.reshape(-1).at[mv].set(b_vkey, mode="drop")
+        val = val.reshape(-1).at[mv].set(b_vval, mode="drop")
+        state = state.reshape(-1).at[mv].set(LIVE, mode="drop")
+
+        won = own_a | own_b
+        wp = jnp.where(own_a, row_a_tgt * w + lane_a,
+                       jnp.where(own_b, b_vrow * w + b_vlane, nslots))
+        key = key.at[wp].set(keys, mode="drop").reshape(b2, w)
+        val = val.at[wp].set(vals, mode="drop").reshape(b2, w)
+        state = state.at[wp].set(LIVE, mode="drop").reshape(b2, w)
+        return key, val, state, pend & ~won, done | won
+
+    init = (tkey, tval, tstate, pending, jnp.zeros((q,), bool))
+    tkey, tval, tstate, _, done = jax.lax.fori_loop(0, max_kick, body, init)
+    return tkey, tval, tstate, done

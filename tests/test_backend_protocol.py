@@ -219,3 +219,61 @@ def test_ordered_ops_contract(name, fused):
     f, v = jax.jit(dhash.lookup)(d, qs)
     expect_f = np.array([int(k) in oracle for k in np.asarray(qs)])
     np.testing.assert_array_equal(np.asarray(f), expect_f)
+
+
+# ---------------------------------------------------------------------------
+# bounded probe depth (the cuckoo defense contract)
+# ---------------------------------------------------------------------------
+
+def _colliding_keys(hfn, nbuckets, want, rng, bucket=0):
+    """``want`` distinct keys that all hash into ``bucket`` under hfn."""
+    from repro.core import hashing
+    got = np.empty((0,), np.int32)
+    while got.size < want:
+        cand = rng.integers(1, 1_000_000_000, 1 << 14).astype(np.int32)
+        b = np.asarray(hashing.bucket_of(hfn, jnp.asarray(cand), nbuckets))
+        got = np.unique(np.concatenate([got, cand[b == bucket]]))
+    return jnp.asarray(got[:want], jnp.int32)
+
+
+def test_cuckoo_probe_depth_bounded_under_collision_flood():
+    """The defense claim as an op contract: flood ONE side-A bucket with
+    3x more colliders than it has lanes.  Kick-out relocation must place
+    them all, and every lookup's loc-derived probe depth stays strictly
+    below the row width (and so trivially below the kick bound) — an
+    adversary cannot build a chain, only fill two rows."""
+    rng = np.random.default_rng(7)
+    be = backend.get("cuckoo")
+    t = be.make(1500, seed=9)
+    normal = jnp.asarray(rng.choice(500_000, 600, replace=False)
+                         .astype(np.int32) + 1)
+    t, ok = jax.jit(be.insert)(t, normal, normal * 3,
+                               jnp.ones(normal.shape, bool))
+    assert bool(ok.all())
+    atk = _colliding_keys(t.hfn_a, int(t.nbuckets), 3 * t.width, rng)
+    t, ok = jax.jit(be.insert)(t, atk, atk * 3, jnp.ones(atk.shape, bool))
+    assert bool(ok.all()), "kick-out must place a modest collider flood"
+
+    qs = jnp.concatenate([normal, atk])
+    f, _, loc = jax.jit(be.lookup)(t, qs)
+    assert bool(f.all())
+    cost = np.asarray(be.probe_cost(t, qs, f, loc))
+    assert int(cost.max()) < t.width, cost.max()
+    assert int(cost.max()) <= t.max_kick
+
+
+def test_probe_cost_extraction_stays_exact_for_linear():
+    """The telemetry the policy trigger feeds on: keys colliding into one
+    home slot of a linear table, inserted in order, must report probe
+    distances exactly 0, 1, 2, ... — not approximations."""
+    be = backend.get("linear")
+    t = be.make(64, seed=2)
+    rng = np.random.default_rng(3)
+    ks = _colliding_keys(t.hfn, t.capacity, 4, rng, bucket=5)
+    for i in range(4):                 # sequential: each lands one deeper
+        t, ok = jax.jit(be.insert)(t, ks[i:i + 1], ks[i:i + 1],
+                                   jnp.ones((1,), bool))
+        assert bool(ok.all())
+    f, _, loc = jax.jit(be.lookup)(t, ks)
+    cost = np.asarray(be.probe_cost(t, ks, f, loc))
+    np.testing.assert_array_equal(cost, np.arange(4))

@@ -1,0 +1,80 @@
+"""The perf gate's own regression tests: doctored BENCH_*.json pairs.
+
+check_regression.py is the only thing standing between a broken fused
+path and a green CI run, so its failure modes are pinned here the same
+way the kernels' are: a baseline/current artifact pair is written to tmp
+dirs and ``main()`` is invoked directly, asserting on the exit status.
+
+The doctored cases cover the silent-skip bugs this gate has grown
+defenses against:
+
+* a gated metric (STRUCTURAL ``attack_probe_bound``) missing from the
+  fresh artifact must fail — a bench that stops emitting a gated number
+  must not pass by omission;
+* a gated metric emitted with the wrong TYPE (``null``, a string, a
+  nested object) must fail, not skip — the old leaf comparison only
+  type-checked the baseline side;
+* a structural increase must fail and a descriptive drift must not.
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks import check_regression
+
+BASE = {
+    "band": 3.0,
+    "recover_ratio": 4.0,
+    "attack_probe_bound": 7,
+    "split_stuck_x": 1.14,          # descriptive: not in any gate class
+    "throughput_mlups": {"dhash_before": 6.6},
+}
+
+
+def _run(tmp_path, base, cur):
+    bdir, cdir = tmp_path / "base", tmp_path / "cur"
+    bdir.mkdir(exist_ok=True), cdir.mkdir(exist_ok=True)
+    (bdir / "BENCH_attack.json").write_text(json.dumps(base))
+    if cur is not None:
+        (cdir / "BENCH_attack.json").write_text(json.dumps(cur))
+    return check_regression.main(
+        ["--baseline-dir", str(bdir), "--current-dir", str(cdir)])
+
+
+def test_identical_artifacts_pass(tmp_path):
+    assert _run(tmp_path, BASE, BASE) == 0
+
+
+def test_missing_gated_key_fails(tmp_path):
+    cur = {k: v for k, v in BASE.items() if k != "attack_probe_bound"}
+    assert _run(tmp_path, BASE, cur) == 1
+
+
+def test_gated_key_with_wrong_type_fails(tmp_path):
+    for bad in (None, "n/a", {"max": 7}, True):
+        assert _run(tmp_path, BASE, dict(BASE, attack_probe_bound=bad)) == 1
+
+
+def test_structural_increase_fails(tmp_path):
+    assert _run(tmp_path, BASE, dict(BASE, attack_probe_bound=8)) == 1
+
+
+def test_structural_decrease_passes(tmp_path):
+    assert _run(tmp_path, BASE, dict(BASE, attack_probe_bound=3)) == 0
+
+
+def test_ratio_regression_fails_and_band_is_honoured(tmp_path):
+    # recover_ratio is a higher-is-better RATIO under the default 15% band
+    assert _run(tmp_path, BASE, dict(BASE, recover_ratio=1.0)) == 1
+    assert _run(tmp_path, BASE, dict(BASE, recover_ratio=3.7)) == 0
+
+
+def test_descriptive_drift_passes(tmp_path):
+    # split_stuck_x is reported, not gated; throughput rows likewise
+    cur = dict(BASE, split_stuck_x=99.0,
+               throughput_mlups={"dhash_before": 0.001})
+    assert _run(tmp_path, BASE, cur) == 0
+
+
+def test_missing_artifact_fails(tmp_path):
+    assert _run(tmp_path, BASE, None) == 1

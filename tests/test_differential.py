@@ -1,6 +1,6 @@
 """Differential op-sequence fuzz suite: random interleavings of
 insert / delete / lookup / rebuild-start / rebuild-step checked against a
-Python dict oracle, across ALL THREE backends x fused on/off x growth
+Python dict oracle, across ALL FOUR backends x fused on/off x growth
 factors 1x/4x.
 
 This is the acceptance harness for the fused chain backend (the last
@@ -81,7 +81,7 @@ CORPUS = [
      (OP_LOOKUP, [1, 2, 3, 4, 5, 6, 7, 8])],
 ]
 
-BACKEND_PARAMS = [(b, f) for b in ("linear", "twochoice", "chain")
+BACKEND_PARAMS = [(b, f) for b in ("linear", "twochoice", "chain", "cuckoo")
                   for f in (False, True)]
 
 

@@ -314,6 +314,28 @@ def test_write_kernels_budget():
     assert _count_primitives(jx, ("sort", "pallas_call")) == \
         {"sort": 1, "pallas_call": 1}
 
+    # cuckoo rides the SAME two-row kernels with side-offset rows, and its
+    # conflict-escape kick loop lives behind a cond: the fused lookup holds
+    # the identical 1-sort / 1-pallas_call budget, and the fused insert's
+    # counts EQUAL the twochoice adapter's (batch_winners' lexsort + the
+    # claim kernel's sort) — the kick adds zero sorts and zero launches
+    from repro.core import backend as _backend
+    ckt = buckets.cuckoo_make(1 << 8, hashing.fresh("mix32", 3),
+                              hashing.fresh("mix32", 4), width=8)
+    jx = jax.make_jaxpr(_backend.cuckoo_lookup_fused)(ckt, keys)
+    assert _count_primitives(jx, ("sort", "pallas_call")) == \
+        {"sort": 1, "pallas_call": 1}
+
+    jx = jax.make_jaxpr(
+        lambda t, k, v, m: _backend.twochoice_insert_fused(t, k, v, m))(
+        tc, keys, keys * 2, mask)
+    tc_budget = _count_primitives(jx, ("sort", "pallas_call"))
+    jx = jax.make_jaxpr(
+        lambda t, k, v, m: _backend.cuckoo_insert_fused(t, k, v, m))(
+        ckt, keys, keys * 2, mask)
+    assert _count_primitives(jx, ("sort", "pallas_call")) == tc_budget
+    assert tc_budget["pallas_call"] == 1
+
 
 @pytest.mark.parametrize("cursor", [0, 100, 4_000, 4_090, 8_100])
 def test_extract_chunk_fused_matches_jnp(cursor):
@@ -374,12 +396,12 @@ def test_ordered_delete_fused_matches_staged():
 
 
 @pytest.mark.parametrize("backend,fused", [
-    ("linear", True), ("twochoice", True), ("chain", True),
+    ("linear", True), ("twochoice", True), ("chain", True), ("cuckoo", True),
     ("chain", False),
 ])
 def test_delete_extract_land_parity_all_backends(backend, fused):
     """The full write surface (delete + extract + land + swap) against a
-    dict oracle for every backend — all three on the fused kernels, plus
+    dict oracle for every backend — all four on the fused kernels, plus
     chain on the jnp reference path (the fused chain's fallback target)."""
     rng = np.random.default_rng(3)
     d = dhash.make(backend, capacity=512, chunk=64, seed=7, fused=fused)

@@ -4,7 +4,7 @@ Covers the four behaviours the policy layer promises (core/policy.py):
 
 * hysteresis — a table sitting exactly AT the high watermark never fires,
   one past it fires exactly once, and the fired latch stays down while the
-  load holds (no flap at the boundary), across all three backends;
+  load holds (no flap at the boundary), across all registered backends;
 * the expensive-lookup counter — host-precomputed colliding keys drive the
   probe-length telemetry past ``enlarge_after / report_every`` and trigger
   growth with the load far BELOW the watermark (fused on and off);
@@ -12,7 +12,11 @@ Covers the four behaviours the policy layer promises (core/policy.py):
   remaining keys survive the migration;
 * per-tenant independence — on an 8-table stack only the overloaded
   tenants fire, their latches drop independently, and every tenant's keys
-  stay readable (all three backends, fused on and off).
+  stay readable (all registered backends, fused on and off);
+* the in-place liveness guard — a bounded-placement backend above the
+  placement headroom holds the same-shape rehash trigger (still
+  publishing the resize plan) until the load drains, closing the PR 7
+  stranded-hazard-key caveat.
 """
 from __future__ import annotations
 
@@ -186,6 +190,68 @@ def test_tombstone_pressure_fires_reclaim_inside_band():
 
 
 # ---------------------------------------------------------------------------
+# in-place liveness guard for bounded-placement backends
+# ---------------------------------------------------------------------------
+
+def test_in_place_rehash_deferred_past_placement_headroom():
+    """The PR 7 liveness caveat, closed: in in-place mode a bounded-
+    placement backend (twochoice here; cuckoo gets the same guard) sitting
+    above ``place_headroom`` must NOT fire a same-shape rehash — reloading
+    a near-saturated table under fresh hash functions can strand
+    unplaceable keys in the hazard buffer indefinitely.  The held trigger
+    fires once the load drains below the headroom, and the epoch then
+    completes with an EMPTY hazard buffer."""
+    d = dhash.make("twochoice", capacity=600, chunk=128, seed=2, fused=False)
+    be = backends.get(d.backend)
+    assert be.bounded_placement
+    slots = be.capacity_of(d.old)
+    pol = elastic.make(grow_load=0.3, in_place=True, tomb_load=1.0)
+    headroom = int(slots * pol.place_headroom)
+    high, _ = elastic.watermarks(pol, slots)
+    target = headroom + 30        # past the watermark AND the guard
+    assert high < headroom < target < slots
+    d, keys = _fill_to(d, target)
+
+    for _ in range(5):            # hot but unsafe: held, never fired
+        pol, d = elastic.policy_step(pol, d)
+    assert int(pol.fires) == 0
+    assert not bool(jax.device_get(d.rebuilding))
+    assert bool(pol.want_grow), "the resize plan must still publish"
+
+    # drain below the headroom (but not below the watermark): the held
+    # trigger fires and the reload now COMPLETES
+    safe = high + 33
+    d, ok = dhash.delete(d, jnp.asarray(keys[:target - safe], jnp.int32))
+    assert bool(ok.all()) and _live(d) == safe
+    pol, d = elastic.policy_step(pol, d)
+    assert int(pol.fires) == 1 and bool(jax.device_get(d.rebuilding))
+    d = _complete_rebuild(d)      # raises if the epoch stalls
+    assert int(jax.device_get(d.epoch)) == 1
+    assert not bool(jax.device_get(d.hazard_live.any())), \
+        "same-shape rehash parked keys in the hazard buffer"
+    kept = jnp.asarray(keys[target - safe:], jnp.int32)
+    found, vals = dhash.lookup(d, kept)
+    assert bool(found.all()) and bool((vals == kept).all())
+
+
+def test_unbounded_backend_unaffected_by_placement_guard():
+    """Open-addressing placement cannot fail below physical capacity, so
+    the linear backend fires in-place rehashes above the headroom exactly
+    as before the guard."""
+    d = dhash.make("linear", capacity=64, chunk=32, seed=0, fused=False)
+    be = backends.get(d.backend)
+    assert not be.bounded_placement
+    slots = be.capacity_of(d.old)
+    pol = elastic.make(grow_load=0.5, in_place=True, tomb_load=1.0)
+    target = int(slots * pol.place_headroom) + 5
+    d, _ = _fill_to(d, target)
+    pol, d = elastic.policy_step(pol, d)
+    assert int(pol.fires) == 1 and bool(jax.device_get(d.rebuilding))
+    d = _complete_rebuild(d)
+    assert not bool(jax.device_get(d.hazard_live.any()))
+
+
+# ---------------------------------------------------------------------------
 # expensive-lookup trigger (probe-length telemetry)
 # ---------------------------------------------------------------------------
 
@@ -307,10 +373,11 @@ def test_stack_tenants_fire_independently(name, fused):
     be = backends.get(name)
     slots = int(be.capacity_of(jax.tree_util.tree_map(lambda x: x[0], d).old))
     # grow_load=0.5: past-the-watermark tenants must complete a SAME-SHAPE
-    # rehash, and near saturation a bounded-placement backend (twochoice)
-    # can legitimately park unplaceable keys in the hazard buffer instead
-    # of finishing (see docs/KERNELS.md) — the behaviour under test here is
-    # per-tenant independence, so keep the reload comfortably placeable
+    # rehash.  The in-place placement-headroom guard (place_headroom) holds
+    # the trigger for bounded-placement backends above 85% load, and a
+    # reload can strand keys well below that (see docs/KERNELS.md) — the
+    # behaviour under test here is per-tenant independence, so keep the
+    # reload comfortably placeable AND below the guard
     cfg = elastic.make(grow_load=0.5, in_place=True, tomb_load=1.0)
     pol = elastic.stack(cfg, T)
     high, low = elastic.watermarks(cfg, slots)
@@ -321,8 +388,8 @@ def test_stack_tenants_fire_independently(name, fused):
     nxt = 1
     for _ in range(12):   # top up with FRESH keys: an unplaceable key (full
         live = np.asarray(jax.device_get(jax.vmap(be.count_live)(d.old)))
-        need = target - live                # twochoice row pair) never
-        if (need <= 0).all():               # lands however often retried
+        need = target - live                # twochoice/cuckoo row pair)
+        if (need <= 0).all():               # never lands however retried
             break
         q = int(need.max())
         keys = np.zeros((T, q), np.int32)
