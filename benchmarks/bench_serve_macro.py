@@ -36,7 +36,12 @@ calibration runs rather than one sample; the failure this floors, a
 blocking rehash, moves them ~50x), per-phase
 ``miss_rate`` and the replay-wide
 ``alloc_fail_rate`` (RATE — bit-deterministic for the pinned seeds), and
-the per-step sort/pallas_call budgets (STRUCTURAL).  The p99 and cacheop
+the per-step sort/pallas_call budgets (STRUCTURAL).  A second, compact
+``cuckoo`` leg re-runs the whole replay with
+``prefix_backend="cuckoo"`` and gates ITS attack-phase decode-flatness
+ratios too (``cuckoo/attack_p50_ratio``, ``cuckoo/recovered_p50_ratio``)
+— the bounded-probe backend must stay flat under the same flood without
+relying on the chain geometry.  The p99 and cacheop
 figures (``recovered_p99_ratio``, ``attack_cacheop_x``,
 ``recovered_cacheop_x``) are reported but NOT gated: a p99 of ~200
 samples swings ~2x run-to-run, which no fixed tolerance separates from
@@ -216,8 +221,11 @@ def _budgets(eng, cfg, sc):
             "admission_budget": adm}
 
 
-def run(*, n_per_phase=16, n_families=12, prefix_backend="chain",
-        quiet=False, out_path=None):
+def _replay(*, n_per_phase=16, n_families=12, prefix_backend="chain",
+            quiet=False):
+    """One full four-phase replay against the given fingerprint-index
+    backend; returns the per-phase stats + ratios + budgets (no artifact
+    I/O — ``run`` composes the chain and cuckoo legs into one file)."""
     import jax
     import jax.numpy as jnp
 
@@ -239,7 +247,7 @@ def run(*, n_per_phase=16, n_families=12, prefix_backend="chain",
     _drain(eng)
     probe.take()
 
-    result = {"band": 3.0, "ratio_band": 0.35}
+    result = {}
     phases = {}
     c = _counters(eng)
 
@@ -323,24 +331,53 @@ def run(*, n_per_phase=16, n_families=12, prefix_backend="chain",
     assert eng.prefix_epoch >= 1, "fingerprint-index rehash never completed"
     assert (eng.kv.prefix.refcnt >= 0).all(), "refcount went negative"
 
-    out = (pathlib.Path(out_path) if out_path
-           else _REPO_ROOT / "BENCH_serve_macro.json")
-    out.write_text(json.dumps(result, indent=2) + "\n")
-
     if not quiet:
         for name, p in phases.items():
-            print(f"{name:10s} decode p50 {p['p50_ms']:6.1f}ms p99 "
+            print(f"{prefix_backend}/{name:10s} decode p50 "
+                  f"{p['p50_ms']:6.1f}ms p99 "
                   f"{p['p99_ms']:6.1f}ms | cacheop p50 "
                   f"{p['cacheop_p50_ms']:7.1f}ms p99 "
                   f"{p['cacheop_p99_ms']:7.1f}ms | miss {p['miss_rate']:.3f} "
                   f"evict {p['evictions']:3d}")
         victims = sum(p["evictions"] for p in phases.values())
-        print(f"[summary] attack hits the cache-op tail "
+        print(f"[{prefix_backend}] attack hits the cache-op tail "
               f"{result['attack_cacheop_x']:.1f}x; live rehash brings it to "
               f"{result['recovered_cacheop_x']:.1f}x of steady while decode "
               f"p50 stays {result['recovered_p50_ratio']:.2f}x; "
               f"{eng.publishes} blocks published into {sc.n_pages} pages "
               f"({victims} victims), 0 alloc failures; wall {wall:.0f}s")
+    return result
+
+
+def run(*, n_per_phase=16, n_families=12, prefix_backend="chain",
+        quiet=False, out_path=None):
+    result = {"band": 3.0, "ratio_band": 0.35}
+    result.update(_replay(n_per_phase=n_per_phase, n_families=n_families,
+                          prefix_backend=prefix_backend, quiet=quiet))
+
+    # cuckoo leg: the SAME replay against the bounded-probe fingerprint
+    # index.  The attack floods one side-A row where it cannot build a
+    # chain, so decode flatness must hold there too — its attack-phase p50
+    # ratio is gated (RATIOS, under this artifact's ratio_band) alongside
+    # the chain leg's; cacheop figures stay descriptive.
+    cuck = _replay(n_per_phase=n_per_phase, n_families=n_families,
+                   prefix_backend="cuckoo", quiet=True)
+    result["cuckoo"] = {
+        "attack_p50_ratio": cuck["attack_p50_ratio"],
+        "recovered_p50_ratio": cuck["recovered_p50_ratio"],
+        "attack_cacheop_x": cuck["attack_cacheop_x"],
+        "recovered_cacheop_x": cuck["recovered_cacheop_x"],
+        "alloc_fail_rate": cuck["alloc_fail_rate"],
+        "prefix_epochs": cuck["prefix_epochs"],
+    }
+    if not quiet:
+        print(f"[summary] cuckoo leg decode flatness: attack p50 "
+              f"{result['cuckoo']['attack_p50_ratio']:.2f}x, recovered "
+              f"{result['cuckoo']['recovered_p50_ratio']:.2f}x")
+
+    out = (pathlib.Path(out_path) if out_path
+           else _REPO_ROOT / "BENCH_serve_macro.json")
+    out.write_text(json.dumps(result, indent=2) + "\n")
     return result
 
 

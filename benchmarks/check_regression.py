@@ -20,15 +20,20 @@ Gate semantics, per leaf key:
   not noise.  ``attack_probe_bound`` (BENCH_attack) joins this class:
   the cuckoo arm's measured worst-case probe depth under the collision
   flood, capped at ``width - 1`` by the two-table layout — any increase
-  is a layout regression, exact by construction.
+  is a layout regression, exact by construction.  ``adversarial_sorts`` /
+  ``adversarial_pallas_calls`` (routed-stack bench) pin the single-pass
+  spill-slab guarantee where it matters most: a 100%-one-tenant batch
+  must still lower to 1 sort + 1 pallas_call — an increase means the
+  full-width retry (or any second pass) crept back in.
   A gated key that is MISSING from the fresh artifact, or present with a
   non-numeric type, is itself a failure: a gate that silently skips what
   it cannot read is no gate.
 * **pass ratios** (``pass_ratio``, ``send_bytes_ratio``,
   ``cliff_ratio``) must not drop by more than ``--ratio-tolerance``
-  (default 15%): the fused-vs-jnp advantage, the capped router's
-  wire-bytes reduction (full-width buffer bytes over capped, T/c — the
-  routed-stack bench), and the elastic scenario's worst-phase-over-steady
+  (default 15%): the fused-vs-jnp advantage, the slab router's wire-bytes
+  reduction (full-width buffer bytes over primary+slab,
+  Q/(cap + spill_cap) — the routed-stack bench, slab columns counted),
+  and the elastic scenario's worst-phase-over-steady
   throughput floor are acceptance criteria.  ``cliff_ratio`` divides two
   min-of-steps walls from the SAME run, so host contention largely
   cancels out of it.  The attack/serving recovery ratios join this class:
@@ -43,12 +48,15 @@ Gate semantics, per leaf key:
   gated: an extreme quantile of ~200 samples swings ~2x run-to-run on
   shared runners, which no fixed tolerance separates from regression.
 * **escape rates** (``escape_rate``, ``overflow_rate``, ``miss_rate``,
-  ``alloc_fail_rate``) are lower-is-better fractions — rebuild-epoch
-  queries overflowing to the jnp fallback (growth-escape bench),
-  zipf-batch keys past their tenant's routing cap (routed-stack bench;
-  deterministic for the pinned seed), the serving macro-bench's per-phase
-  prefix-cache miss rate, and its page-allocation failure rate (baseline
-  0.0: eviction, not alloc failure, must absorb pool pressure).  They
+  ``alloc_fail_rate``, ``dropped_rate``) are lower-is-better fractions —
+  rebuild-epoch queries overflowing to the jnp fallback (growth-escape
+  bench), zipf-batch keys past their tenant's primary cap (routed-stack
+  bench; slab pressure, deterministic for the pinned seed), keys past
+  primary AND spill slab (``dropped_rate``, baseline 0.0: the slab is
+  sized to serve the whole zipf spill — nonzero means the slab shrank or
+  the accounting broke), the serving macro-bench's per-phase prefix-cache
+  miss rate, and its page-allocation failure rate (baseline 0.0:
+  eviction, not alloc failure, must absorb pool pressure).  They
   must not exceed the baseline by more than ``--rate-tolerance`` ABSOLUTE
   (default 0.02 — a 0.00 baseline allows up to 0.02, so benign hash-seed
   jitter passes but a coverage regression in the two-level tile map
@@ -89,11 +97,13 @@ import pathlib
 import sys
 
 STRUCTURAL = ("sort", "pallas_call", "passes", "grows", "shrinks", "flaps",
-              "attack_probe_bound")
+              "attack_probe_bound", "adversarial_sorts",
+              "adversarial_pallas_calls")
 RATIOS = ("pass_ratio", "send_bytes_ratio", "cliff_ratio", "recover_ratio",
           "attack_p50_ratio", "recovered_p50_ratio")
 TIMINGS = ("wall_us",)
-RATES = ("escape_rate", "overflow_rate", "miss_rate", "alloc_fail_rate")
+RATES = ("escape_rate", "overflow_rate", "miss_rate", "alloc_fail_rate",
+         "dropped_rate")
 
 
 def _compare(base, cur, path: str, failures: list[str], *,

@@ -154,9 +154,15 @@ def routed_stack():
     r = run_routed_stack(quiet=True)
     for t in (8, 64):
         row = r[f"t{t}"]
-        _row(f"routed_stack/t{t}/cap{row['cap']}", row["wall_us"],
-             f"{row['send_bytes_ratio']:.0f}x_fewer_send_bytes_"
-             f"{row['overflow_rate']:.4f}_overflow")
+        _row(f"routed_stack/t{t}/cap{row['cap']}+slab{row['spill_cap']}",
+             row["wall_us"],
+             f"{row['send_bytes_ratio']:.2f}x_fewer_send_bytes_"
+             f"{row['overflow_rate']:.4f}_overflow_"
+             f"{row['dropped_rate']:.4f}_dropped")
+        # the adversarial 100%-skew arm: single-pass even under total skew
+        _row(f"routed_stack/t{t}/adversarial", 0.0,
+             f"{row['adversarial_sorts']}sorts_"
+             f"{row['adversarial_pallas_calls']}pallas_no_retry")
 
 
 TABLES = [fig2_throughput, fig3_rebuild, fig4_portability, s62_oversubscribe,
@@ -168,7 +174,8 @@ TABLES = [fig2_throughput, fig3_rebuild, fig4_portability, s62_oversubscribe,
 def quick() -> None:
     """CI smoke mode: exercises the perf harness end-to-end in minutes —
     the fused-probe, fused-writes, chain-fused, growth-escape, table-stack,
-    routed-stack, elastic-burst, collision-attack, and serving-macro
+    routed-stack (zipf + adversarial 100%-skew slab arms), elastic-burst,
+    collision-attack, and serving-macro
     acceptance checks (pass counts + escape rates + resize/flap counts +
     recovery/latency ratios + their BENCH_*.json artifacts) plus a tiny
     fig3 rebuild sweep and a shrunk §6.2 oversubscription sweep so perf

@@ -21,9 +21,19 @@ pallas_call total, the same budget as an unrouted op).
 ``cap=None`` (baseline) uses cap=Q — overflow-proof even under a fully
 adversarial key set (every key owned by one shard — the paper's collision
 attack) at S x the wire bytes.  The capped path uses
-``cap = ceil(c·Q/S)``; keys past an owner's cap are reported via EXACT
-per-owner overflow counts so callers can run a bounded full-width retry
-(see serving/kvcache.py) instead of silently dropping them.
+``cap = ceil(c·Q/S)`` plus a **two-level spill slab**: keys past an
+owner's cap are re-routed — in the SAME single pass — into ``spill_cap``
+extra columns of the same buffer, shared across owners by global spill
+rank (HashGraph's counting layout applied one level down: the exact
+histogram already sizes the overflow region, so no second dispatch is
+ever needed).  Because total spill over any batch is bounded by
+``Q - cap`` (k overflowing owners spill at most ``Q - k*cap`` keys),
+``spill_cap = Q - cap`` makes the capped layout overflow-PROOF; smaller
+slabs (``route_spill_cap`` with a ``slack`` budget) trade width for an
+exactly-accounted ``dropped`` count — keys beyond primary+slab are
+reported per owner, never silently lost.  The cond-gated full-width
+retry this replaces is gone from the contract: a spilling batch costs
+the same ONE routed op as a balanced one.
 
 These functions are written to be called INSIDE ``jax.shard_map`` with the
 table sharded (one leaf-shard per device along ``axis``) and queries sharded
@@ -33,6 +43,7 @@ backend — fused or jnp — shards without changes here.
 """
 from __future__ import annotations
 
+import math
 from typing import Callable, NamedTuple
 
 import jax
@@ -54,43 +65,91 @@ def _axis_size(axis) -> int:
 
 
 class Route(NamedTuple):
-    """The routing layout of one batch: the [S, cap] send buffers plus the
-    per-key coordinates that invert them, and exact overflow accounting."""
-    send: jax.Array      # [S, cap] keys, owner-grouped, zero-padded
-    smask: jax.Array     # [S, cap] bool: slot carries a kept key
+    """The routing layout of one batch: the [S, cap + spill_cap] send
+    buffer (primary columns + shared spill-slab columns) plus the per-key
+    coordinates that invert it, and exact overflow/drop accounting."""
+    send: jax.Array      # [S, cap + spill_cap] keys: owner-grouped primary
+                         # columns, then slab columns shared by spill rank
+    smask: jax.Array     # [S, cap + spill_cap] bool: slot carries a key
     owner: jax.Array     # [Q] i32 owner of each key (batch order)
     rank: jax.Array      # [Q] i32 arrival rank within its owner (stable)
-    kept: jax.Array      # [Q] bool: rank < cap (routed on the first pass)
+    kept: jax.Array      # [Q] bool: rank < cap (primary columns)
     overflow: jax.Array  # [S] i32 EXACT per-owner spill: max(hist - cap, 0)
+    cap: int             # static primary width
+    spill_cap: int       # static slab width
+    spill_rank: jax.Array  # [Q] i32 global rank among spilled keys (stable;
+                           # meaningless where ``kept``)
+    served: jax.Array    # [Q] bool: kept | (spilled & spill_rank < spill_cap)
+    slab_owner: jax.Array  # [spill_cap] i32 explicit owner id of each slab
+                           # column (-1: column empty this batch)
+    dropped: jax.Array   # [S] i32 EXACT per-owner keys beyond primary+slab
 
 
 def route_cap(cap_factor: float, q: int, nshards: int) -> int:
     """The capped-dispatch buffer width ``cap = ceil(c·Q/S)``, clamped to
-    [1, Q].  ``cap_factor <= 0`` means the overflow-proof full width."""
+    [1, Q].  ``cap_factor <= 0`` means the overflow-proof full width.
+
+    The ceil is taken on the full product ``c·Q/S`` (``math.ceil``, the one
+    place this is computed) — truncating the float product to int first
+    (the old ``int(c*q)`` idiom) understates the cap by 1 whenever the
+    product carries a fractional part into the division."""
     if cap_factor <= 0:
         return q
-    return min(q, max(1, -(-int(cap_factor * q) // nshards)))
+    return min(q, max(1, math.ceil(cap_factor * q / nshards)))
+
+
+def route_spill_cap(q: int, cap: int, slack: float | None = None) -> int:
+    """Spill-slab width for a [Q] batch routed at ``cap`` per owner.
+
+    Total spill over ANY batch is bounded by ``Q - cap``: if k owners
+    overflow they keep ``k*cap`` keys in primary columns, spilling at most
+    ``Q - k*cap <= Q - cap`` (k >= 1).  So the default (``slack=None``)
+    returns ``Q - cap`` — an overflow-PROOF slab: every spilled key of
+    every possible batch lands in the buffer and the router never drops.
+
+    A ``slack`` budget in (0, 1) sizes a compact slab ``ceil(slack·Q)``
+    instead (clamped to the overflow-proof bound): width shrinks to
+    ``cap + slack·Q``, and keys whose global spill rank exceeds the slab
+    are counted EXACTLY in ``Route.dropped`` — callers choosing a compact
+    slab observe every key it cannot carry.  ``slack >= 1`` is the
+    overflow-proof bound again; ``slack <= 0`` disables the slab (pure
+    capped layout)."""
+    worst = max(q - cap, 0)
+    if slack is None:
+        return worst
+    if slack <= 0:
+        return 0
+    return min(worst, math.ceil(slack * q))
 
 
 def _route(keys: jax.Array, owner: jax.Array, nshards: int,
-           cap: int | None = None) -> Route:
-    """Group keys by owner into a [S, cap] send buffer — two-pass counting
-    sort, no ``sort`` primitive:
+           cap: int | None = None, spill_cap: int = 0) -> Route:
+    """Group keys by owner into a [S, cap + spill_cap] send buffer — a
+    two-level single-pass counting sort, no ``sort`` primitive:
 
     * pass 1: per-owner histogram + stable rank-within-owner via a running
       one-hot count (O(Q·S) vectorized work, the MoE dispatch idiom —
       cheap for mesh/tenant-scale S, and it removes the router's argsort
-      from every routed op's budget);
-    * pass 2: scatter key i to ``send[owner[i], rank[i]]`` — with a fixed
-      cap the exclusive prefix sum of the capped histogram is the row
-      stride, so the 2-D scatter IS the prefix-summed placement.
+      from every routed op's budget), plus a global rank among spilled
+      keys (one more cumsum) for the slab;
+    * pass 2: ONE scatter places key i at column ``rank[i]`` of its
+      owner's row if ``rank < cap`` (primary), else at column
+      ``cap + spill_rank[i]`` (slab).  Slab columns are SHARED across
+      owners by global spill rank — the exact histogram bounds total
+      spill at ``Q - cap``, so ``spill_cap = Q - cap`` (the
+      ``route_spill_cap`` default) carries every possible overflow —
+      and each slab column's owner is recorded in ``slab_owner``.
 
-    Keys with ``rank >= cap`` are NOT silently zeroed: ``kept`` marks them
-    and ``overflow[s] = max(hist[s] - cap, 0)`` counts them exactly, so
-    callers can cond-gate a full-width retry on ``overflow.sum() > 0``.
-    """
+    Primary and slab are concatenated columns of ONE buffer, so a routed
+    op on a spilling batch costs exactly what a balanced batch costs —
+    there is no second pass to retry into.  Keys beyond primary+slab
+    (compact slabs only) are NOT silently zeroed: ``served`` marks every
+    key the buffer carries, ``overflow[s] = max(hist[s] - cap, 0)`` counts
+    spill exactly, and ``dropped[s]`` counts the slab's exact per-owner
+    shortfall."""
     q = keys.shape[0]
     cap = q if cap is None else cap
+    spill_cap = 0 if cap >= q else min(spill_cap, q - cap)
     owner = owner.astype(I32)
     onehot = (owner[:, None] == jnp.arange(nshards, dtype=I32)[None, :]
               ).astype(I32)
@@ -98,34 +157,53 @@ def _route(keys: jax.Array, owner: jax.Array, nshards: int,
     rank = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - 1,
                                owner[:, None], axis=1)[:, 0]      # [Q]
     kept = rank < cap
-    # out-of-cap ranks scatter out of bounds and mode="drop" discards them
-    send = jnp.zeros((nshards, cap), keys.dtype).at[owner, rank].set(
-        keys, mode="drop")
-    smask = jnp.zeros((nshards, cap), bool).at[owner, rank].set(
-        kept, mode="drop")
+    spilled = ~kept
+    spill_rank = jnp.cumsum(spilled.astype(I32)) - 1              # [Q]
+    served = kept | (spilled & (spill_rank < spill_cap))
+    # primary keys land at their owner rank, spilled keys at the shared
+    # slab column for their global spill rank; anything past the slab
+    # scatters out of bounds and mode="drop" discards it
+    col = jnp.where(kept, rank, cap + spill_rank)
+    send = jnp.zeros((nshards, cap + spill_cap), keys.dtype).at[
+        owner, col].set(keys, mode="drop")
+    smask = jnp.zeros((nshards, cap + spill_cap), bool).at[
+        owner, col].set(served, mode="drop")
     overflow = jnp.maximum(hist - cap, 0)
-    return Route(send, smask, owner, rank, kept, overflow)
+    slab_owner = jnp.full((spill_cap,), -1, I32).at[
+        jnp.where(spilled, spill_rank, spill_cap)].set(owner, mode="drop")
+    dropped = (onehot * (spilled & ~served).astype(I32)[:, None]).sum(axis=0)
+    return Route(send, smask, owner, rank, kept, overflow,
+                 cap, spill_cap, spill_rank, served, slab_owner, dropped)
+
+
+def _route_col(rt: Route) -> jax.Array:
+    """Per-key column in the [S, cap + spill_cap] layout (out of bounds for
+    keys the buffer does not carry — pair with mode="drop" / ``served``)."""
+    return jnp.where(rt.kept, rt.rank, rt.cap + rt.spill_rank)
 
 
 def _route_payload(payload: jax.Array, rt: Route) -> jax.Array:
-    """Scatter a per-key payload (values, masks) into the [S, cap] layout
-    of a ``Route`` computed for the same batch — spilled keys (beyond an
-    owner's cap) stay zero.  Shared by the distributed router and the
-    serving tenant router."""
-    nshards, cap = rt.send.shape
-    return jnp.zeros((nshards, cap), payload.dtype).at[rt.owner, rt.rank].set(
-        payload, mode="drop")
+    """Scatter a per-key payload (values, masks) into the
+    [S, cap + spill_cap] layout of a ``Route`` computed for the same batch
+    — primary AND slab slots are populated; dropped keys (compact slabs
+    only) stay zero.  Shared by the distributed router and the serving
+    tenant router."""
+    nshards, width = rt.send.shape
+    return jnp.zeros((nshards, width), payload.dtype).at[
+        rt.owner, _route_col(rt)].set(payload, mode="drop")
 
 
 def _unroute(resp_local: jax.Array, rt: Route, fill=None) -> jax.Array:
-    """Invert a ``Route`` for a [S, cap] response: gather each key's slot
-    back to batch order.  Spilled keys take ``fill`` — by default 0 for
-    integer/bool responses and NaN for floats, so a dropped float payload
-    can never be mistaken for a real 0.0 value."""
+    """Invert a ``Route`` for a [S, cap + spill_cap] response: gather each
+    key's slot (primary or slab) back to batch order.  Dropped keys take
+    ``fill`` — by default 0 for integer/bool responses and NaN for floats,
+    so a dropped float payload can never be mistaken for a real 0.0
+    value."""
     if fill is None:
         fill = jnp.nan if jnp.issubdtype(resp_local.dtype, jnp.floating) else 0
-    gathered = resp_local[rt.owner, jnp.where(rt.kept, rt.rank, 0)]
-    return jnp.where(rt.kept, gathered, jnp.asarray(fill, resp_local.dtype))
+    gathered = resp_local[rt.owner, jnp.where(rt.served, _route_col(rt), 0)]
+    return jnp.where(rt.served, gathered,
+                     jnp.asarray(fill, resp_local.dtype))
 
 
 def shard_of(keys: jax.Array, nshards: int,
@@ -214,22 +292,35 @@ def _grid_return(resp: jax.Array, axis: str, s: int, t: int, cap: int):
 def routed_stack_lookup(d: dhash.DHashState, keys: jax.Array,
                         tenant: jax.Array, axis: str,
                         owner_hfn: hashing.HashFn,
-                        cap_factor: float = 2.0):
+                        cap_factor: float = 2.0,
+                        spill_slack: float | None = None):
     """Lookup a [Q] batch against the S×T grid.  ``d`` is THIS shard's
     T-table tenant stack; call inside shard_map.  Returns
-    (found[Q], vals[Q], overflow[S·T]) — ``overflow`` is this shard's exact
-    per-owner spill count (keys past ``cap = ceil(c·Q/(S·T))``, reported
-    not silently dropped; spilled keys come back not-found)."""
+    (found[Q], vals[Q], overflow[S·T]).
+
+    Keys past ``cap = ceil(c·Q/(S·T))`` ride the spill slab — extra
+    columns of the SAME buffer through the SAME one all_to_all pair — so
+    with the default overflow-proof slab (``spill_slack=None``) every key
+    is served even under 100% skew.  A slab column lives only in its
+    owner's row ``shard·T + tenant``, so the exchange delivers it to the
+    right shard with no extra machinery.  ``overflow`` stays the exact
+    per-owner spill telemetry (slab pressure, feeds the cap controller);
+    under a compact ``spill_slack`` the slab can run out, and only then do
+    keys come back not-found (counted in ``Route.dropped``, never silently
+    zeroed)."""
     s = _axis_size(axis)
     t = dhash.stack_size(d)
     q = keys.shape[0]
     cap = route_cap(cap_factor, q, s * t)
-    rt = _route(keys, grid_owner(keys, tenant, s, t, owner_hfn), s * t, cap)
-    qk = _grid_exchange(rt.send, axis, s, t, cap)
-    qm = _grid_exchange(rt.smask, axis, s, t, cap)
+    spill_cap = route_spill_cap(q, cap, spill_slack)
+    rt = _route(keys, grid_owner(keys, tenant, s, t, owner_hfn), s * t, cap,
+                spill_cap)
+    w = rt.send.shape[1]
+    qk = _grid_exchange(rt.send, axis, s, t, w)
+    qm = _grid_exchange(rt.smask, axis, s, t, w)
     f, v = dhash.stack_lookup(d, qk, qm)
-    rf = _grid_return(f, axis, s, t, cap)
-    rv = _grid_return(v, axis, s, t, cap)
+    rf = _grid_return(f, axis, s, t, w)
+    rv = _grid_return(v, axis, s, t, w)
     return (_unroute(rf, rt, fill=False).astype(bool),
             _unroute(rv, rt, fill=0), rt.overflow)
 
@@ -238,24 +329,31 @@ def routed_stack_update(d: dhash.DHashState, keys: jax.Array,
                         vals: jax.Array, mask: jax.Array, tenant: jax.Array,
                         axis: str, owner_hfn: hashing.HashFn,
                         op: Callable = dhash.stack_insert,
-                        cap_factor: float = 2.0):
+                        cap_factor: float = 2.0,
+                        spill_slack: float | None = None):
     """Insert/delete a [Q] batch into the S×T grid (``op`` is
     ``dhash.stack_insert`` or ``dhash.stack_delete``).  Returns
-    (d', ok[Q], overflow[S·T]); spilled keys report ok=False and are
-    counted in ``overflow``.  Call inside shard_map."""
+    (d', ok[Q], overflow[S·T]).  Spilled keys ride the slab columns of the
+    same buffer / same all_to_all pair (see ``routed_stack_lookup``): with
+    the default overflow-proof slab every key is applied; under a compact
+    ``spill_slack`` only slab-exhausted keys report ok=False.  Call inside
+    shard_map."""
     s = _axis_size(axis)
     t = dhash.stack_size(d)
     q = keys.shape[0]
     cap = route_cap(cap_factor, q, s * t)
-    rt = _route(keys, grid_owner(keys, tenant, s, t, owner_hfn), s * t, cap)
-    qk = _grid_exchange(rt.send, axis, s, t, cap)
-    qm = _grid_exchange(_route_payload(mask, rt) & rt.smask, axis, s, t, cap)
+    spill_cap = route_spill_cap(q, cap, spill_slack)
+    rt = _route(keys, grid_owner(keys, tenant, s, t, owner_hfn), s * t, cap,
+                spill_cap)
+    w = rt.send.shape[1]
+    qk = _grid_exchange(rt.send, axis, s, t, w)
+    qm = _grid_exchange(_route_payload(mask, rt) & rt.smask, axis, s, t, w)
     if op is dhash.stack_insert:
-        qv = _grid_exchange(_route_payload(vals, rt), axis, s, t, cap)
+        qv = _grid_exchange(_route_payload(vals, rt), axis, s, t, w)
         d, ok = op(d, qk, qv, qm)
     else:
         d, ok = op(d, qk, qm)
-    rok = _grid_return(ok, axis, s, t, cap)
+    rok = _grid_return(ok, axis, s, t, w)
     return d, _unroute(rok, rt, fill=False).astype(bool), rt.overflow
 
 

@@ -290,3 +290,140 @@ def rehash_wanted(live_load, tomb_load, armed, rebuilding, *,
     want = armed & hot & ~rebuilding
     rearm = live_load <= grow_load / expand_headroom
     return want, (armed | rearm) & ~want
+
+
+class RouteCapController:
+    """Spill-feedback adaptive routing cap (host-side, poll boundaries).
+
+    The watermark+hysteresis idiom above applied to the tenant router:
+    the controller watches the cumulative ``route_spill`` / ``route_drop``
+    counters (``kvcache.table_load(with_spill=True)``), maintains an EWMA
+    of **slab occupancy** — spill per poll over the slab width the current
+    cap implies at the reference batch size ``q_ref`` — and walks
+    ``cap_factor`` along a geometric ladder:
+
+    * occupancy EWMA above ``occ_hi``: grow the cap by ``step`` (traffic
+      keeps leaning on the slab; a wider primary absorbs it);
+    * any dropped keys: grow IMMEDIATELY (a compact slab overflowed — the
+      one signal that must never wait out a cooldown);
+    * occupancy EWMA below ``occ_lo``: shrink the cap by ``step`` (the
+      slab sits idle; narrower buffers win back the wire-bytes ratio).
+
+    No-flap by construction: ``occ_hi / occ_lo`` (default 0.85 / 0.15 ≈
+    5.7) exceeds the ladder ratio ``step`` (1.5), so a single move lands
+    the post-move occupancy strictly inside the band — the opposite
+    watermark cannot fire on the next poll; a watermark additionally only
+    fires after the EWMA holds beyond it for ``cooldown`` CONSECUTIVE
+    polls (persistence — one spiky poll of a bursty serving trace never
+    moves the cap), and ``cooldown`` quiet polls must pass after any move
+    (drops bypass both, never the ladder).  Ladder values are the finite
+    set
+    ``cap0 · step^k`` clamped to [cap_min, cap_max], and ``cap_factor``
+    is static table metadata, so the jitted steps it parameterizes
+    recompile a bounded number of times over any run.
+    """
+
+    def __init__(self, *, n_shards: int, q_ref: int,
+                 cap_factor: float = 2.0, spill_slack: float = 1.0,
+                 occ_hi: float = 0.85, occ_lo: float = 0.15,
+                 ewma: float = 0.5, step: float = 1.5,
+                 cap_min: float = 1.0, cap_max: float | None = None,
+                 cooldown: int = 2):
+        if not 0.0 < occ_lo < occ_hi <= 1.0:
+            raise ValueError(f"need 0 < occ_lo < occ_hi <= 1, "
+                             f"got ({occ_lo}, {occ_hi})")
+        if step <= 1.0:
+            raise ValueError(f"ladder step must exceed 1, got {step}")
+        if occ_hi / occ_lo <= step:
+            raise ValueError("watermark band occ_hi/occ_lo must exceed the "
+                             "ladder step or moves could flap")
+        self.n_shards = int(n_shards)
+        self.q_ref = int(q_ref)
+        self.cap_factor = float(cap_factor)
+        self.spill_slack = float(spill_slack)
+        self.occ_hi, self.occ_lo = float(occ_hi), float(occ_lo)
+        self.ewma_alpha = float(ewma)
+        self.step = float(step)
+        self.cap_min = float(cap_min)
+        # cap_factor = S means cap = Q: the overflow-proof full width
+        self.cap_max = float(n_shards if cap_max is None else cap_max)
+        self.cooldown = int(cooldown)
+        self.occ = 0.0              # slab-occupancy EWMA (reseeds on a move)
+        self.grows = self.shrinks = self.flaps = 0
+        self._seeded = False
+        self._spill_prev = self._drop_prev = 0
+        self._since_move = self.cooldown + 1    # free to move at first poll
+        self._last_dir = 0
+        self._hi_streak = self._lo_streak = 0   # consecutive beyond-watermark
+
+    def _slab_width(self) -> int:
+        from repro.core.distributed import route_cap, route_spill_cap
+        cap = route_cap(self.cap_factor, self.q_ref, self.n_shards)
+        return route_spill_cap(self.q_ref, cap, self.spill_slack)
+
+    def update(self, spill_total, dropped_total=0) -> float:
+        """Feed one poll of the CUMULATIVE spill/drop counters (scalars —
+        sum the per-tenant vectors); returns the cap_factor to run with
+        (a static meta field: apply via ``replace(kv, cap_factor=...)``
+        only when it changed)."""
+        spill_total, dropped_total = int(spill_total), int(dropped_total)
+        d_spill = spill_total - self._spill_prev
+        d_drop = dropped_total - self._drop_prev
+        self._spill_prev, self._drop_prev = spill_total, dropped_total
+        occ = d_spill / max(self._slab_width(), 1)
+        a = self.ewma_alpha
+        self.occ = occ if not self._seeded else (1 - a) * self.occ + a * occ
+        self._seeded = True
+        self._since_move += 1
+
+        # Persistence streaks: serving traffic is bursty poll-to-poll (zero
+        # deltas between allocation events, spikes on sequence frees), so a
+        # watermark only fires once the EWMA holds beyond it for `cooldown`
+        # consecutive polls.  One spike never moves the cap; drops do.
+        if self.occ > self.occ_hi:
+            self._hi_streak += 1
+            self._lo_streak = 0
+        elif self.occ < self.occ_lo:
+            self._lo_streak += 1
+            self._hi_streak = 0
+        else:
+            self._hi_streak = self._lo_streak = 0
+
+        direction = 0
+        if d_drop > 0:
+            direction = +1                       # bypasses cooldown + streak
+        elif self._since_move > self.cooldown:
+            if self._hi_streak >= max(self.cooldown, 1):
+                direction = +1
+            elif self._lo_streak >= max(self.cooldown, 1):
+                direction = -1
+        if direction > 0:
+            new = min(self.cap_factor * self.step, self.cap_max)
+        elif direction < 0:
+            new = max(self.cap_factor / self.step, self.cap_min)
+        else:
+            new = self.cap_factor
+        if new != self.cap_factor:
+            # a flap is a REVERSAL at the first eligible poll after a move
+            # — the no-flap construction promises the post-move occupancy
+            # lands inside the band, so the opposite watermark cannot fire
+            # the moment the cooldown expires.  (A reversal after a long
+            # in-band stretch is a workload change, not a flap.)
+            if direction == -self._last_dir and \
+                    self._since_move <= self.cooldown + 1:
+                self.flaps += 1
+            if direction > 0:
+                self.grows += 1
+            else:
+                self.shrinks += 1
+            self._last_dir = direction
+            self._since_move = 0
+            self._hi_streak = self._lo_streak = 0
+            self._seeded = False   # occupancy is defined by the NEW widths
+            self.cap_factor = new
+        return self.cap_factor
+
+    def in_band(self) -> bool:
+        """Host poll convenience: the occupancy EWMA sits inside the
+        watermark band (converged — no move pending)."""
+        return self.occ_lo <= self.occ <= self.occ_hi

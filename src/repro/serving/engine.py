@@ -51,10 +51,18 @@ class ServeConfig:
     n_tenants: int = 1            # > 1: per-tenant page-table stack
                                   # (tenant = seq_id % n_tenants) with
                                   # INDEPENDENT live rehash epochs
-    cap_factor: float = 2.0       # tenant-router send buffers are
-                                  # [T, ceil(c*N/T)] (<= 0: full width);
-                                  # overflow under skew is exact — a
-                                  # cond-gated full-width retry serves it
+    cap_factor: float = 2.0       # tenant-router cap c: send buffers are
+                                  # [T, ceil(c*N/T) + spill_cap] (<= 0:
+                                  # full width); overflow under skew rides
+                                  # the spill slab in the same single pass
+    spill_slack: float = 1.0      # spill-slab budget (kvcache.make):
+                                  # 1.0 = overflow-proof; < 1 = compact
+                                  # slab, drops counted exactly
+    adaptive_cap: bool = False    # close the loop: a RouteCapController
+                                  # (core.policy) adapts cap_factor off the
+                                  # route_spill/route_drop feedback at poll
+                                  # boundaries, replacing the static value
+                                  # (multi-tenant only)
     prefix_cache: bool = False    # block-prefix reuse + LRU page eviction
                                   # (serving/eviction.py); opt-in — off,
                                   # admission always prefills from scratch
@@ -131,6 +139,8 @@ class ServingEngine:
     finished: dict = field(default_factory=dict)  # seq_id -> list[int]
     rehashes: int = 0
     router_spills: int = 0        # cumulative tenant-router overflow keys
+    router_drops: int = 0         # cumulative keys a compact slab dropped
+    cap_ctl: elastic.RouteCapController | None = None  # adaptive cap loop
     cache_lookups: int = 0        # prefix-cache: blocks probed at admission
     cache_hits: int = 0           # prefix-cache: blocks adopted
     publishes: int = 0            # prefix-cache: blocks published
@@ -142,6 +152,7 @@ class ServingEngine:
                                c.n_kv_heads, c.head_dim,
                                max_blocks=s.max_blocks, dtype=jnp.dtype(c.dtype),
                                n_tenants=s.n_tenants, cap_factor=s.cap_factor,
+                               spill_slack=s.spill_slack,
                                prefix_cache=s.prefix_cache,
                                prefix_backend=s.prefix_backend,
                                prefix_capacity=s.prefix_capacity or None,
@@ -156,10 +167,20 @@ class ServingEngine:
         self._tenant_armed = np.ones((s.n_tenants,), bool)
         if s.n_tenants > 1:
             # one fused poll -> ONE host sync per decode step (live/tomb
-            # loads + router-spill counters + rebuilding flags + epochs)
+            # loads + router spill/drop counters + rebuilding flags +
+            # epochs)
             self._tenant_poll = jax.jit(lambda kv: (
-                *kvcache.table_health(kv), kv.route_spill,
+                *kvcache.table_health(kv), kv.route_spill, kv.route_drop,
                 kv.table.rebuilding, kv.table.epoch))
+            if s.adaptive_cap:
+                # spill-feedback adaptive cap: the controller walks
+                # cap_factor along its geometric ladder off the SAME poll;
+                # q_ref is the worst routed batch the engine issues
+                # (free_sequences routes max_blocks keys per finished seq)
+                self.cap_ctl = elastic.RouteCapController(
+                    n_shards=s.n_tenants,
+                    q_ref=s.max_seqs * s.max_blocks,
+                    cap_factor=s.cap_factor, spill_slack=s.spill_slack)
         else:
             self._single_poll = jax.jit(lambda kv: (
                 *kvcache.table_health(kv), kv.table.rebuilding,
@@ -324,13 +345,24 @@ class ServingEngine:
         epochs swap on-device inside ``kvcache.rehash_step``; no host-side
         finish is needed.  ``rehashes`` counts COMPLETIONS (epoch deltas
         across the stack) — the same semantics as the single-tenant path.
-        The same poll surfaces the router-spill counters
-        (``router_spills``) so skewed tenant traffic blowing the routing
-        cap is observable separately from table load."""
-        loads, tombs, spill, rebuilding, epochs = (
+        The same poll surfaces the router spill/drop counters
+        (``router_spills`` / ``router_drops``) so skewed tenant traffic
+        leaning on the spill slab is observable separately from table
+        load — and, with ``sc.adaptive_cap``, FEEDS the
+        ``RouteCapController``: the controller walks ``cap_factor`` along
+        its watermarked ladder and the new cap (static table metadata) is
+        applied via ``kvcache.replace`` — recompiles are bounded by the
+        ladder's finite value set."""
+        loads, tombs, spill, drop, rebuilding, epochs = (
             np.asarray(x) for x in jax.device_get(self._tenant_poll(self.kv)))
         self.router_spills = int(spill.sum())
+        self.router_drops = int(drop.sum())
         self.rehashes = int((epochs - self._tenant_epochs0).sum())
+        if self.cap_ctl is not None:
+            new_cap = self.cap_ctl.update(self.router_spills,
+                                          self.router_drops)
+            if new_cap != self.kv.cap_factor:
+                self.kv = kvcache.replace(self.kv, cap_factor=new_cap)
         want, self._tenant_armed = elastic.rehash_wanted(
             loads, tombs, self._tenant_armed, rebuilding,
             grow_load=self.sc.rehash_load_factor)

@@ -18,15 +18,22 @@ mapping is isolated per tenant.
 
 **Capped tenant routing**: table ops group a flat [N] key batch by tenant
 through the counting-sort router (``distributed._route``) into a
-``[T, ceil(c·N/T)]`` send buffer (``c = cap_factor``) instead of the
-full-width ``[T, N]`` baseline — T/c x fewer buffer bytes and scatter
+``[T, ceil(c·N/T) + spill_cap]`` send buffer (``c = cap_factor``) instead
+of the full-width ``[T, N]`` baseline — fewer buffer bytes and scatter
 work, and the sort-free router keeps the fused stack op at its single
-1-sort/1-pallas_call budget.  Correctness is unconditional: keys past a
-tenant's cap (zipf skew, adversarial single-tenant batches) are counted
-exactly by the router and served by a ``lax.cond``-gated SECOND pass that
-re-routes only the spill at full width — the balanced common case never
-executes it.  ``PagedKV.route_spill`` accumulates the per-tenant spill
-counts, so "the router overflowed (and the retry paid full width)" is
+1-sort/1-pallas_call budget.  Keys past a tenant's cap (zipf skew,
+adversarial single-tenant batches) ride the **spill slab**: extra columns
+of the SAME buffer, shared across tenants by global spill rank, filled in
+the same single pass — a spilling batch costs exactly one routed op, the
+same as a balanced one (the ``lax.cond``-gated full-width retry this
+replaces is gone).  ``spill_slack`` sizes the slab
+(``distributed.route_spill_cap``): the default 1.0 is overflow-PROOF
+(total spill is bounded by ``N - cap``, so every key is always served); a
+compact slack < 1 trades width for exactly-accounted drops.
+``PagedKV.route_spill`` accumulates the per-tenant spill counts (slab
+pressure — the adaptive cap controller's signal) and
+``PagedKV.route_drop`` the per-tenant keys a compact slab could not carry
+(insert/delete report them ok=False; never a SILENT drop), so both are
 observable and distinct from "the table rejected the insert" (``ok``).
 
 Attention over pages is flash-decoding style: a scan over blocks with a
@@ -42,7 +49,8 @@ import numpy as np
 from jax import lax
 
 from repro.core import buckets, dhash
-from repro.core.distributed import _route, _route_payload, _unroute, route_cap
+from repro.core.distributed import (_route, _route_payload, _unroute,
+                                    route_cap, route_spill_cap)
 from repro.core.struct_utils import pytree_dataclass, replace
 from repro.serving import eviction, prefix_cache
 
@@ -58,7 +66,7 @@ def block_key(seq_id: jax.Array, block_idx: jax.Array) -> jax.Array:
 
 @pytree_dataclass(meta_fields=("layers", "page_size", "n_pages", "kv_heads",
                                "head_dim", "max_blocks", "n_tenants",
-                               "cap_factor", "evict_batch"))
+                               "cap_factor", "spill_slack", "evict_batch"))
 class PagedKV:
     layers: int
     page_size: int
@@ -69,7 +77,12 @@ class PagedKV:
     n_tenants: int               # 1 = single shared page table; T > 1 = a
                                  # dhash stack of per-tenant tables
     cap_factor: float            # tenant-router cap c: send buffers are
-                                 # [T, ceil(c*N/T)]; <= 0 = full width
+                                 # [T, ceil(c*N/T) + spill_cap]; <= 0 = full
+                                 # width (no slab needed)
+    spill_slack: float           # spill-slab budget (route_spill_cap):
+                                 # 1.0 = overflow-proof (default — every key
+                                 # always served); < 1 = compact slab with
+                                 # exactly-counted drops
     evict_batch: int             # max victims per evict-on-pressure pass;
                                  # must cover the worst per-step block
                                  # demand (>= batch size) for alloc_fail==0
@@ -79,8 +92,11 @@ class PagedKV:
     free_stack: jax.Array        # [n_pages] i32
     free_top: jax.Array          # scalar i32
     route_spill: jax.Array       # [T] i32 cumulative router overflow (keys
-                                 # past a tenant's cap, served by the
-                                 # full-width retry pass)
+                                 # past a tenant's cap, served by the spill
+                                 # slab — the cap controller's signal)
+    route_drop: jax.Array        # [T] i32 cumulative keys a compact slab
+                                 # could not carry (0 under the default
+                                 # overflow-proof spill_slack=1.0)
     alloc_fail: jax.Array        # scalar i32: masked allocations that found
                                  # no free page (after eviction, if enabled)
     prefix: eviction.PrefixState | None  # prefix-cache + eviction state
@@ -91,6 +107,7 @@ def make(layers: int, page_size: int, n_pages: int, kv_heads: int,
          head_dim: int, *, max_blocks: int = 4096, dtype=jnp.bfloat16,
          table_chunk: int = 256, seed: int = 3,
          n_tenants: int = 1, cap_factor: float = 2.0,
+         spill_slack: float = 1.0,
          prefix_cache: bool = False, prefix_backend: str = "linear",
          prefix_capacity: int | None = None, prefix_seed: int = 11,
          prefix_fused: bool | None = None, evict_batch: int = 8,
@@ -113,12 +130,14 @@ def make(layers: int, page_size: int, n_pages: int, kv_heads: int,
     return PagedKV(
         layers=layers, page_size=page_size, n_pages=n_pages, kv_heads=kv_heads,
         head_dim=head_dim, max_blocks=max_blocks, n_tenants=n_tenants,
-        cap_factor=cap_factor, evict_batch=evict_batch,
+        cap_factor=cap_factor, spill_slack=spill_slack,
+        evict_batch=evict_batch,
         pool_k=jnp.zeros(shp, dtype), pool_v=jnp.zeros(shp, dtype),
         table=table,
         free_stack=jnp.arange(n_pages, dtype=I32),
         free_top=jnp.asarray(n_pages, I32),
         route_spill=jnp.zeros((n_tenants,), I32),
+        route_drop=jnp.zeros((n_tenants,), I32),
         alloc_fail=jnp.asarray(0, I32),
         prefix=prefix)
 
@@ -129,47 +148,43 @@ def tenant_of(kv: PagedKV, seq_ids: jax.Array) -> jax.Array:
 
 
 # -- tenant-routed table access: group a flat key batch by owning tenant
-# through the counting-sort router into CAPPED [T, ceil(c*N/T)] buffers,
-# run ONE vmapped stack op, scatter results back to batch order.  Keys
-# past a tenant's cap (skewed batches) are exactly counted by the router
-# and served by a lax.cond-gated full-width retry pass — the balanced
-# common case never executes it.  n_tenants == 1 short-circuits to the
-# plain single-table op — the historical layout, zero overhead -----------
+# through the counting-sort router into CAPPED [T, ceil(c*N/T) + spill_cap]
+# buffers, run ONE vmapped stack op, scatter results back to batch order.
+# Keys past a tenant's cap (skewed batches) ride the spill-slab columns of
+# the SAME buffer in the SAME pass — a spilling batch costs one routed op,
+# exactly like a balanced one; there is no second pass.  n_tenants == 1
+# short-circuits to the plain single-table op — the historical layout,
+# zero overhead -----------------------------------------------------------
 
 def _tenant_route(kv: PagedKV, tenant: jax.Array, keys: jax.Array):
-    """Capped first-pass route of a [N] batch by owning tenant."""
-    return _route(keys, tenant, kv.n_tenants,
-                  route_cap(kv.cap_factor, keys.shape[0], kv.n_tenants))
+    """Single-pass two-level route of a [N] batch by owning tenant."""
+    cap = route_cap(kv.cap_factor, keys.shape[0], kv.n_tenants)
+    return _route(keys, tenant, kv.n_tenants, cap,
+                  route_spill_cap(keys.shape[0], cap, kv.spill_slack))
 
 
 def table_lookup(kv: PagedKV, tenant: jax.Array, keys: jax.Array):
     """(found[N], vals[N]) across the tenant stack; ``tenant`` aligns with
-    ``keys``.  Exact under any skew: spilled keys are resolved by the
-    gated full-width retry."""
+    ``keys``.  Exact under any skew with the default overflow-proof slab
+    (``spill_slack=1.0``): spilled keys resolve through the slab columns
+    of the same single op.  Under a compact slab, slab-exhausted keys come
+    back not-found (lookup is read-only, so they are counted in
+    ``route_drop`` by the insert/delete of the same batch, not here)."""
     if kv.n_tenants == 1:
         return dhash.lookup(kv.table, keys)
     rt = _tenant_route(kv, tenant, keys)
     f, v = dhash.stack_lookup(kv.table, rt.send, rt.smask)
-    found = _unroute(f, rt, fill=False).astype(bool)
-    vals = _unroute(v, rt, fill=0)
-
-    def retry(args):
-        found, vals = args
-        full = _route(keys, tenant, kv.n_tenants)        # cap=N, no spill
-        f2, v2 = dhash.stack_lookup(kv.table, full.send, full.smask)
-        return (jnp.where(rt.kept, found,
-                          _unroute(f2, full, fill=False).astype(bool)),
-                jnp.where(rt.kept, vals, _unroute(v2, full, fill=0)))
-
-    return lax.cond(rt.overflow.sum() > 0, retry, lambda a: a, (found, vals))
+    return _unroute(f, rt, fill=False).astype(bool), _unroute(v, rt, fill=0)
 
 
 def table_insert(kv: PagedKV, tenant: jax.Array, keys: jax.Array,
                  vals: jax.Array, mask: jax.Array):
-    """(kv', ok[N]) across the tenant stack.  ``ok=False`` always means the
-    TABLE rejected (or the key was masked out) — router overflow is never
-    a silent drop: the retry pass inserts the spill at full width, and the
-    spill count lands in ``kv.route_spill`` (see ``table_load``)."""
+    """(kv', ok[N]) across the tenant stack.  Spilled keys insert through
+    the slab in the same op; with the default overflow-proof slab
+    ``ok=False`` always means the TABLE rejected (or the key was masked
+    out).  A compact slab's shortfall reports ok=False AND lands in
+    ``kv.route_drop`` — never a silent drop; slab pressure itself
+    accumulates in ``kv.route_spill`` (see ``table_load``)."""
     if kv.n_tenants == 1:
         table, ok = dhash.insert(kv.table, keys, vals, mask)
         return replace(kv, table=table), ok
@@ -177,45 +192,24 @@ def table_insert(kv: PagedKV, tenant: jax.Array, keys: jax.Array,
     table, ok = dhash.stack_insert(kv.table, rt.send, _route_payload(vals, rt),
                                    _route_payload(mask, rt))
     okb = _unroute(ok, rt, fill=False).astype(bool)
-
-    def retry(args):
-        table, okb = args
-        full = _route(keys, tenant, kv.n_tenants)
-        table2, ok2 = dhash.stack_insert(
-            table, full.send, _route_payload(vals, full),
-            _route_payload(mask & ~rt.kept, full))       # ONLY the spill
-        ok2b = _unroute(ok2, full, fill=False).astype(bool) & ~rt.kept
-        return table2, okb | ok2b
-
-    table, okb = lax.cond(rt.overflow.sum() > 0, retry, lambda a: a,
-                          (table, okb))
     return replace(kv, table=table,
-                   route_spill=kv.route_spill + rt.overflow), okb
+                   route_spill=kv.route_spill + rt.overflow,
+                   route_drop=kv.route_drop + rt.dropped), okb
 
 
 def table_delete(kv: PagedKV, tenant: jax.Array, keys: jax.Array,
                  mask: jax.Array):
-    """(kv', ok[N]) across the tenant stack — same capped-route + gated
-    full-width retry contract as ``table_insert``."""
+    """(kv', ok[N]) across the tenant stack — same single-pass spill-slab
+    contract as ``table_insert``."""
     if kv.n_tenants == 1:
         table, ok = dhash.delete(kv.table, keys, mask)
         return replace(kv, table=table), ok
     rt = _tenant_route(kv, tenant, keys)
     table, ok = dhash.stack_delete(kv.table, rt.send, _route_payload(mask, rt))
     okb = _unroute(ok, rt, fill=False).astype(bool)
-
-    def retry(args):
-        table, okb = args
-        full = _route(keys, tenant, kv.n_tenants)
-        table2, ok2 = dhash.stack_delete(
-            table, full.send, _route_payload(mask & ~rt.kept, full))
-        ok2b = _unroute(ok2, full, fill=False).astype(bool) & ~rt.kept
-        return table2, okb | ok2b
-
-    table, okb = lax.cond(rt.overflow.sum() > 0, retry, lambda a: a,
-                          (table, okb))
     return replace(kv, table=table,
-                   route_spill=kv.route_spill + rt.overflow), okb
+                   route_spill=kv.route_spill + rt.overflow,
+                   route_drop=kv.route_drop + rt.dropped), okb
 
 
 def resolve_blocks(kv: PagedKV, seq_ids: jax.Array, n_blocks: int):
@@ -261,7 +255,16 @@ def alloc_pages(kv: PagedKV, seq_ids: jax.Array, block_idx: jax.Array,
     keys = block_key(seq_ids, block_idx)
     tenant = tenant_of(kv, seq_ids)
     present, _ = table_lookup(kv, tenant, keys)
-    want = mask & ~present
+    # drop-robust: a compact spill slab can drop a key from BOTH the
+    # lookup (present=False even if mapped — no double allocation) and the
+    # insert (the new mapping would be lost — no page handed out without a
+    # mapping, no free-stack leak), so router-dropped keys are excluded
+    # from allocation entirely.  The route is identical to table_lookup's
+    # (same keys/tenants/caps), so this costs nothing extra under CSE, and
+    # under the default overflow-proof slab ``served`` is all-True.
+    servable = (_tenant_route(kv, tenant, keys).served
+                if kv.n_tenants > 1 else jnp.ones(keys.shape, bool))
+    want = mask & servable & ~present
     if kv.prefix is not None:
         need = jnp.sum(want.astype(I32))
         kv = _evict_for(kv, need - kv.free_top)
@@ -270,10 +273,11 @@ def alloc_pages(kv: PagedKV, seq_ids: jax.Array, block_idx: jax.Array,
     page = kv.free_stack[jnp.where(can, kv.free_top - 1 - rank, 0)]
     kv, ok = table_insert(kv, tenant, keys, page, can)
     used = jnp.sum((can & ok).astype(I32))
-    fail = jnp.sum((want & ~can).astype(I32))
+    fail = jnp.sum(((mask & ~servable) | (want & ~can) | (can & ~ok))
+                   .astype(I32))
     return replace(kv, free_top=kv.free_top - used,
                    alloc_fail=kv.alloc_fail + fail), \
-        jnp.where(can, page, -1)
+        jnp.where(can & ok, page, -1)
 
 
 def append_token(kv: PagedKV, seq_ids: jax.Array, positions: jax.Array,
@@ -478,11 +482,12 @@ def table_load(kv: PagedKV, *, with_spill: bool = False):
     capacity, so a trigger threshold means one thing regardless of
     tenancy.
 
-    ``with_spill=True`` returns ``(load, route_spill)`` — the cumulative
-    per-tenant router-overflow counters alongside the loads, so a caller
-    polling table health can tell "this tenant's traffic keeps blowing the
-    routing cap (retry passes are firing — raise cap_factor or rebalance
-    tenants)" apart from "this tenant's TABLE is filling up (rehash)"."""
+    ``with_spill=True`` returns ``(load, route_spill, route_drop)`` — the
+    cumulative per-tenant router counters alongside the loads, so a caller
+    polling table health can tell "this tenant's traffic keeps spilling
+    past the routing cap (slab pressure — the ``RouteCapController``'s
+    grow signal)" and "a compact slab actually dropped keys (grow NOW)"
+    apart from "this tenant's TABLE is filling up (rehash)"."""
     if kv.n_tenants == 1:
         cap = buckets.capacity_of(kv.table.old)
         load = buckets.count_live(kv.table.old) / cap
@@ -490,7 +495,7 @@ def table_load(kv: PagedKV, *, with_spill: bool = False):
         peel = jax.tree_util.tree_map(lambda x: x[0], kv.table)
         cap = buckets.capacity_of(peel.old)
         load = jax.vmap(lambda d: buckets.count_live(d.old))(kv.table) / cap
-    return (load, kv.route_spill) if with_spill else load
+    return (load, kv.route_spill, kv.route_drop) if with_spill else load
 
 
 def table_health(kv: PagedKV):

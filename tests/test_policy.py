@@ -458,3 +458,90 @@ def test_adapt_nres_cap():
     assert elastic.adapt_nres_cap(pol, 64, 1 << 20, base=16) == pol.nres_cap_max
     # shrink rebuilds concentrate: never below the descriptor default
     assert elastic.adapt_nres_cap(pol, 4096, 512, base=16) == 16
+
+
+# -- RouteCapController: spill-feedback adaptive routing caps ---------------
+
+
+def _spill_drops_for(cap_factor, q, s, slack, owner_counts):
+    """Host model of one routed batch: (total spill, dropped) at the cap."""
+    from repro.core.distributed import route_cap, route_spill_cap
+    cap = route_cap(cap_factor, q, s)
+    slab = route_spill_cap(q, cap, slack)
+    spill = sum(max(c - cap, 0) for c in owner_counts)
+    return spill, max(spill - slab, 0)
+
+
+def test_route_cap_controller_burst_converges_in_band_without_flapping():
+    """The acceptance loop: an elastic-style burst (sustained hot-tenant
+    skew against a compact slab) drives the controller up the ladder —
+    first on drops, then on slab occupancy — until the occupancy EWMA sits
+    inside the watermark band; it then HOLDS (no flapping), and the
+    post-burst drain walks it back down — still without a flap."""
+    s, q, slack = 8, 1024, 0.5
+    ctl = elastic.RouteCapController(n_shards=s, q_ref=q, cap_factor=2.0,
+                                     spill_slack=slack)
+    # ~88% of traffic on one tenant (an elastic-style noisy neighbour)
+    counts = [900, 24, 20, 20, 20, 20, 10, 10]
+    assert sum(counts) == q
+    spill = drop = 0
+    caps = []
+    for _ in range(40):
+        dsp, ddr = _spill_drops_for(ctl.cap_factor, q, s, slack, counts)
+        spill, drop = spill + dsp, drop + ddr
+        caps.append(ctl.update(spill, drop))
+    assert ctl.in_band(), (ctl.occ, ctl.cap_factor)
+    assert ctl.flaps == 0
+    assert ctl.grows >= 1 and ctl.shrinks == 0
+    # converged: the tail of the burst holds one cap value
+    assert len(set(caps[-10:])) == 1
+    grown = ctl.cap_factor
+    assert grown > 2.0
+    # ...and the cap stays on the geometric ladder
+    k = round(np.log(grown / 2.0) / np.log(1.5))
+    assert grown == pytest.approx(2.0 * 1.5 ** k)
+    # at the converged cap the compact slab serves everything: no drops
+    _, ddr = _spill_drops_for(grown, q, s, slack, counts)
+    assert ddr == 0
+    # drain: balanced traffic, zero spill -> walk back down, still no flap
+    # (a reversal after a long in-band stretch is a workload change)
+    for _ in range(60):
+        ctl.update(spill, drop)
+    assert ctl.cap_factor < grown
+    assert ctl.flaps == 0
+    assert ctl.shrinks >= 1
+
+
+def test_route_cap_controller_drops_grow_immediately():
+    """A compact slab's drop is the one signal that bypasses the cooldown:
+    the very next poll grows the cap."""
+    ctl = elastic.RouteCapController(n_shards=8, q_ref=64, cap_factor=2.0,
+                                     spill_slack=0.25, cooldown=10)
+    before = ctl.cap_factor
+    got = ctl.update(10, 0)       # spill but no drop: cooldown holds...
+    got = ctl.update(20, 4)       # ...a DROP does not wait
+    assert got == before * 1.5
+    assert ctl.grows == 1
+    # repeated drops keep climbing, clamped at the full-width ceiling
+    spill, drops = 20, 4
+    for _ in range(20):
+        spill, drops = spill + 10, drops + 1
+        ctl.update(spill, drops)
+    assert ctl.cap_factor == ctl.cap_max == 8.0
+
+
+def test_route_cap_controller_ladder_is_clamped_and_finite():
+    ctl = elastic.RouteCapController(n_shards=4, q_ref=64, cap_factor=1.0,
+                                     cap_min=1.0, cooldown=0)
+    # idle traffic can never push the cap below cap_min
+    for _ in range(30):
+        ctl.update(0, 0)
+    assert ctl.cap_factor == 1.0
+    assert ctl.shrinks == 0
+    # the watermark band must be wider than the ladder step (no-flap
+    # construction) — a degenerate configuration is rejected outright
+    with pytest.raises(ValueError):
+        elastic.RouteCapController(n_shards=4, q_ref=64,
+                                   occ_hi=0.5, occ_lo=0.4)
+    with pytest.raises(ValueError):
+        elastic.RouteCapController(n_shards=4, q_ref=64, step=0.9)

@@ -73,6 +73,39 @@ def test_route_cap_math():
     assert dd.route_cap(100.0, 8, 2) == 8
 
 
+def test_route_cap_exact_ceil_boundaries():
+    """ceil(c·Q/S) is computed on the full product: the old
+    ``int(c*q)`` idiom truncated the float product BEFORE the
+    ceil-division, understating the cap whenever it carried a fraction."""
+    # 1.1*9 = 9.9 -> ceil 10, then clamped to Q=9 (cap never exceeds Q)
+    assert dd.route_cap(1.1, 9, 1) == 9
+    # 1.25*10/4 = 3.125 -> 4 (old: int(12.5)=12 -> ceil(12/4)=3)
+    assert dd.route_cap(1.25, 10, 4) == 4
+    # 1.5*3/2 = 2.25 -> 3 (old: int(4.5)=4 -> ceil(4/2)=2)
+    assert dd.route_cap(1.5, 3, 2) == 3
+    # exact products are untouched by the fix
+    assert dd.route_cap(2.0, 1024, 8) == 256
+    assert dd.route_cap(2.0, 1024, 64) == 32
+    assert dd.route_cap(2.0, 48, 6) == 16
+    assert dd.route_cap(2.0, 16, 8) == 4
+
+
+def test_route_spill_cap_math():
+    # default (None): the overflow-proof bound Q - cap (total spill over
+    # any batch is <= Q - cap, see the docstring's k-owner argument)
+    assert dd.route_spill_cap(64, 16) == 48
+    assert dd.route_spill_cap(64, 64) == 0        # cap >= Q: nothing spills
+    assert dd.route_spill_cap(64, 100) == 0
+    # slack budget: ceil(slack*Q), clamped to the overflow-proof bound
+    assert dd.route_spill_cap(64, 16, 0.25) == 16
+    assert dd.route_spill_cap(64, 16, 1.0) == 48  # >= 1: overflow-proof
+    assert dd.route_spill_cap(64, 16, 5.0) == 48
+    assert dd.route_spill_cap(64, 16, 0.001) == 1  # ceil, never 0 rounding
+    assert dd.route_spill_cap(64, 16, 0.0) == 0   # <= 0 disables the slab
+    assert dd.route_spill_cap(64, 16, -1.0) == 0
+    assert dd.route_spill_cap(1024, 640, 0.375) == 384
+
+
 @pytest.mark.parametrize("skew", ["uniform", "zipfish", "one_owner"])
 def test_route_matches_stable_reference(skew):
     rng = np.random.default_rng(11)
@@ -209,6 +242,178 @@ def test_capped_stack_lookup_exact_on_kept_keys():
     np.testing.assert_array_equal(found, kept)    # kept ⇒ hit, spilled ⇒ miss
     np.testing.assert_array_equal(vals[kept], np.asarray(keys)[kept] * 5)
     assert int(rt.overflow.sum()) == int((~kept).sum())
+
+
+# -- two-level spill slab ----------------------------------------------------
+
+
+def _ref_slab_route(keys, owner, nshards, cap, spill_cap):
+    """Stable two-level reference in plain NumPy: primary columns by
+    owner rank, slab columns shared across owners by global spill rank
+    (batch order), exact per-owner drop counts past the slab."""
+    keys, owner = np.asarray(keys), np.asarray(owner)
+    send = np.zeros((nshards, cap + spill_cap), keys.dtype)
+    smask = np.zeros((nshards, cap + spill_cap), bool)
+    served = np.zeros(keys.shape[0], bool)
+    slab_owner = np.full(spill_cap, -1, np.int64)
+    fill = np.zeros(nshards, np.int64)
+    dropped = np.zeros(nshards, np.int64)
+    nspill = 0
+    for i in range(keys.shape[0]):
+        o = int(owner[i])
+        r = fill[o]
+        fill[o] += 1
+        if r < cap:
+            send[o, r] = keys[i]
+            smask[o, r] = True
+            served[i] = True
+        else:
+            j = nspill
+            nspill += 1
+            if j < spill_cap:
+                send[o, cap + j] = keys[i]
+                smask[o, cap + j] = True
+                slab_owner[j] = o
+                served[i] = True
+            else:
+                dropped[o] += 1
+    return send, smask, served, slab_owner, dropped
+
+
+def _owner_batch(skew, rng, q, s):
+    if skew == "uniform":
+        owner = rng.integers(0, s, q)
+    elif skew == "zipfish":
+        owner = np.minimum(rng.zipf(1.5, q) - 1, s - 1)
+    elif skew == "one_owner":
+        owner = np.full(q, s - 1)
+    else:                                          # all_spill: cap=1 regime
+        owner = np.repeat(np.arange(s), q // s)
+    return jnp.asarray(owner.astype(np.int32))
+
+
+@pytest.mark.parametrize("skew", ["uniform", "zipfish", "one_owner",
+                                  "all_spill"])
+def test_slab_route_matches_reference(skew):
+    rng = np.random.default_rng(17)
+    q, s = 96, 8
+    keys = jnp.asarray(rng.choice(10_000, q, replace=False).astype(np.int32))
+    owner = _owner_batch(skew, rng, q, s)
+    cap = 1 if skew == "all_spill" else dd.route_cap(1.0, q, s)
+    for spill_cap in (dd.route_spill_cap(q, cap),          # overflow-proof
+                      dd.route_spill_cap(q, cap, 0.1),     # compact: drops
+                      0):                                   # slab disabled
+        rt = dd._route(keys, owner, s, cap, spill_cap)
+        send, smask, served, slab_owner, dropped = _ref_slab_route(
+            np.asarray(keys), np.asarray(owner), s, cap, spill_cap)
+        assert rt.send.shape == (s, cap + spill_cap)
+        np.testing.assert_array_equal(np.asarray(rt.send), send)
+        np.testing.assert_array_equal(np.asarray(rt.smask), smask)
+        np.testing.assert_array_equal(np.asarray(rt.served), served)
+        np.testing.assert_array_equal(np.asarray(rt.slab_owner), slab_owner)
+        np.testing.assert_array_equal(np.asarray(rt.dropped), dropped)
+        # exact accounting closes: every key is served, spilled-but-slabbed,
+        # or dropped — and overflow still counts ALL spill (slab + dropped)
+        hist = np.bincount(np.asarray(owner), minlength=s)
+        np.testing.assert_array_equal(np.asarray(rt.overflow),
+                                      np.maximum(hist - cap, 0))
+        assert int(rt.served.sum()) + int(rt.dropped.sum()) == q
+        assert int(rt.dropped.sum()) == max(
+            int(rt.overflow.sum()) - spill_cap, 0)
+    # the overflow-proof slab NEVER drops, under any skew
+    rt = dd._route(keys, owner, s, cap, dd.route_spill_cap(q, cap))
+    assert bool(np.asarray(rt.served).all())
+    assert int(rt.dropped.sum()) == 0
+
+
+@pytest.mark.parametrize("name", FUSED_BACKENDS)
+@pytest.mark.parametrize("skew", ["uniform", "zipfish", "one_owner",
+                                  "all_spill"])
+def test_slab_route_bit_identical_to_full_width(name, skew):
+    """The acceptance differential: with the overflow-proof slab, a capped
+    route serves EVERY key — lookups and inserts through the slab layout
+    return bit-identical results to full-width routing, on every fused
+    backend, under every skew."""
+    rng = np.random.default_rng(23)
+    q, s = 96, 8
+    st0 = dhash.make_stack(s, name, 512, chunk=64, seed=3, fused=True)
+    keys = jnp.asarray(rng.choice(100_000, q, replace=False).astype(np.int32))
+    owner = _owner_batch(skew, rng, q, s)
+    cap = 1 if skew == "all_spill" else dd.route_cap(1.0, q, s)
+    spill_cap = dd.route_spill_cap(q, cap)
+    ones = jnp.ones(q, bool)
+
+    # insert differential: slab-routed insert vs full-width insert
+    full = dd._route(keys, owner, s)
+    rt = dd._route(keys, owner, s, cap, spill_cap)
+    assert int(rt.dropped.sum()) == 0
+    st_f, ok_f = dhash.stack_insert(st0, full.send, full.send * 5, full.smask)
+    st_r, ok_r = dhash.stack_insert(st0, rt.send, rt.send * 5,
+                                    dd._route_payload(ones, rt) & rt.smask)
+    np.testing.assert_array_equal(
+        np.asarray(dd._unroute(ok_r, rt, fill=False)),
+        np.asarray(dd._unroute(ok_f, full, fill=False)))
+
+    # lookup differential on BOTH resulting tables
+    for st in (st_f, st_r):
+        f_f, v_f = dhash.stack_lookup(st, full.send, full.smask)
+        f_r, v_r = dhash.stack_lookup(st, rt.send, rt.smask)
+        np.testing.assert_array_equal(
+            np.asarray(dd._unroute(f_r, rt, fill=False)),
+            np.asarray(dd._unroute(f_f, full, fill=False)))
+        np.testing.assert_array_equal(
+            np.asarray(dd._unroute(v_r, rt, fill=0)),
+            np.asarray(dd._unroute(v_f, full, fill=0)))
+        found = np.asarray(dd._unroute(f_r, rt, fill=False).astype(bool))
+        assert found.all(), (name, skew)          # every key served and hit
+
+
+def test_slab_compact_drop_accounting_end_to_end():
+    """A compact slab that runs out: dropped keys come back not-found with
+    the unmistakable fill, and ``dropped`` counts them exactly per owner."""
+    rng = np.random.default_rng(29)
+    q, s = 64, 4
+    st = dhash.make_stack(s, "linear", 256, chunk=64, seed=5)
+    keys = jnp.asarray(rng.choice(100_000, q, replace=False).astype(np.int32))
+    owner = jnp.zeros(q, jnp.int32)               # 100% skew
+    full = dd._route(keys, owner, s)
+    st, _ = dhash.stack_insert(st, full.send, full.send * 7, full.smask)
+    cap = dd.route_cap(1.0, q, s)                 # 16: 48 keys spill
+    spill_cap = dd.route_spill_cap(q, cap, 0.25)  # 16: 32 keys dropped
+    rt = dd._route(keys, owner, s, cap, spill_cap)
+    assert int(rt.dropped.sum()) == 32 and int(rt.dropped[0]) == 32
+    f, v = dhash.stack_lookup(st, rt.send, rt.smask)
+    found = np.asarray(dd._unroute(f, rt, fill=False).astype(bool))
+    served = np.asarray(rt.served)
+    assert served.sum() == q - 32
+    np.testing.assert_array_equal(found, served)  # served ⇒ hit, dropped ⇒ miss
+    vals = np.asarray(dd._unroute(v, rt, fill=0))
+    np.testing.assert_array_equal(vals[served], np.asarray(keys)[served] * 7)
+    assert (vals[~served] == 0).all()
+
+
+@pytest.mark.parametrize("name", FUSED_BACKENDS)
+def test_adversarial_slab_routed_budget(name):
+    """The acceptance pin: a 100%-skew adversarial batch routed through the
+    spill-slab layout lowers to exactly 1 sort + 1 pallas_call TOTAL — no
+    cond-gated second pass anywhere, the spilling batch costs the same op
+    as a balanced one."""
+    be = backend.get(name)
+    s, q = 8, 64
+    st = dhash.make_stack(s, name, 256, chunk=64, seed=0, fused=True)
+    keys = jnp.arange(1, q + 1, dtype=jnp.int32)
+    owner = jnp.full(q, 3, jnp.int32)             # every key one owner
+    cap = dd.route_cap(2.0, q, s)
+    spill_cap = dd.route_spill_cap(q, cap)        # overflow-proof
+
+    def routed(st, k, o):
+        rt = dd._route(k, o, s, cap, spill_cap)
+        f, v = jax.vmap(lambda d, kk: be.lookup_fused(d.old, kk))(st, rt.send)
+        return dd._unroute(f & rt.smask, rt, fill=False), rt.dropped
+
+    counts = _count_primitives(jax.make_jaxpr(routed)(st, keys, owner),
+                               ("sort", "pallas_call", "cond"))
+    assert counts == {"sort": 1, "pallas_call": 1, "cond": 0}, (name, counts)
 
 
 def test_grid_owner_flat_ids():

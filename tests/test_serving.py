@@ -264,18 +264,20 @@ def test_multi_tenant_page_tables_independent_rehash():
     assert int(kv.free_top) == 64 - 6
 
 
-def test_capped_router_adversarial_skew_retry_exact():
+def test_capped_router_adversarial_skew_slab_exact():
     """The acceptance adversarial case: EVERY key lands in one tenant
-    (100% skew), so the capped router overflows hard — the gated full-width
-    retry must serve the spill exactly, the spill must be accounted in
-    ``route_spill`` (distinct from table rejections), and the outcome must
-    be bit-identical to a full-width (cap_factor <= 0) run."""
+    (100% skew), so the capped router overflows hard — the spill slab must
+    serve the spill exactly IN THE SAME single pass (no retry exists any
+    more), the spill must be accounted in ``route_spill`` (distinct from
+    table rejections), and the outcome must be bit-identical to a
+    full-width (cap_factor <= 0) run."""
     def run(cap_factor):
         kv = kvcache.make(layers=1, page_size=4, n_pages=64, kv_heads=1,
                           head_dim=8, max_blocks=8, n_tenants=8,
                           cap_factor=cap_factor)
         # 16 sequences, ALL in tenant 3 (seq_id % 8 == 3):
-        # cap = ceil(2*16/8) = 4 slots for 16 keys -> overflow 12
+        # cap = ceil(2*16/8) = 4 slots for 16 keys -> overflow 12, carried
+        # by the overflow-proof slab (spill_slack=1.0 default -> 12 cols)
         sids = jnp.asarray([3 + 8 * i for i in range(16)], jnp.int32)
         blk = jnp.zeros((16,), jnp.int32)
         kv, pages = jax.jit(kvcache.alloc_pages)(kv, sids, blk,
@@ -283,31 +285,75 @@ def test_capped_router_adversarial_skew_retry_exact():
         return kv, sids, blk, np.asarray(pages)
 
     kv, sids, blk, pages = run(cap_factor=2.0)
-    # nothing silently dropped: every seq got a page, all distinct
+    # nothing dropped: every seq got a page, all distinct
     assert (pages >= 0).all()
     assert len(set(pages.tolist())) == 16
-    # overflow path exercised and accounted on exactly the hot tenant
+    # spill exercised and accounted on exactly the hot tenant
     spill = np.asarray(jax.device_get(kv.route_spill))
     assert spill[3] == 12 and (spill[np.arange(8) != 3] == 0).all(), spill
-    load, spill2 = (np.asarray(x) for x in
-                    jax.device_get(kvcache.table_load(kv, with_spill=True)))
+    load, spill2, drop = (np.asarray(x) for x in
+                          jax.device_get(kvcache.table_load(kv,
+                                                            with_spill=True)))
     np.testing.assert_array_equal(spill2, spill)
+    assert (drop == 0).all(), "overflow-proof slab must never drop"
     assert load[3] > 0 and (load[np.arange(8) != 3] == 0).all()
-    # lookup retry is exact: every skewed key resolves to its page
+    # slab lookups are exact: every skewed key resolves to its page
     pg, fnd = kvcache.resolve_blocks_at(kv, sids, blk)
     assert bool(np.asarray(fnd).all())
     np.testing.assert_array_equal(np.asarray(pg), pages)
-    # capped + retry is bit-identical to the overflow-proof full width
+    # capped + slab is bit-identical to the overflow-proof full width
     _, _, _, pages_full = run(cap_factor=0.0)
     np.testing.assert_array_equal(pages, pages_full)
-    # delete retry: freeing routes 16*8 = 128 keys into tenant 3
+    # slab deletes: freeing routes 16*8 = 128 keys into tenant 3
     # (cap 32 -> spill 96); every page must come home
     kv = jax.jit(kvcache.free_sequences, static_argnums=2)(kv, sids, 8)
     assert int(kv.free_top) == 64, "router spill must not leak pages"
     _, fnd2 = kvcache.resolve_blocks_at(kv, sids, blk)
     assert not bool(np.asarray(fnd2).any())
     spill3 = np.asarray(jax.device_get(kv.route_spill))
-    assert spill3[3] > spill[3], "delete retry must also be accounted"
+    assert spill3[3] > spill[3], "slab deletes must also be accounted"
+
+
+def test_capped_router_no_cond_retry_in_jaxpr():
+    """The tentpole's structural half at the kvcache level: a 100%-skew
+    ``table_insert`` lowers with ZERO ``cond`` primitives on the routed
+    path — the spilling batch IS the single pass."""
+    kv = kvcache.make(layers=1, page_size=4, n_pages=64, kv_heads=1,
+                      head_dim=8, max_blocks=8, n_tenants=8)
+    sids = jnp.asarray([3 + 8 * i for i in range(16)], jnp.int32)
+    keys = kvcache.block_key(sids, jnp.zeros((16,), jnp.int32))
+    tenant = kvcache.tenant_of(kv, sids)
+    vals = jnp.arange(16, dtype=jnp.int32)
+    ones = jnp.ones((16,), bool)
+    jaxpr = jax.make_jaxpr(kvcache.table_insert)(kv, tenant, keys, vals, ones)
+    prims = [eq.primitive.name for eq in jaxpr.jaxpr.eqns]
+    assert "cond" not in prims, prims
+
+
+def test_capped_router_compact_slab_drops_exactly():
+    """Opt-in compact slab (spill_slack < 1): keys past primary+slab are
+    dropped with EXACT accounting — ``route_drop`` counts them per tenant,
+    alloc_pages refuses them (no leak, no phantom page), and the free
+    stack stays conserved."""
+    kv = kvcache.make(layers=1, page_size=4, n_pages=64, kv_heads=1,
+                      head_dim=8, max_blocks=8, n_tenants=8,
+                      cap_factor=2.0, spill_slack=0.5)
+    # q=16, cap=4, slab=ceil(0.5*16)=8: tenant 3 gets 16 keys ->
+    # 4 primary + 8 slab = 12 served, 4 dropped
+    sids = jnp.asarray([3 + 8 * i for i in range(16)], jnp.int32)
+    blk = jnp.zeros((16,), jnp.int32)
+    kv, pages = jax.jit(kvcache.alloc_pages)(kv, sids, blk,
+                                             jnp.ones((16,), bool))
+    pages = np.asarray(pages)
+    assert (pages >= 0).sum() == 12 and (pages == -1).sum() == 4
+    assert len(set(pages[pages >= 0].tolist())) == 12
+    _, spill, drop = jax.device_get(kvcache.table_load(kv, with_spill=True))
+    drop = np.asarray(drop)
+    assert drop[3] == 4 and (drop[np.arange(8) != 3] == 0).all(), drop
+    assert np.asarray(spill)[3] == 12
+    # dropped allocations are failures, not silent losses
+    assert int(kv.alloc_fail) == 4
+    assert int(kv.free_top) == 64 - 12, "only served pages leave the stack"
 
 
 def test_multi_tenant_engine_matches_single_tenant(small):
@@ -332,6 +378,53 @@ def test_multi_tenant_engine_matches_single_tenant(small):
         if tenants > 1:
             assert eng.rehashes >= 1, "low trigger must start tenant rehashes"
     assert outs[1] == outs[3], "tenant partition must not change decoding"
+
+
+def test_adaptive_cap_engine_wiring_and_decode_identity(small):
+    """``ServeConfig.adaptive_cap``: the RouteCapController closes the loop
+    inside the engine's tenant poll.  With the overflow-proof slab
+    (spill_slack=1.0) cap moves are semantics-free, so an adaptive run
+    must decode bit-identically to a static full-width run while the
+    controller actually consumes the spill/drop counters and keeps
+    ``kv.cap_factor`` on its geometric ladder.  (No-flap convergence is a
+    property of SUSTAINED traffic — asserted on the burst replay in
+    test_policy — not of this toy trace, whose prefill-burst/quiet-decode
+    alternation legitimately reverses the cap.)"""
+    cfg, params = small
+    outs = {}
+    for adaptive in (False, True):
+        eng = ServingEngine(params, cfg, ServeConfig(
+            max_seqs=4, page_size=8, n_pages=64, max_blocks=8,
+            max_new_tokens=6, n_tenants=8, cap_factor=0.0 if not adaptive
+            else 2.0, adaptive_cap=adaptive, rehash_load_factor=0.9))
+        rng = np.random.default_rng(3)
+        # every request pinned to ONE tenant: sustained adversarial skew
+        sids = [eng.submit(list(rng.integers(1, 255,
+                                             size=rng.integers(3, 10))),
+                           tenant=5)
+                for _ in range(6)]
+        eng.run(max_steps=500)
+        assert len(eng.finished) == 6
+        assert int(eng.kv.free_top) == 64, "pages leaked"
+        outs[adaptive] = [eng.finished[s] for s in sids]
+        if adaptive:
+            ctl = eng.cap_ctl
+            assert ctl is not None
+            # the poll fed the controller the cumulative counters
+            assert eng.router_spills > 0
+            assert ctl._spill_prev == eng.router_spills
+            assert eng.router_drops == 0, "overflow-proof slab cannot drop"
+            # the applied cap IS the controller's, the loop actually
+            # moved it, and every value it took sits on the ladder
+            assert eng.kv.cap_factor == ctl.cap_factor
+            assert ctl.grows + ctl.shrinks > 0, "controller never moved"
+            assert ctl.cap_min <= ctl.cap_factor <= ctl.cap_max
+            ladder = {min(2.0 * 1.5 ** k, ctl.cap_max) for k in range(-8, 9)}
+            assert any(abs(ctl.cap_factor - v) < 1e-9 for v in ladder)
+        else:
+            assert eng.cap_ctl is None
+    assert outs[True] == outs[False], \
+        "adaptive cap moves must not change decoding (overflow-proof slab)"
 
 
 def test_prefix_cache_decode_identity(small):
